@@ -1,0 +1,133 @@
+"""Shared benchmark substrate: a small byte-level LM trained on the
+in-repo real-text corpus (Python stdlib sources), cached to disk, plus
+perplexity evaluation and the quantization drivers."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind, QuantConfig
+from repro.core.quantize_model import quantize_model_sequential
+from repro.data.corpus import load_corpus_text
+from repro.data.loader import TokenStream
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.quant.baselines import quantize_model_baseline
+from repro.train.train_step import StepConfig, init_train_state, make_train_step
+from repro.optim.adamw import AdamWConfig
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "tiny_lm")
+SEQ = 256
+
+
+def bench_arch(d_model=256, n_layers=4) -> ArchConfig:
+    return ArchConfig(
+        name="bench-byte-lm",
+        family="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=2 * d_model,
+        vocab_size=260,
+        head_dim=d_model // 4,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=SEQ * 2,
+    )
+
+
+def corpus_tokens(max_bytes=4 << 20) -> np.ndarray:
+    text = load_corpus_text(max_bytes=max_bytes)
+    return ByteTokenizer().encode(text)
+
+
+def get_trained_lm(steps: int = 400, seed: int = 0, force: bool = False):
+    """Train (or load cached) the benchmark LM. Returns (model, params,
+    train_tokens, heldout_tokens)."""
+    cfg = bench_arch()
+    model = build_model(cfg)
+    toks = corpus_tokens()
+    split = int(len(toks) * 0.9)
+    train_toks, held = toks[:split], toks[split:]
+
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    cache = os.path.join(CACHE_DIR, f"params_s{steps}_{seed}.npz")
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+    if os.path.exists(cache) and not force:
+        data = np.load(cache)
+        leaves = []
+        import ml_dtypes  # noqa: F401
+        flat, treedef = jax.tree.flatten(params_struct)
+        for i, ref in enumerate(flat):
+            a = data[f"leaf_{i}"]
+            if a.dtype != ref.dtype:
+                a = a.view(ref.dtype)
+            leaves.append(jnp.asarray(a))
+        return model, jax.tree.unflatten(treedef, leaves), train_toks, held
+
+    params = model.init(jax.random.PRNGKey(seed))
+    scfg = StepConfig(optimizer=AdamWConfig(lr=1e-3, weight_decay=0.01),
+                      warmup_steps=40, total_steps=steps, remat=False)
+    step = jax.jit(make_train_step(model, scfg), donate_argnums=(0,))
+    state = init_train_state(params, scfg)
+    stream = TokenStream(train_toks, batch=16, seq=SEQ, seed=seed)
+    t0 = time.time()
+    for i in range(steps):
+        state, m = step(state, stream.batch_at(i))
+        if (i + 1) % 100 == 0:
+            print(f"  [train] step {i+1} loss {float(m['loss']):.3f} "
+                  f"({time.time()-t0:.0f}s)")
+    params = state.params
+    flat, _ = jax.tree.flatten(params)
+    np.savez(cache, **{f"leaf_{i}": (np.asarray(a).view(np.uint8)
+                                     if np.asarray(a).dtype.kind not in
+                                     "biufc" else np.asarray(a))
+                       for i, a in enumerate(flat)})
+    return model, params, train_toks, held
+
+
+def perplexity(model, params, tokens: np.ndarray, n_windows: int = 24,
+               seq: int = SEQ) -> float:
+    """exp(mean next-token CE) over held-out windows."""
+    n = min(n_windows, (len(tokens) - 1) // seq)
+    total, count = 0.0, 0
+    lf = jax.jit(lambda p, t, g: model.loss(p, t, g))
+    for i in range(0, n, 4):
+        bs = min(4, n - i)
+        tok = np.stack([tokens[(i + j) * seq:(i + j + 1) * seq]
+                        for j in range(bs)])
+        tgt = np.stack([tokens[(i + j) * seq + 1:(i + j + 1) * seq + 1]
+                        for j in range(bs)])
+        ce = float(lf(params, jnp.asarray(tok), jnp.asarray(tgt)))
+        total += ce * bs * seq
+        count += bs * seq
+    return float(np.exp(total / count))
+
+
+def calib_batch(train_toks: np.ndarray, n_samples: int = 16,
+                seq: int = SEQ, seed: int = 7) -> jnp.ndarray:
+    stream = TokenStream(train_toks, batch=n_samples, seq=seq, seed=seed)
+    return jnp.asarray(stream.batch_at(0)["tokens"])
+
+
+def default_qcfg(**kw) -> QuantConfig:
+    base = dict(group_size=32, n_outlier_groups=1, em_iters=12,
+                calib_tokens=4096)
+    base.update(kw)
+    return QuantConfig(**base)
+
+
+def quantize_ours(model, params, calib, qcfg=None):
+    return quantize_model_sequential(model, params, calib,
+                                     qcfg or default_qcfg())
+
+
+def quantize_baseline(model, params, calib, method: str, qcfg=None):
+    return quantize_model_baseline(model, params, calib,
+                                   qcfg or default_qcfg(), method)

@@ -1,0 +1,30 @@
+"""Quantization wall-time (paper: ~20 min for 7B, ~30 min for 13B).
+
+We measure EM+GPTQ throughput (weights/sec) on the tiny LM and
+extrapolate to 7B with the O(n_weights) + O(C_in^2) Hessian terms."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import calib_batch, get_trained_lm, quantize_ours
+from repro.utils.pytree import tree_count
+
+
+def run(quick: bool = False):
+    model, params, train_toks, _ = get_trained_lm()
+    calib = calib_batch(train_toks)
+    t0 = time.time()
+    quantize_ours(model, params, calib)
+    dt = time.time() - t0
+    n_w = tree_count(params)
+    rate = n_w / dt
+    est_7b = 6.74e9 / rate / 60
+    print(f"  tiny LM ({n_w/1e6:.1f}M params): {dt:.1f}s "
+          f"({rate/1e6:.2f}M w/s) -> naive 7B estimate {est_7b:.0f} min "
+          "(CPU, 1 core; paper: 20 min on GPU)")
+    return [{"name": "quant_time/tiny", "us_per_call": dt * 1e6,
+             "derived": f"{rate/1e6:.2f}Mw_per_s"}]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+prints ``name,us_per_call,derived`` CSV rows.
+
+Each suite runs in its own subprocess by default: XLA's CPU JIT
+exhausts dylib symbol space after several hundred compilations in one
+process ("Failed to materialize symbols"), and suite isolation also
+keeps one flaky suite from poisoning the rest.  ``--in-proc`` runs the
+selected suites inline (used by the subprocesses themselves).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+SUITES = ["table6", "fig3", "table5", "table4", "table9", "table1",
+          "table3", "quant_time"]
+
+
+def run_inline(names, quick):
+    from benchmarks import (
+        fig3_kernels,
+        quant_time,
+        table1_methods,
+        table3_tasks,
+        table4_ablation,
+        table5_ladder,
+        table6_modelsize,
+        table9_outliers,
+    )
+    mods = {
+        "table6": table6_modelsize, "fig3": fig3_kernels,
+        "table5": table5_ladder, "table4": table4_ablation,
+        "table9": table9_outliers, "table1": table1_methods,
+        "table3": table3_tasks, "quant_time": quant_time,
+    }
+    rows = []
+    for name in names:
+        print(f"[bench] {name}", file=sys.stderr)
+        try:
+            rows.extend(mods[name].run(quick=quick))
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rows.append({"name": f"{name}/ERROR", "us_per_call": 0,
+                         "derived": str(e)[:80]})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list from: " + ",".join(SUITES))
+    ap.add_argument("--in-proc", action="store_true")
+    args = ap.parse_args()
+
+    names = (args.only.split(",") if args.only else SUITES)
+    names = [n for n in names if n in SUITES]
+
+    if args.in_proc:
+        rows = run_inline(names, args.quick)
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        return
+
+    lines = []
+    for name in names:
+        cmd = [sys.executable, "-m", "benchmarks.run", "--only", name,
+               "--in-proc"] + (["--quick"] if args.quick else [])
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           env=dict(os.environ))
+        sys.stderr.write(r.stderr)
+        got_header = False
+        for line in r.stdout.splitlines():
+            print(line, flush=True) if False else None
+            if got_header and line.strip():
+                lines.append(line)
+            if line.startswith("name,us_per_call"):
+                got_header = True
+            elif not got_header:
+                print(line)   # suite's human-readable table
+        if r.returncode != 0:
+            lines.append(f"{name}/SUBPROCESS_FAIL,0,rc={r.returncode}")
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

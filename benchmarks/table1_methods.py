@@ -1,0 +1,55 @@
+"""Table 1/2 analogue: held-out perplexity of the tiny byte-LM under
+each quantization method at matched bit budgets.
+
+Paper claim reproduced: at the W2A4 budget every RTN-family baseline
+degrades sharply while W(1+1)A(1x4) stays close to FP16; BiLLM-style
+binarization collapses once activations are also quantized."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (
+    calib_batch,
+    get_trained_lm,
+    perplexity,
+    quantize_baseline,
+    quantize_ours,
+)
+
+METHODS = [
+    ("fp16", None),
+    ("rtn-w4a4", "rtn-w4a4"),
+    ("atom-w4a4", "atom-w4a4"),
+    ("rtn-w2a4", "rtn-w2a4"),
+    ("gptq-w2a4", "gptq-w2a4"),
+    ("quarot-w2a4", "quarot-w2a4"),
+    ("atom-w2a4", "atom-w2a4"),
+    ("billm-w(1+1)a16", "billm-a16"),
+    ("billm-w(1+1)a4", "billm-a4"),
+    ("ours-w(1+1)a(1x4)", "ours"),
+]
+
+
+def run(quick: bool = False):
+    model, params, train_toks, held = get_trained_lm()
+    calib = calib_batch(train_toks)
+    rows = []
+    methods = METHODS if not quick else METHODS[:2] + METHODS[-1:]
+    for name, method in methods:
+        t0 = time.time()
+        if method is None:
+            qp = params
+        elif method == "ours":
+            qp = quantize_ours(model, params, calib)
+        else:
+            qp = quantize_baseline(model, params, calib, method)
+        ppl = perplexity(model, qp, held)
+        dt = time.time() - t0
+        rows.append({"name": f"table1/{name}", "us_per_call": dt * 1e6,
+                     "derived": f"ppl={ppl:.3f}"})
+        print(f"  {name:22s} ppl {ppl:10.3f}  ({dt:.0f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Table 4 analogue: 2x2 grid {minimum-distance EM} x {fine-grained
+group} — both together must dominate."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (
+    calib_batch,
+    default_qcfg,
+    get_trained_lm,
+    perplexity,
+    quantize_ours,
+)
+
+GRID = [
+    ("no-em_no-fine",  dict(use_em=False, use_fine_grained=False)),
+    ("em_no-fine",     dict(use_em=True, use_fine_grained=False)),
+    ("no-em_fine",     dict(use_em=False, use_fine_grained=True)),
+    ("em_fine",        dict(use_em=True, use_fine_grained=True)),
+]
+
+
+def run(quick: bool = False):
+    model, params, train_toks, held = get_trained_lm()
+    calib = calib_batch(train_toks)
+    rows = []
+    for label, overrides in (GRID if not quick else GRID[-1:]):
+        t0 = time.time()
+        qp = quantize_ours(model, params, calib, default_qcfg(**overrides))
+        ppl = perplexity(model, qp, held)
+        dt = time.time() - t0
+        rows.append({"name": f"table4/{label}", "us_per_call": dt * 1e6,
+                     "derived": f"ppl={ppl:.3f}"})
+        print(f"  {label:16s} ppl {ppl:10.3f}  ({dt:.0f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Table 5 analogue: the cumulative component ladder.
+
+W1A4-GPTQ -> +outliers -> +minimum-distance (EM) -> +fine-grained group
+-> +Hessian metric -> +A(1x4) balancing must be monotone-improving
+(the paper's central ablation)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (
+    calib_batch,
+    default_qcfg,
+    get_trained_lm,
+    perplexity,
+    quantize_ours,
+)
+
+LADDER = [
+    # (label, QuantConfig overrides)
+    ("w1a4-gptq",            dict(use_fine_grained=False, use_em=False,
+                                  use_hessian_metric=False,
+                                  use_act_balance=False,
+                                  n_outlier_groups=0)),
+    ("+outliers-int8",       dict(use_fine_grained=False, use_em=False,
+                                  use_hessian_metric=False,
+                                  use_act_balance=False)),
+    ("+min-dist-em",         dict(use_fine_grained=False,
+                                  use_hessian_metric=False,
+                                  use_act_balance=False)),
+    ("+fine-grained-w(1+1)", dict(use_hessian_metric=False,
+                                  use_act_balance=False)),
+    ("+hessian-metric",      dict(use_act_balance=False)),
+    ("+a(1x4)-balancing",    dict()),
+]
+
+
+def run(quick: bool = False):
+    model, params, train_toks, held = get_trained_lm()
+    calib = calib_batch(train_toks)
+    rows = []
+    steps = LADDER if not quick else LADDER[::len(LADDER) - 1]
+    for label, overrides in steps:
+        t0 = time.time()
+        qp = quantize_ours(model, params, calib, default_qcfg(**overrides))
+        ppl = perplexity(model, qp, held)
+        dt = time.time() - t0
+        rows.append({"name": f"table5/{label}", "us_per_call": dt * 1e6,
+                     "derived": f"ppl={ppl:.3f}"})
+        print(f"  {label:24s} ppl {ppl:10.3f}  ({dt:.0f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

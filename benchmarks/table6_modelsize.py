@@ -1,0 +1,72 @@
+"""Table 6 analogue: packed model size for the LLaMA family + all 10
+assigned archs (exact byte accounting of the W(1+1)A(1x4) artifact:
+2 bits/element + fp16 centers per (row, group) + INT8 outlier block +
+fp16 residual layers), plus the measured size of the quantized tiny LM.
+Paper claims >5x compression at group 128; we reproduce the accounting.
+"""
+from __future__ import annotations
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import ASSIGNED_ARCHS, get_arch
+
+LLAMA_FAMILY = {
+    "llama-7b": 6.74e9, "llama-13b": 13.0e9,
+    "llama-30b": 32.5e9, "llama-65b": 65.2e9,
+}
+
+
+def packed_bytes_for(n_quantizable: float, n_residual: float,
+                     qcfg: QuantConfig) -> float:
+    bits = qcfg.storage_bits_per_weight()      # 2 + centers overhead
+    # outlier fraction stored at 8 bit instead
+    frac_out = qcfg.n_outlier_groups * qcfg.group_size / 4096.0
+    per_w = (1 - frac_out) * bits + frac_out * 8
+    return n_quantizable * per_w / 8 + n_residual * 2
+
+
+def run(quick: bool = False):
+    qcfg = QuantConfig()  # paper setting: group 128, 1 outlier group
+    rows = []
+    print("  LLaMA family (analytic, ~93% of params in FC layers):")
+    for name, n in LLAMA_FAMILY.items():
+        nq = 0.93 * n
+        fp16 = n * 2
+        ours = packed_bytes_for(nq, n - nq, qcfg)
+        ratio = fp16 / ours
+        rows.append({"name": f"table6/{name}", "us_per_call": 0,
+                     "derived": f"fp16={fp16/2**30:.2f}GiB,"
+                                f"ours={ours/2**30:.2f}GiB,x{ratio:.2f}"})
+        print(f"    {name:10s} fp16 {fp16/2**30:7.2f}GiB -> "
+              f"ours {ours/2**30:6.2f}GiB  ({ratio:.2f}x)")
+    print("  assigned archs (analytic):")
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        n = cfg.param_count()
+        emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        nq = max(n - emb, 0) * 0.97
+        fp16 = n * 2
+        ours = packed_bytes_for(nq, n - nq, qcfg)
+        rows.append({"name": f"table6/{arch}", "us_per_call": 0,
+                     "derived": f"x{fp16/ours:.2f}"})
+        print(f"    {arch:24s} {fp16/2**30:8.2f}GiB -> {ours/2**30:8.2f}GiB"
+              f"  ({fp16/ours:.2f}x)")
+
+    # measured on the real quantized tiny LM
+    if not quick:
+        from benchmarks.common import calib_batch, get_trained_lm, quantize_ours
+        from repro.core.quantize_model import model_quantized_bytes
+        model, params, train_toks, _ = get_trained_lm()
+        qp = quantize_ours(model, params, calib_batch(train_toks))
+        qb, fb = model_quantized_bytes(qp)
+        _, fb_all = model_quantized_bytes(params)
+        quantized_leaf_fp16 = fb_all - fb
+        ratio = quantized_leaf_fp16 / max(qb, 1)
+        rows.append({"name": "table6/tiny-lm-measured", "us_per_call": 0,
+                     "derived": f"x{ratio:.2f}@group32"})
+        print(f"    tiny-lm measured: FC leaves {quantized_leaf_fp16/2**20:.2f}MiB"
+              f" -> {qb/2**20:.2f}MiB ({ratio:.2f}x at group 32)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

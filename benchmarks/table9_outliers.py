@@ -1,0 +1,34 @@
+"""Table 9 analogue: perplexity vs number of INT8 outlier groups
+(0 collapses; more outliers help with diminishing returns)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (
+    calib_batch,
+    default_qcfg,
+    get_trained_lm,
+    perplexity,
+    quantize_ours,
+)
+
+
+def run(quick: bool = False):
+    model, params, train_toks, held = get_trained_lm()
+    calib = calib_batch(train_toks)
+    rows = []
+    counts = [0, 1, 2, 3] if not quick else [1]
+    for n in counts:
+        t0 = time.time()
+        qp = quantize_ours(model, params, calib,
+                           default_qcfg(n_outlier_groups=n))
+        ppl = perplexity(model, qp, held)
+        dt = time.time() - t0
+        rows.append({"name": f"table9/outlier-groups-{n}",
+                     "us_per_call": dt * 1e6, "derived": f"ppl={ppl:.3f}"})
+        print(f"  outlier groups {n}: ppl {ppl:10.3f}  ({dt:.0f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,3 @@
+"""repro: JAX framework for W(1+1)A(1x4) fully-binarized LLM PTQ (ACL 2025)."""
+
+__version__ = "1.0.0"

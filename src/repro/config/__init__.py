@@ -1,0 +1,8 @@
+from repro.config.model_config import (
+    ArchConfig,
+    BlockKind,
+    QuantConfig,
+    ShapeConfig,
+    SHAPES,
+)
+from repro.config.registry import get_arch, list_archs, register_arch

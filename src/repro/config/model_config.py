@@ -1,0 +1,196 @@
+"""Typed configuration for every architecture family the framework supports.
+
+One `ArchConfig` describes a full model: a (possibly heterogeneous) stack of
+blocks (attention / MoE / SSM / RG-LRU hybrid), an optional encoder (enc-dec
+audio), and an optional modality frontend stub (audio frames / vision
+patches).  All ten assigned architectures plus the paper's LLaMA targets are
+expressible with this one dataclass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+
+
+class BlockKind(str, enum.Enum):
+    ATTENTION = "attention"       # full softmax attention (GQA/MQA/MHA)
+    LOCAL_ATTENTION = "local"     # sliding-window attention
+    SSM = "ssm"                   # Mamba-2 SSD block (attention-free)
+    RGLRU = "rglru"               # RecurrentGemma RG-LRU block
+
+
+class FFNKind(str, enum.Enum):
+    SWIGLU = "swiglu"
+    GELU = "gelu"                 # plain 2-matrix MLP (whisper)
+    MOE = "moe"
+    NONE = "none"                 # SSM blocks carry their own projections
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    # Snowflake-Arctic-style dense residual MLP running in parallel with
+    # the expert branch (d_ff_dense = 0 disables it).
+    d_ff_dense: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N (per-head SSD state)
+    head_dim: int = 64            # P
+    n_heads: int = 0              # 0 -> derived: d_inner // head_dim
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunked-scan block length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0            # 0 -> d_model
+    conv_width: int = 4
+    window: int = 2048            # local-attention window in the 1:2 pattern
+    block_pattern: tuple[str, ...] = ("rglru", "rglru", "local")
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB: input_specs() provides precomputed embeddings."""
+    kind: str = "none"            # none | audio_frames | vision_patches
+    # audio: n_frames after conv stem; vision: n_image_tokens per sample
+    n_tokens: int = 0
+    feature_dim: int = 0
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False        # qwen2
+    rope_theta: float = 10000.0
+    rmsnorm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    block_kind: BlockKind = BlockKind.ATTENTION
+    ffn_kind: FFNKind = FFNKind.SWIGLU
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # encoder-decoder (whisper): encoder layers share d_model/heads
+    encoder_layers: int = 0
+    encoder_seq: int = 0          # fixed encoder length (audio frames)
+    max_seq_len: int = 8192
+    dtype: str = "bfloat16"
+    # layers with distinct structure repeat with this period (scan unit);
+    # 1 = homogeneous stack.
+    layer_period: int = 1
+    subquadratic: bool = False    # supports long_500k decode
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.block_kind in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION):
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            per_layer += q + kv + o
+        elif self.block_kind == BlockKind.SSM:
+            assert self.ssm is not None
+            di = self.ssm.expand * d
+            nh = self.ssm.n_heads or di // self.ssm.head_dim
+            # z/x/(b,c,dt) projections (B,C shared across heads) + out_proj
+            per_layer += d * (2 * di + 2 * self.ssm.state_dim + nh) + di * d
+        if self.rglru is not None and self.block_kind == BlockKind.RGLRU:
+            pass  # handled in mixed stacks below
+        if self.ffn_kind == FFNKind.SWIGLU:
+            per_layer += 3 * d * ff
+        elif self.ffn_kind == FFNKind.GELU:
+            per_layer += 2 * d * ff
+        elif self.ffn_kind == FFNKind.MOE:
+            assert self.moe is not None
+            per_layer += 3 * d * ff * self.moe.num_experts + d * self.moe.num_experts
+            if self.moe.d_ff_dense:
+                per_layer += 3 * d * self.moe.d_ff_dense
+        n = emb + self.n_layers * per_layer
+        if self.encoder_layers:
+            enc = self.encoder_layers * (4 * d * d + 2 * d * self.d_ff)
+            n += enc + self.n_layers * 4 * d * d  # cross-attention in decoder
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.ffn_kind != FFNKind.MOE:
+            return self.param_count()
+        assert self.moe is not None
+        d, ff = self.d_model, self.d_ff
+        dense_total = self.param_count()
+        all_exp = 3 * d * ff * self.moe.num_experts * self.n_layers
+        act_exp = 3 * d * ff * self.moe.top_k * self.n_layers
+        return dense_total - all_exp + act_exp
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """The paper's W(1+1)A(1x4) configuration (Section 3 + Algorithm 1)."""
+
+    group_size: int = 128            # B: channel-wise group (input channels)
+    n_outlier_groups: int = 1        # last groups after reorder, INT8
+    act_bits: int = 4                # RTN bits before 1x4 decomposition
+    act_outlier_bits: int = 8
+    weight_outlier_bits: int = 8
+    em_iters: int = 15               # EM steps per block
+    hessian_damp: float = 0.01       # lambda (relative to mean diag)
+    hessian_power: int = 1           # exponent on 1/diag(H^-1) in Eq. (9)
+    use_hessian_metric: bool = True  # ablation: Hessian-weighted distance
+    use_fine_grained: bool = True    # ablation: the (1+1) group bit
+    use_em: bool = True              # ablation: minimum-distance quantization
+    use_act_balance: bool = True     # ablation: scaling-factor balancing
+    use_gptq: bool = True            # ablation: block compensation
+    kv_bits: int = 4
+    calib_tokens: int = 128 * 2048   # paper: 128 samples x 2048
+    seed: int = 0
+
+    def storage_bits_per_weight(self) -> float:
+        """2 bits/element + per-group centers overhead (Table 6 accounting)."""
+        b = self.group_size
+        # q bit + group bit + 4 fp16 centers per (row, group)
+        return 2.0 + (4 * 16) / b

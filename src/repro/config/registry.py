@@ -1,0 +1,46 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from repro.config.model_config import ArchConfig
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+
+ASSIGNED_ARCHS = (
+    "mistral-large-123b",
+    "minitron-4b",
+    "qwen2-1.5b",
+    "phi3-medium-14b",
+    "llava-next-34b",
+    "arctic-480b",
+    "llama4-scout-17b-a16e",
+    "mamba2-2.7b",
+    "whisper-base",
+    "recurrentgemma-9b",
+)
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ArchConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def _ensure_loaded() -> None:
+    # configs modules self-register on import
+    importlib.import_module("repro.configs")
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,15 @@
+"""Architecture configs. Importing this package registers all archs."""
+from repro.configs import (  # noqa: F401
+    mistral_large_123b,
+    minitron_4b,
+    qwen2_1_5b,
+    phi3_medium_14b,
+    llava_next_34b,
+    arctic_480b,
+    llama4_scout_17b_a16e,
+    mamba2_2_7b,
+    whisper_base,
+    recurrentgemma_9b,
+    llama1_7b,
+)
+from repro.configs.tiny import tiny_variant  # noqa: F401

@@ -1,0 +1,26 @@
+"""Snowflake Arctic (480B) — 128-expert top-2 MoE with dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind, MoEConfig
+from repro.config.registry import register_arch
+
+
+@register_arch("arctic-480b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=4864,
+        vocab_size=32000,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.MOE,
+        moe=MoEConfig(num_experts=128, top_k=2, d_ff_dense=4864),
+        max_seq_len=4096,
+        subquadratic=False,
+    )

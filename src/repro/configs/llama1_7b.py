@@ -1,0 +1,22 @@
+"""LLaMA-1-7B — the paper's primary target model.  [arXiv:2302.13971]"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.config.registry import register_arch
+
+
+@register_arch("llama1-7b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama1-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=11008,
+        vocab_size=32000,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=2048,
+        subquadratic=False,
+    )

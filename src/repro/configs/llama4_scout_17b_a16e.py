@@ -1,0 +1,28 @@
+"""Llama-4-Scout-17B-16E — 16-expert top-1 MoE (+ shared expert),
+early-fusion multimodal (text path only here).
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind, MoEConfig
+from repro.config.registry import register_arch
+
+
+@register_arch("llama4-scout-17b-a16e")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.MOE,
+        # shared expert realized as the dense-residual branch
+        moe=MoEConfig(num_experts=16, top_k=1, d_ff_dense=8192),
+        max_seq_len=131072,
+        subquadratic=False,
+    )

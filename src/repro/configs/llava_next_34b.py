@@ -1,0 +1,34 @@
+"""LLaVA-NeXT-34B — VLM; transformer backbone only, anyres-tiled vision
+patches arrive as a precomputed-embedding STUB via input_specs().
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.config.model_config import (
+    ArchConfig,
+    BlockKind,
+    FFNKind,
+    FrontendConfig,
+)
+from repro.config.registry import register_arch
+
+
+@register_arch("llava-next-34b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-34b",
+        family="vlm",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        # anyres tiling: base 576 patches + 4 tiles x 576 = 2880 image tokens
+        frontend=FrontendConfig(kind="vision_patches", n_tokens=2880,
+                                feature_dim=7168),
+        max_seq_len=32768,
+        subquadratic=False,
+    )

@@ -1,0 +1,26 @@
+"""Mamba2-2.7B — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]
+"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind, SSMConfig
+from repro.config.registry import register_arch
+
+
+@register_arch("mamba2-2.7b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        n_layers=64,
+        d_model=2560,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,
+        vocab_size=50280,
+        block_kind=BlockKind.SSM,
+        ffn_kind=FFNKind.NONE,
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4,
+                      chunk=256),
+        max_seq_len=1048576,
+        subquadratic=True,
+    )

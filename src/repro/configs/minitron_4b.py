@@ -1,0 +1,22 @@
+"""Minitron-4B (pruned Nemotron).  [arXiv:2407.14679; hf]"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.config.registry import register_arch
+
+
+@register_arch("minitron-4b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="minitron-4b",
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=9216,
+        vocab_size=256000,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=4096,
+        subquadratic=False,
+    )

@@ -1,0 +1,26 @@
+"""Mistral-Large-Instruct-2407 (123B dense).
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.config.registry import register_arch
+
+
+@register_arch("mistral-large-123b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mistral-large-123b",
+        family="dense",
+        n_layers=88,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=32768,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=131072,
+        subquadratic=False,
+    )

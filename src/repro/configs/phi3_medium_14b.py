@@ -1,0 +1,22 @@
+"""Phi-3-medium (14B) — RoPE, SwiGLU, GQA.  [arXiv:2404.14219; unverified]"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.config.registry import register_arch
+
+
+@register_arch("phi3-medium-14b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=10,
+        d_ff=17920,
+        vocab_size=100352,
+        head_dim=128,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=131072,
+        subquadratic=False,
+    )

@@ -1,0 +1,25 @@
+"""Qwen2-1.5B — GQA with QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.config.registry import register_arch
+
+
+@register_arch("qwen2-1.5b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        head_dim=128,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.SWIGLU,
+        max_seq_len=32768,
+        subquadratic=False,
+    )

@@ -1,0 +1,32 @@
+"""RecurrentGemma-9B — RG-LRU recurrent blocks + local attention, 2:1
+pattern (R, R, A).  [arXiv:2402.19427; unverified]
+"""
+from repro.config.model_config import (
+    ArchConfig,
+    BlockKind,
+    FFNKind,
+    RGLRUConfig,
+)
+from repro.config.registry import register_arch
+
+
+@register_arch("recurrentgemma-9b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        d_ff=12288,
+        vocab_size=256000,
+        head_dim=256,
+        block_kind=BlockKind.RGLRU,
+        ffn_kind=FFNKind.SWIGLU,
+        rglru=RGLRUConfig(lru_width=4096, conv_width=4, window=2048,
+                          block_pattern=("rglru", "rglru", "local")),
+        layer_period=3,
+        max_seq_len=1048576,
+        subquadratic=True,
+    )

@@ -1,0 +1,57 @@
+"""Reduced-config variants for CPU smoke tests: same family/topology,
+tiny widths.  Every assigned arch is smoke-tested through this."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config.model_config import (
+    ArchConfig,
+    FFNKind,
+    FrontendConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+
+
+def tiny_variant(cfg: ArchConfig, *, n_layers: int | None = None) -> ArchConfig:
+    """Scale an ArchConfig down to laptop size, preserving its topology
+    (GQA ratio > 1, MoE with >1 expert, layer period, enc-dec, stub
+    frontend, biases)."""
+    layers = n_layers if n_layers is not None else max(cfg.layer_period * 2, 2)
+    if cfg.layer_period > 1:
+        layers = max(layers, cfg.layer_period)
+    kw: dict = dict(
+        name=cfg.name + "-tiny",
+        n_layers=layers,
+        d_model=64,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        head_dim=16,
+        max_seq_len=512,
+    )
+    if cfg.n_heads:
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = max(1, min(cfg.n_kv_heads, 2))
+    if cfg.moe is not None:
+        # capacity_factor = num_experts -> capacity >= T*k: no token drops,
+        # so teacher-forcing and decode route identically (test determinism)
+        kw["moe"] = MoEConfig(
+            num_experts=4,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_dense=64 if cfg.moe.d_ff_dense else 0,
+            capacity_factor=4.0,
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(state_dim=16, head_dim=16, expand=2,
+                              conv_width=4, chunk=32)
+    if cfg.rglru is not None:
+        kw["rglru"] = RGLRUConfig(lru_width=64, conv_width=4, window=32,
+                                  block_pattern=cfg.rglru.block_pattern)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+        kw["encoder_seq"] = 16
+    if cfg.frontend.kind != "none":
+        kw["frontend"] = FrontendConfig(kind=cfg.frontend.kind, n_tokens=8,
+                                        feature_dim=64)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,35 @@
+"""Whisper-base — encoder-decoder audio transformer; conv frontend is a
+STUB (input_specs() supplies precomputed frame embeddings).
+
+[arXiv:2212.04356; unverified]
+"""
+from repro.config.model_config import (
+    ArchConfig,
+    BlockKind,
+    FFNKind,
+    FrontendConfig,
+)
+from repro.config.registry import register_arch
+
+
+@register_arch("whisper-base")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-base",
+        family="audio",
+        n_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab_size=51865,
+        head_dim=64,
+        block_kind=BlockKind.ATTENTION,
+        ffn_kind=FFNKind.GELU,
+        encoder_layers=6,
+        encoder_seq=1500,
+        frontend=FrontendConfig(kind="audio_frames", n_tokens=1500,
+                                feature_dim=512),
+        max_seq_len=448,
+        subquadratic=False,
+    )

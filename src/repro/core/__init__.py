@@ -1,0 +1,25 @@
+"""The paper's primary contribution: W(1+1)A(1x4) post-training quantization.
+
+- rtn:            Eq. (3) round-to-nearest quantizers
+- packing:        uint32 bit-plane / int4-nibble packing
+- em:             Hessian-weighted EM (1-D 4-means) — Section 3.2
+- act_decompose:  INT4 -> 4xINT1 planes + scaling-factor balancing (App. A)
+- gptq:           Algorithm 1 (reorder, Cholesky, block compensation, outliers)
+- bwa_linear:     the binarized FC layer (ref / bit-plane / kernel paths)
+- kvquant:        INT4 KV cache
+"""
+from repro.core.rtn import rtn_quantize, rtn_dequantize, rtn_fake_quant
+from repro.core.packing import pack_bits_u32, unpack_bits_u32
+from repro.core.em import em_fit, rtn_grid_centers, assign_to_centers
+from repro.core.act_decompose import (
+    quantize_act_int4_planes,
+    balance_plane_scales,
+    dequant_from_planes,
+)
+from repro.core.gptq import QuantizedLinear, quantize_linear
+from repro.core.bwa_linear import (
+    bwa_apply_ref,
+    bwa_apply_planes,
+    dequantize_weight,
+)
+from repro.core.kvquant import kv_quantize, kv_dequantize

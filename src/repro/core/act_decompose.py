@@ -1,0 +1,73 @@
+"""A(1x4) activation binarization — Section 3.1(3) + Appendix A.
+
+The input activation is RTN-quantized to INT4 per token (Eq. 3), then
+decomposed EXACTLY into four binary planes ``b_a = (x_q >> a) & 1`` with
+plane scales ``mu_a = 2^a * mu`` plus a constant shift plane
+(``b_{-1} = 1`` with ``mu_{-1} = -z * mu``):
+
+    x_hat = sum_a mu_a b_a - z mu          (Eq. 4)
+
+Scaling-factor balancing (Appendix A) perturbs the four plane scales
+independently to cancel the average relative dequantization error
+measured on calibration data.  Because our activation quantization is
+dynamic per-token (paper Section 4 setup), the learned correction is a
+dimensionless per-plane multiplier gamma_a applied to mu_a at runtime.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.rtn import rtn_quantize
+
+
+def quantize_act_int4_planes(x: jnp.ndarray, bits: int = 4):
+    """Per-token RTN to INT-``bits``, decomposed into bit planes.
+
+    x [..., C] -> (planes [..., bits, C] int8 in {0,1}, mu [..., 1], z [..., 1])
+    """
+    xq, mu, z = rtn_quantize(x, bits, symmetric=False)
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    planes = (xq[..., None, :] >> shifts[:, None]) & 1
+    return planes.astype(jnp.int8), mu, z
+
+
+def dequant_from_planes(planes, mu, z, gamma=None):
+    """x_hat = sum_a gamma_a 2^a mu b_a - z*mu  (gamma=None -> exact)."""
+    bits = planes.shape[-2]
+    pw = (2.0 ** jnp.arange(bits)).astype(mu.dtype)
+    if gamma is not None:
+        pw = pw * gamma.astype(mu.dtype)
+    weighted = jnp.einsum("...ac,a->...c", planes.astype(mu.dtype), pw)
+    return mu * weighted - mu * z
+
+
+def balance_plane_scales(x_calib: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Appendix A Eq. (11): distribute the dequantization error over the
+    per-plane scales.  Returns gamma [bits] multipliers (>=0).
+
+    mu_a' = mu_a + Avg( (mu_a B_a / (mu X_q)) * E ),  E = X - X_deq
+    expressed relative to mu_a so it transfers to dynamic quantization.
+    """
+    planes, mu, z = quantize_act_int4_planes(x_calib, bits)
+    xhat = dequant_from_planes(planes, mu, z)
+    err = (x_calib - xhat).astype(jnp.float32)
+    xq = jnp.einsum(
+        "...ac,a->...c", planes.astype(jnp.float32),
+        2.0 ** jnp.arange(bits, dtype=jnp.float32))
+    nz = xq > 0
+    gammas = []
+    for a in range(bits):
+        mu_a = (2.0**a) * mu
+        frac = jnp.where(nz, planes[..., a, :] * (2.0**a) / jnp.maximum(xq, 1.0), 0.0)
+        # Avg(frac * E) is an absolute shift of mu_a; normalize by the mean
+        # per-token mu_a to make it a multiplier.
+        shift = jnp.sum(frac * err) / jnp.maximum(jnp.sum(nz), 1)
+        mu_a_mean = jnp.mean(mu_a)
+        gammas.append(1.0 + shift / jnp.maximum(mu_a_mean, 1e-12))
+    return jnp.stack(gammas).astype(jnp.float32)
+
+
+def fake_quant_act_1x4(x, gamma=None, bits: int = 4):
+    """Quantize + dequantize through the 1x4 plane path (runtime op)."""
+    planes, mu, z = quantize_act_int4_planes(x, bits)
+    return dequant_from_planes(planes, mu, z, gamma).astype(x.dtype)

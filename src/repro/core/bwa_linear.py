@@ -1,0 +1,143 @@
+"""The binarized fully-connected layer — Section 3.1, Eq. (5)–(7).
+
+Three numerically-equivalent execution paths:
+
+- ``bwa_apply_ref``    : dequantize weights to fp, fake-quant activations,
+                         dense matmul.  The ORACLE.
+- ``bwa_apply_planes`` : the paper's restructured compute — INTEGER
+                         bit-plane inner products (the popcount algebra
+                         v/r of Eq. 6–7, realized as int8->int32 matmuls)
+                         with all scales applied in the epilogue, plus an
+                         INT8 integer path for the outlier block.  This is
+                         the pure-jnp model of the Pallas kernels and
+                         validates the binary-decomposition identity.
+- kernels (see repro.kernels.*): packed popcount GEMV / dequant-in-VMEM
+                         GEMM for TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.act_decompose import quantize_act_int4_planes
+from repro.core.gptq import QuantizedLinear
+from repro.core.packing import unpack_bits_u32
+from repro.core.rtn import rtn_quantize
+
+
+def _unpacked_bits(q: QuantizedLinear):
+    qb = unpack_bits_u32(q.q_packed, q.c_norm)
+    mb = unpack_bits_u32(q.m_packed, q.c_norm)
+    return qb, mb
+
+
+def dequantize_weight(q: QuantizedLinear, original_order: bool = False):
+    """Reconstruct W_hat [C_out, C_in] (permuted order by default)."""
+    c_out, g_n, B = q.c_out, q.c_norm // q.group_size, q.group_size
+    qb, mb = _unpacked_bits(q)
+    idx = (2 * mb + qb).astype(jnp.int32).reshape(c_out, g_n, B)
+    w_nrm = jnp.take_along_axis(q.centers, idx, axis=-1).reshape(c_out, q.c_norm)
+    w_out = q.w8.astype(jnp.float32) * q.w8_scale
+    w_hat = jnp.concatenate([w_nrm, w_out], axis=1)
+    if original_order:
+        inv = jnp.argsort(q.perm)
+        w_hat = w_hat[:, inv]
+    return w_hat
+
+
+def _split_acts(q: QuantizedLinear, x: jnp.ndarray):
+    xp = jnp.take(x, q.perm, axis=-1)
+    return xp[..., : q.c_norm], xp[..., q.c_norm:]
+
+
+def _fake_quant_outlier_int8(xo: jnp.ndarray):
+    if xo.shape[-1] == 0:
+        return xo
+    xq, mu, z = rtn_quantize(xo.astype(jnp.float32), 8)
+    return mu * (xq.astype(jnp.float32) - z)
+
+
+def bwa_apply_ref(q: QuantizedLinear, x: jnp.ndarray,
+                  quantize_acts: bool = True) -> jnp.ndarray:
+    """Oracle path: fake-quant activations, dequantized-weight matmul."""
+    from repro.core.act_decompose import fake_quant_act_1x4
+
+    xn, xo = _split_acts(q, x)
+    xn = xn.astype(jnp.float32)
+    xo = xo.astype(jnp.float32)
+    if quantize_acts:
+        xn = fake_quant_act_1x4(xn, q.act_gamma)
+        xo = _fake_quant_outlier_int8(xo)
+    w_hat = dequantize_weight(q)  # permuted order
+    w_n, w_o = w_hat[:, : q.c_norm], w_hat[:, q.c_norm:]
+    y = xn @ w_n.T
+    if q.n_outlier:
+        y = y + xo @ w_o.T
+    if q.bias is not None:
+        y = y + q.bias
+    return y.astype(x.dtype)
+
+
+def bwa_apply_planes(q: QuantizedLinear, x: jnp.ndarray) -> jnp.ndarray:
+    """Binary-decomposition path (Eq. 5–7): integer inner loops only.
+
+    v_{s,a} and r_{s,a} are computed as int8 x int8 -> int32 contractions
+    over {0,1} planes (bit-exact equivalents of popcount over the packed
+    representation), then combined with (mu, gamma, centers) in the fp
+    epilogue.  The outlier block runs an INT8 integer matmul.
+    """
+    xn, xo = _split_acts(q, x)
+    c_out, B = q.c_out, q.group_size
+    g_n = q.c_norm // B
+    bits = int(q.act_gamma.shape[0])
+
+    # --- normal channels: 1x4 plane decomposition ---------------------
+    planes, mu, z = quantize_act_int4_planes(xn.astype(jnp.float32), bits)
+    lead = planes.shape[:-2]
+    planes_g = planes.reshape(*lead, bits, g_n, B)
+
+    qb, mb = _unpacked_bits(q)
+    qb = qb.reshape(c_out, g_n, B)
+    mb = mb.reshape(c_out, g_n, B)
+    qm1 = (qb * mb).astype(jnp.int8)           # q AND m   (s=1)
+    qm0 = (qb * (1 - mb)).astype(jnp.int8)     # q AND ~m  (s=0)
+    m1 = mb.astype(jnp.int8)
+    m0 = (1 - mb).astype(jnp.int8)
+
+    def popc_matmul(wbits):  # [..., a, g, B] x [j, g, B] -> [..., j, g, a]
+        return jnp.einsum(
+            "...agb,jgb->...jga", planes_g, wbits,
+            preferred_element_type=jnp.int32)
+
+    v1, v0 = popc_matmul(qm1), popc_matmul(qm0)
+    r1, r0 = popc_matmul(m1), popc_matmul(m0)
+
+    lo0, hi0 = q.centers[..., 0], q.centers[..., 1]   # [j, g] fine-group 0
+    lo1, hi1 = q.centers[..., 2], q.centers[..., 3]   # fine-group 1
+    pw = (2.0 ** jnp.arange(bits, dtype=jnp.float32)) * q.act_gamma
+
+    def combine(v, r, lo, hi):  # [..., j, g, a], scales [j, g]
+        acc = (hi - lo)[:, :, None] * v.astype(jnp.float32) \
+            + lo[:, :, None] * r.astype(jnp.float32)
+        return jnp.einsum("...jga,a->...j", acc, pw)
+
+    y = combine(v0, r0, lo0, hi0) + combine(v1, r1, lo1, hi1)
+    # per-token scale mu and the shift plane (b_{-1} == 1, mu_{-1} = -z mu):
+    # sum_i w_hat[j,i] * (-z mu) = -z mu * row_sum[j]
+    y = mu * y - (mu * z) * q.row_sum
+
+    # --- outlier channels: INT8 integer matmul -------------------------
+    if q.n_outlier:
+        x8, mu8, z8 = rtn_quantize(xo.astype(jnp.float32), 8)
+        # re-center [0,255] -> [-128,127] so the integer matmul is a true
+        # signed int8 x int8 -> int32 contraction (MXU-native)
+        x8c = (x8 - 128).astype(jnp.int8)
+        acc = jnp.einsum(
+            "...c,jc->...j", x8c, q.w8,
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        w8_rowsum = jnp.sum(q.w8.astype(jnp.int32), axis=1).astype(jnp.float32)
+        y_out = (mu8 * acc - (mu8 * (z8 - 128.0)) * w8_rowsum) * q.w8_scale[:, 0]
+        y = y + y_out
+
+    if q.bias is not None:
+        y = y + q.bias
+    return y.astype(x.dtype)

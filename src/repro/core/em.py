@@ -1,0 +1,82 @@
+"""EM-based minimum-distance quantization (Section 3.2).
+
+For each (output row, channel-wise group) the binary parameterization
+``w_hat(s, q) = alpha_{s} q + beta_{s}`` spans exactly FOUR free values
+(two affine codebooks of two points).  Fitting therefore reduces to a
+1-D weighted k-means with k=4 (k=2 without the fine-grained group bit),
+where the per-element weight is the Hessian importance ``1/diag(H^-1)``
+(Eq. 8/9).  The E-step is a nearest-center assignment (importance scales
+all four distances of an element equally, so it only enters the M-step);
+the M-step is an importance-weighted mean per cluster.
+
+Vectorized over (rows x groups) — the batch dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantile_init(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """init_centers: robust quantile seeding per batch row. w [..., B]."""
+    qs = (jnp.arange(k, dtype=w.dtype) + 0.5) / k
+    c = jnp.quantile(w, qs, axis=-1)          # [k, ...]
+    c = jnp.moveaxis(c, 0, -1)                # [..., k]
+    # break exact ties so argmin is well-defined
+    jitter = jnp.arange(k, dtype=w.dtype) * 1e-12
+    return c + jitter
+
+
+def assign_to_centers(w: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """E-step. w [..., B], centers [..., K] -> assignment [..., B] int32."""
+    d = (w[..., :, None] - centers[..., None, :]) ** 2
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def _m_step(w, h, assign, centers, k):
+    """Importance-weighted per-cluster mean; empty clusters keep old center."""
+    onehot = jax.nn.one_hot(assign, k, dtype=w.dtype)      # [..., B, K]
+    hw = (h * w)[..., :, None] * onehot
+    hsum = h[..., :, None] * onehot
+    num = jnp.sum(hw, axis=-2)                             # [..., K]
+    den = jnp.sum(hsum, axis=-2)
+    new = num / jnp.maximum(den, 1e-12)
+    return jnp.where(den > 1e-12, new, centers)
+
+
+def em_fit(
+    w: jnp.ndarray,
+    importance: jnp.ndarray,
+    k: int = 4,
+    iters: int = 15,
+) -> jnp.ndarray:
+    """Fit k centers per batch row.
+
+    w          [..., B]  weights of one channel-wise group (per row)
+    importance [B] or [..., B]  Hessian importance (1/diag(H^-1)); pass
+               ones for the unweighted ablation.
+    Returns centers [..., K], sorted ascending.
+    """
+    h = jnp.broadcast_to(importance, w.shape).astype(w.dtype)
+    centers = _quantile_init(w, k)
+
+    def body(_, c):
+        a = assign_to_centers(w, c)
+        return _m_step(w, h, a, c, k)
+
+    centers = jax.lax.fori_loop(0, iters, body, centers)
+    return jnp.sort(centers, axis=-1)
+
+
+def rtn_grid_centers(w: jnp.ndarray, k: int = 4) -> jnp.ndarray:
+    """RTN ablation: k equally-spaced centers over [min, max] per row.
+
+    For k=2 this is sign-style binarization around the range midpoints
+    (the classic RTN 1-bit grid); used when ``use_em=False``.
+    """
+    lo = jnp.min(w, axis=-1, keepdims=True)
+    hi = jnp.max(w, axis=-1, keepdims=True)
+    steps = (jnp.arange(k, dtype=w.dtype) + 0.5) / k if k == 2 else (
+        jnp.arange(k, dtype=w.dtype) / (k - 1))
+    c = lo + (hi - lo) * steps
+    return c

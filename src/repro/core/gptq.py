@@ -1,0 +1,242 @@
+"""Algorithm 1 — Fine-Grained Group Hessian-Aware Quantization.
+
+Per linear layer (weight ``W [C_out, C_in]``, calibration acts ``X [T, C_in]``):
+
+1. reorder input channels ascending by activation scale ``diag(X^T X)``
+   (outlier channels land in the LAST group(s));
+2. ``H = 2 X^T X + lambda I``; ``Hc = cholesky(H^-1, upper)`` (GPTQ);
+3. for each channel-wise group of ``B`` columns: fit 4 centers (2 without
+   the fine-grained bit) by Hessian-weighted EM (or an RTN grid for the
+   ablation), then quantize column-by-column with GPTQ error
+   compensation inside the block and a block-level update to all
+   remaining columns;
+4. the last ``n_outlier_groups`` groups are kept in INT8 (weights
+   per-row symmetric; activations quantized per-token INT8 at runtime);
+5. activation plane-balancing factors (Appendix A) are calibrated from
+   the normal-channel activations.
+
+The result is a `QuantizedLinear` pytree: packed sign bits, packed
+fine-group bitmap, per-(row, group) centers, INT8 outlier block, the
+channel permutation, and the plane-scale gammas.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import QuantConfig
+from repro.core.act_decompose import balance_plane_scales
+from repro.core.em import em_fit, rtn_grid_centers
+from repro.core.packing import pack_bits_u32
+from repro.core.rtn import int8_rowwise
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "q_packed", "m_packed", "centers", "w8", "w8_scale",
+        "perm", "act_gamma", "row_sum", "bias",
+    ),
+    meta_fields=("group_size", "c_in", "c_out", "n_outlier"),
+)
+@dataclass
+class QuantizedLinear:
+    """W(1+1)A(1x4) artifact for one FC layer (all arrays permuted order)."""
+
+    q_packed: jnp.ndarray    # uint32 [C_out, C_nrm//32]   sign bits
+    m_packed: jnp.ndarray    # uint32 [C_out, C_nrm//32]   fine-group bitmap
+    centers: jnp.ndarray     # f32   [C_out, G_n, 4]      sorted dequant values
+    w8: jnp.ndarray          # int8  [C_out, K]           outlier weights
+    w8_scale: jnp.ndarray    # f32   [C_out, 1]
+    perm: jnp.ndarray        # int32 [C_in]
+    act_gamma: jnp.ndarray   # f32   [4] plane-balancing multipliers
+    row_sum: jnp.ndarray     # f32   [C_out] sum of dequantized normal weights
+    bias: jnp.ndarray | None
+    group_size: int = 128
+    c_in: int = 0
+    c_out: int = 0
+    n_outlier: int = 0       # outlier channels K
+
+    @property
+    def c_norm(self) -> int:
+        return self.c_in - self.n_outlier
+
+    def packed_bytes(self) -> int:
+        """Storage accounting (Table 6): packed bits + fp16 centers/scales."""
+        n = self.q_packed.size * 4 + self.m_packed.size * 4
+        n += self.centers.size * 2            # centers stored fp16
+        n += self.w8.size + self.w8_scale.size * 2
+        n += self.perm.size * 4
+        n += 4 * 4 + self.row_sum.size * 2
+        if self.bias is not None:
+            n += self.bias.size * 2
+        return int(n)
+
+
+@functools.partial(jax.jit, static_argnames=("n_centers", "use_gptq"))
+def _quantize_block_columns(wb, centers, hc_blk, n_centers, use_gptq):
+    """GPTQ inner loop over one block's columns with nearest-center quant.
+
+    wb [R, B] current (compensated) block; centers [R, K]; hc_blk [B, B]
+    upper-Cholesky sub-block.  Returns (assignment idx [R, B] int8,
+    scaled errors [R, B]).
+    """
+    R, B = wb.shape
+
+    def body(j, carry):
+        wb, idx, errs = carry
+        wcol = jax.lax.dynamic_slice_in_dim(wb, j, 1, axis=1)[:, 0]
+        d = (wcol[:, None] - centers) ** 2
+        a = jnp.argmin(d, axis=-1)
+        wq = jnp.take_along_axis(centers, a[:, None], axis=-1)[:, 0]
+        denom = hc_blk[j, j]
+        err = (wcol - wq) / denom
+        if use_gptq:
+            row = hc_blk[j]
+            mask = (jnp.arange(B) > j).astype(wb.dtype)
+            wb = wb - err[:, None] * (row * mask)[None, :]
+        idx = idx.at[:, j].set(a.astype(jnp.int8))
+        errs = errs.at[:, j].set(err)
+        return wb, idx, errs
+
+    idx0 = jnp.zeros((R, B), jnp.int8)
+    errs0 = jnp.zeros((R, B), wb.dtype)
+    _, idx, errs = jax.lax.fori_loop(0, B, body, (wb, idx0, errs0))
+    return idx, errs
+
+
+@functools.partial(jax.jit, static_argnames=("start",))
+def _propagate_rest(wp, errs, hc_rows, start):
+    """Block-level GPTQ update: W[:, start:] -= E @ Hc[block, start:]."""
+    mask = (jnp.arange(wp.shape[1]) >= start).astype(wp.dtype)
+    return wp - errs @ (hc_rows * mask[None, :])
+
+
+def _cholesky_inv_upper(h: jnp.ndarray) -> jnp.ndarray:
+    """Hc = cholesky(H^-1, upper) — GPTQ recipe: H^-1 = Hc^T @ Hc with Hc
+    upper triangular (the transpose of the lower Cholesky factor of H^-1,
+    matching torch.linalg.cholesky(..., upper=True) semantics)."""
+    n = h.shape[0]
+    lower = jnp.linalg.cholesky(h)
+    eye = jnp.eye(n, dtype=h.dtype)
+    linv = jax.scipy.linalg.solve_triangular(lower, eye, lower=True)
+    hinv = linv.T @ linv
+    hc = jnp.linalg.cholesky(hinv).T
+    return hinv, hc
+
+
+def quantize_linear(
+    w: jnp.ndarray,
+    x_calib: jnp.ndarray,
+    cfg: QuantConfig,
+    bias: jnp.ndarray | None = None,
+) -> QuantizedLinear:
+    """Run Algorithm 1 on one FC layer. w [C_out, C_in]; x_calib [T, C_in]."""
+    w = jnp.asarray(w, jnp.float32)
+    x = jnp.asarray(x_calib, jnp.float32)
+    c_out, c_in = w.shape
+    B = cfg.group_size
+    assert c_in % B == 0, f"C_in={c_in} not divisible by group {B}"
+    n_groups = c_in // B
+    n_out_groups = min(cfg.n_outlier_groups, max(n_groups - 1, 0))
+    K = n_out_groups * B
+    c_nrm = c_in - K
+    g_n = c_nrm // B
+
+    # 1) reorder ascending by activation scale; outliers -> last groups
+    act_scale = jnp.mean(x * x, axis=0)
+    perm = jnp.argsort(act_scale).astype(jnp.int32)
+    wp = w[:, perm]
+    xp = x[:, perm]
+
+    # 2) Hessian and Cholesky of its inverse
+    h = 2.0 * (xp.T @ xp)
+    damp = cfg.hessian_damp * jnp.mean(jnp.diag(h)) + 1e-8
+    h = h + damp * jnp.eye(c_in, dtype=h.dtype)
+    hinv, hc = _cholesky_inv_upper(h)
+    hinv_diag = jnp.clip(jnp.diag(hinv), 1e-10, None)
+    if not cfg.use_gptq:
+        hc = jnp.eye(c_in, dtype=w.dtype)
+
+    n_centers = 4 if cfg.use_fine_grained else 2
+    centers_all = []
+    idx_all = []
+
+    # 3) per-group EM + column compensation
+    for g in range(g_n):
+        sl = slice(g * B, (g + 1) * B)
+        wb = wp[:, sl]
+        importance = (
+            (1.0 / hinv_diag[sl]) ** cfg.hessian_power
+            if cfg.use_hessian_metric
+            else jnp.ones((B,), w.dtype)
+        )
+        if cfg.use_em:
+            centers = em_fit(wb, importance, k=n_centers, iters=cfg.em_iters)
+        else:
+            centers = rtn_grid_centers(wb, k=n_centers)
+        idx, errs = _quantize_block_columns(
+            wb, centers, hc[sl, sl], n_centers, cfg.use_gptq
+        )
+        centers_all.append(centers)
+        idx_all.append(idx)
+        if cfg.use_gptq:
+            wp = _propagate_rest(wp, errs, hc[sl, :], (g + 1) * B)
+
+    # 4) outlier block -> INT8 per-row
+    if K > 0:
+        w8, w8_scale = int8_rowwise(wp[:, c_nrm:])
+    else:
+        w8 = jnp.zeros((c_out, 0), jnp.int8)
+        w8_scale = jnp.ones((c_out, 1), jnp.float32)
+
+    # assemble bit planes
+    idx_full = jnp.concatenate(idx_all, axis=1) if idx_all else jnp.zeros(
+        (c_out, 0), jnp.int8)
+    if n_centers == 4:
+        q_bits = (idx_full & 1).astype(jnp.int8)
+        m_bits = (idx_full >> 1).astype(jnp.int8)
+    else:  # duplicate the 2 centers across both fine groups
+        q_bits = (idx_full & 1).astype(jnp.int8)
+        m_bits = jnp.zeros_like(q_bits)
+    centers_arr = (
+        jnp.stack(centers_all, axis=1)
+        if centers_all else jnp.zeros((c_out, 0, n_centers), jnp.float32)
+    )
+    if n_centers == 2:
+        centers_arr = jnp.concatenate([centers_arr, centers_arr], axis=-1)
+
+    # dequantized normal-row sums (shift-plane precompute)
+    deq = jnp.take_along_axis(
+        centers_arr.reshape(c_out, g_n, 4),
+        (2 * m_bits + q_bits).reshape(c_out, g_n, B).astype(jnp.int32),
+        axis=-1,
+    )
+    row_sum = jnp.sum(deq, axis=(1, 2))
+
+    # 5) activation plane balancing on the normal channels
+    act_gamma = (
+        balance_plane_scales(xp[:, :c_nrm], bits=cfg.act_bits)
+        if (cfg.use_act_balance and c_nrm > 0)
+        else jnp.ones((cfg.act_bits,), jnp.float32)
+    )
+
+    return QuantizedLinear(
+        q_packed=pack_bits_u32(q_bits),
+        m_packed=pack_bits_u32(m_bits),
+        centers=centers_arr.astype(jnp.float32),
+        w8=w8,
+        w8_scale=w8_scale.astype(jnp.float32),
+        perm=perm,
+        act_gamma=act_gamma,
+        row_sum=row_sum.astype(jnp.float32),
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        group_size=B,
+        c_in=c_in,
+        c_out=c_out,
+        n_outlier=K,
+    )

@@ -1,0 +1,31 @@
+"""INT4 KV-cache quantization (paper Section 4 setup: 4-bit store/load).
+
+Per-(batch, position, head) asymmetric RTN over head_dim, packed two
+nibbles per int8 byte.  The serving engine stores (packed, mu, z) and
+dequantizes on read inside the attention block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import pack_int4_pairs, unpack_int4_pairs
+from repro.core.rtn import rtn_dequantize, rtn_quantize
+
+
+def kv_quantize(kv: jnp.ndarray, bits: int = 4):
+    """kv [..., D] -> (packed int8 [..., D//2], mu [..., 1], z [..., 1])."""
+    xq, mu, z = rtn_quantize(kv.astype(jnp.float32), bits)
+    if bits == 4:
+        packed = pack_int4_pairs(xq)
+    else:
+        packed = (xq - 128).astype(jnp.int8)  # int8 storage
+    return packed, mu.astype(jnp.float32), z.astype(jnp.float32)
+
+
+def kv_dequantize(packed: jnp.ndarray, mu: jnp.ndarray, z: jnp.ndarray,
+                  bits: int = 4, dtype=jnp.bfloat16):
+    if bits == 4:
+        xq = unpack_int4_pairs(packed)
+    else:
+        xq = packed.astype(jnp.int32) + 128
+    return rtn_dequantize(xq, mu, z).astype(dtype)

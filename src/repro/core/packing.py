@@ -1,0 +1,53 @@
+"""Bit packing for the binary kernels.
+
+Bits are packed little-endian along the LAST axis into uint32 words
+(TPU lane-friendly: the packed word axis is a multiple of the group
+word-count; group_size must divide by 32).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_bits_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    """[..., C] {0,1} -> [..., C//32] uint32 (C % 32 == 0)."""
+    *lead, c = bits.shape
+    assert c % 32 == 0, f"last dim {c} not a multiple of 32"
+    b = bits.reshape(*lead, c // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits_u32(words: jnp.ndarray, n_bits: int | None = None) -> jnp.ndarray:
+    """[..., W] uint32 -> [..., W*32] {0,1} int8."""
+    *lead, w = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*lead, w * 32).astype(jnp.int8)
+    if n_bits is not None:
+        bits = bits[..., :n_bits]
+    return bits
+
+
+def pack_int4_pairs(x4: jnp.ndarray) -> jnp.ndarray:
+    """[..., C] int32 in [0,15] -> [..., C//2] int8 nibbles (little)."""
+    *lead, c = x4.shape
+    assert c % 2 == 0
+    x = x4.reshape(*lead, c // 2, 2)
+    word = (x[..., 0] | (x[..., 1] << 4)).astype(jnp.uint8)
+    return word.view(jnp.int8) if hasattr(word, "view") else word.astype(jnp.int8)
+
+
+def unpack_int4_pairs(p: jnp.ndarray) -> jnp.ndarray:
+    """[..., C//2] int8 -> [..., C] int32 in [0,15]."""
+    u = p.view(jnp.uint8) if hasattr(p, "view") else p.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = ((u >> 4) & 0xF).astype(jnp.int32)
+    out = jnp.stack([lo, hi], axis=-1)
+    *lead, c2, _ = out.shape
+    return out.reshape(*lead, c2 * 2)
+
+
+def packed_nbytes(shape: tuple[int, ...], dtype=np.uint32) -> int:
+    return int(np.prod(shape)) * np.dtype(dtype).itemsize

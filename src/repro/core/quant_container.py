@@ -1,0 +1,146 @@
+"""Quantized weights as drop-in replacements for dense matrices.
+
+Every matmul in the model zoo goes through ``dot(x, w)``: if ``w`` is a
+plain array it is a normal matmul; if it is a `QuantizedLinear` (the
+W(1+1)A(1x4) artifact) the layer runs the paper's quantized path —
+activations fake-quantized through the 1x4 plane decomposition (+ INT8
+outlier channels), weights dequantized from the packed 2-bit
+representation.  On TPU the packed weights stream at ~2 bits/element;
+the XLA lowering used here reads the same packed arrays (the Pallas
+kernels in repro.kernels are the hand-tiled equivalents).
+
+Also provides the calibration capture hook: ``capture_calibration()``
+records the input activations of every ``dot`` executed eagerly (the
+model's ``apply_unrolled`` path), keyed by weight-leaf path + layer
+index — exactly what Algorithm 1 needs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.act_decompose import fake_quant_act_1x4
+from repro.core.bwa_linear import dequantize_weight
+from repro.core.gptq import QuantizedLinear
+from repro.core.rtn import rtn_quantize
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def capture_calibration(name_of: dict[int, str], store: dict[str, list],
+                        max_tokens: int = 4096):
+    """Record dot() inputs for weights registered in ``name_of``
+    (id(weight-array) -> name). Only meaningful under eager execution."""
+    _STATE.names = name_of
+    _STATE.store = store
+    _STATE.max_tokens = max_tokens
+    try:
+        yield store
+    finally:
+        _STATE.names = None
+        _STATE.store = None
+
+
+def _maybe_capture(x, w):
+    names = getattr(_STATE, "names", None)
+    if names is None:
+        return
+    name = names.get(id(w))
+    if name is None:
+        return
+    store = _STATE.store
+    if getattr(w, "ndim", 2) == 3:
+        # expert stack: keep the per-expert structure [E, C, d]
+        xs = np.asarray(x.astype(jnp.float32))
+        have = sum(a.shape[1] for a in store.get(name, []))
+        budget = _STATE.max_tokens - have
+        if budget > 0:
+            store.setdefault(name, []).append(xs[:, :budget])
+        return
+    xs = np.asarray(x.astype(jnp.float32)).reshape(-1, x.shape[-1])
+    have = sum(a.shape[0] for a in store.get(name, []))
+    budget = _STATE.max_tokens - have
+    if budget > 0:
+        store.setdefault(name, []).append(xs[:budget])
+
+
+def dequantize_weight_fast(q: QuantizedLinear, dtype=jnp.bfloat16):
+    """Gather-free dequant of the NORMAL block (Perf iteration Q1):
+    ``w = lo0 + d0*qb + mb*((lo1-lo0) + (d1-d0)*qb)`` on {0,1} planes —
+    avoids materializing an int32 index tensor + an f32 gather (2.8x the
+    traffic); everything runs in the compute dtype."""
+    from repro.core.packing import unpack_bits_u32
+
+    B = q.group_size
+    qb = unpack_bits_u32(q.q_packed, q.c_norm).astype(dtype)
+    mb = unpack_bits_u32(q.m_packed, q.c_norm).astype(dtype)
+    c = q.centers.astype(dtype)             # [C_out, G, 4]
+    lo0, hi0, lo1, hi1 = c[..., 0], c[..., 1], c[..., 2], c[..., 3]
+
+    def per_group(v):  # [C_out, G] -> [C_out, C_nrm]
+        return jnp.repeat(v, B, axis=-1)
+
+    return (per_group(lo0) + per_group(hi0 - lo0) * qb
+            + mb * (per_group(lo1 - lo0)
+                    + per_group((hi1 - lo1) - (hi0 - lo0)) * qb))
+
+
+def quantized_dot(x: jnp.ndarray, q: QuantizedLinear) -> jnp.ndarray:
+    """y = x @ What.T with activation 1x4 fake-quant (+ int8 outliers).
+
+    bf16 end-to-end with f32 accumulation (Perf Q1); packed 2-bit weights
+    stream from HBM, the dequant expansion is elementwise (VMEM-resident
+    in the real Pallas kernel; see kernels/bwa_matmul)."""
+    cdt = jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    xp = jnp.take(xf, q.perm, axis=-1)
+    xn = fake_quant_act_1x4(xp[..., : q.c_norm].astype(jnp.float32),
+                            q.act_gamma).astype(cdt)
+    w_n = dequantize_weight_fast(q, cdt)
+    y = jax.lax.dot_general(xn, w_n, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if q.n_outlier:
+        xo = xp[..., q.c_norm:].astype(jnp.float32)
+        x8, mu8, z8 = rtn_quantize(xo, 8)
+        xo = (mu8 * (x8.astype(jnp.float32) - z8)).astype(cdt)
+        w_o = q.w8.astype(cdt) * q.w8_scale.astype(cdt)
+        y = y + jax.lax.dot_general(xo, w_o, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    if q.bias is not None:
+        y = y + q.bias
+    return y.reshape(*lead, q.c_out).astype(x.dtype)
+
+
+def dot(x: jnp.ndarray, w) -> jnp.ndarray:
+    """Dispatching matmul: dense array, QuantizedLinear, or a baseline
+    FakeQuantLinear (see repro.quant.baselines)."""
+    if isinstance(w, QuantizedLinear):
+        return quantized_dot(x, w)
+    if type(w).__name__ == "FakeQuantLinear":
+        from repro.quant.baselines import fq_dot
+        return fq_dot(x, w)
+    _maybe_capture(x, w)
+    return x @ w
+
+
+def edot(spec: str, x: jnp.ndarray, w) -> jnp.ndarray:
+    """Expert einsum dispatch ('ecd,edf->ecf'): dense or per-expert
+    QuantizedLinear / FakeQuantLinear (fields carry a leading E dim)."""
+    if isinstance(w, QuantizedLinear):
+        return jax.vmap(quantized_dot)(x, w)
+    if type(w).__name__ == "FakeQuantLinear":
+        from repro.quant.baselines import fq_dot
+        return jax.vmap(fq_dot)(x, w)
+    _maybe_capture(x, w)
+    return jnp.einsum(spec, x, w)
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, QuantizedLinear)

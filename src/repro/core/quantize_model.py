@@ -1,0 +1,217 @@
+"""Whole-model PTQ: GPTQ-style SEQUENTIAL quantization (Algorithm 1
+applied layer by layer, with each block's calibration inputs produced by
+the already-quantized earlier blocks).
+
+Flow per scan unit:
+  1. run the unit EAGERLY (python-unrolled) on the calibration stream
+     with capture hooks recording the input activations of every
+     quantizable linear;
+  2. quantize those linears (EM + fine-group + Hessian + GPTQ
+     compensation + INT8 outliers + plane balancing);
+  3. recompute the unit's output with the QUANTIZED weights and feed it
+     to the next unit.
+
+Quantized leaves are `QuantizedLinear` pytrees that the model consumes
+transparently through the dot()/edot() dispatch.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ArchConfig, FFNKind, QuantConfig
+from repro.core.gptq import QuantizedLinear, quantize_linear
+from repro.core.quant_container import capture_calibration
+from repro.models.model import LanguageModel, _encoder_kv
+from repro.models.transformer import apply_sublayer
+
+# 2-D [in, out] weights that get the W(1+1)A(1x4) treatment
+QUANT_LEAF_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",
+    "w_gate", "w_up", "w_down", "dw_gate", "dw_up", "dw_down",
+    "w1", "w2",
+    "in_proj", "out_proj", "in_z", "in_x", "in_bcdt",
+    "w_gate_in", "w_rec_in", "w_out",
+})
+# kept in fp: router (tiny/accuracy-critical), rg-lru gates (recurrence),
+# conv, norms, embeddings, lm head.
+
+
+def _is_quantizable(path: str, leaf) -> bool:
+    name = path.split("/")[-1]
+    if name not in QUANT_LEAF_NAMES:
+        return False
+    return leaf.ndim in (2, 3)     # [in,out] or experts [E,in,out]
+
+
+def _slice_unit(tree, u: int):
+    return jax.tree.map(lambda a: a[u], tree)
+
+
+def _apply_unit(model: LanguageModel, kinds, unit_tree, x, enc_kv=None):
+    for si, kind in enumerate(kinds):
+        x, _, _ = apply_sublayer(
+            model.cfg, kind, unit_tree[f"sub_{si}"], x, mode="train",
+            enc_kv=enc_kv, q_chunk=model.q_chunk)
+    return x
+
+
+def _named_leaves(tree, prefix=""):
+    out = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def _quantize_leaf(w, acts_list, qcfg: QuantConfig):
+    """w [in, out] or [E, in, out]; acts captured [T, in] or [E, C, in]."""
+    if w.ndim == 2:
+        x = jnp.asarray(np.concatenate(acts_list, axis=0), jnp.float32)
+        return quantize_linear(jnp.asarray(w, jnp.float32).T, x, qcfg)
+    # experts: per-expert quantization with per-expert dispatched tokens
+    e = w.shape[0]
+    x_e = jnp.asarray(np.concatenate(acts_list, axis=1), jnp.float32)
+    qs = [quantize_linear(jnp.asarray(w[i], jnp.float32).T, x_e[i], qcfg)
+          for i in range(e)]
+    return _stack_qlinears(qs)
+
+
+def _stack_qlinears(qs: list[QuantizedLinear]) -> QuantizedLinear:
+    """Stack per-layer (or per-expert) artifacts along a new leading dim."""
+    import dataclasses
+    data = {}
+    for f in ("q_packed", "m_packed", "centers", "w8", "w8_scale", "perm",
+              "act_gamma", "row_sum"):
+        data[f] = jnp.stack([getattr(q, f) for q in qs])
+    bias = None
+    if qs[0].bias is not None:
+        bias = jnp.stack([q.bias for q in qs])
+    q0 = qs[0]
+    return QuantizedLinear(
+        bias=bias, group_size=q0.group_size, c_in=q0.c_in, c_out=q0.c_out,
+        n_outlier=q0.n_outlier, **data)
+
+
+def _set_leaf(tree, path: str, value):
+    keys = path.split("/")
+    node = tree
+    for k in keys[:-1]:
+        node = node[k]
+    node[keys[-1]] = value
+
+
+def quantize_unit(model, kinds, unit_tree, x_calib, qcfg, enc_kv=None,
+                  leaf_quantizer=None):
+    """Capture + quantize one scan unit. Returns quantized unit tree."""
+    named = _named_leaves(unit_tree)
+    name_of = {id(leaf): path for path, leaf in named
+               if _is_quantizable(path, leaf)}
+    store: dict[str, list] = {}
+    with capture_calibration(name_of, store, max_tokens=qcfg.calib_tokens):
+        _apply_unit(model, kinds, unit_tree, x_calib, enc_kv)
+    quantize = leaf_quantizer or _quantize_leaf
+    qtree = jax.tree.map(lambda a: a, unit_tree)  # fresh containers
+    for path in list(store.keys()):
+        leaf = dict_get(unit_tree, path)
+        _set_leaf(qtree, path, quantize(leaf, store[path], qcfg))
+    return qtree
+
+
+def dict_get(tree, path: str):
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def quantize_model_sequential(
+    model: LanguageModel,
+    params: dict,
+    calib_tokens: jnp.ndarray,
+    qcfg: QuantConfig,
+    frontend_emb=None,
+    enc_frames=None,
+    leaf_quantizer=None,
+) -> dict:
+    """Returns a new param pytree with QuantizedLinear weight leaves.
+
+    Runs eagerly (no jit) — quantization time, not serving time.
+    """
+    cfg = model.cfg
+    x = model._embed(params, calib_tokens, frontend_emb)
+    enc_kv_stack = None
+    if cfg.encoder_layers:
+        enc_out = model._encode(params, enc_frames)
+        enc_kv_stack = _encoder_kv(cfg, params["blocks"], enc_out)
+
+    q_units = []
+    for u in range(model.n_units):
+        unit = _slice_unit(params["blocks"], u)
+        enc_kv = (_slice_unit(enc_kv_stack, u)
+                  if enc_kv_stack is not None else None)
+        q_unit = quantize_unit(model, model.kinds, unit, x, qcfg, enc_kv,
+                               leaf_quantizer=leaf_quantizer)
+        x = _apply_unit(model, model.kinds, q_unit, x, enc_kv)
+        q_units.append(q_unit)
+
+    q_tail = []
+    if model.n_tail:
+        for u in range(model.n_tail):
+            unit = _slice_unit(params["tail"], u)
+            q_unit = quantize_unit(model, model.kinds[:1], unit, x, qcfg,
+                                   leaf_quantizer=leaf_quantizer)
+            x = _apply_unit(model, model.kinds[:1], q_unit, x)
+            q_tail.append(q_unit)
+
+    new_params = dict(params)
+    new_params["blocks"] = _stack_unit_trees(q_units)
+    if q_tail:
+        new_params["tail"] = _stack_unit_trees(q_tail)
+    return new_params
+
+
+def _stack_unit_trees(units: list[dict]):
+    """Stack a list of per-unit trees back into scan form; quantized
+    containers stack field-wise, plain arrays stack normally."""
+    def _is_container(x):
+        return isinstance(x, QuantizedLinear) or \
+            type(x).__name__ == "FakeQuantLinear"
+
+    def stack(*leaves):
+        if isinstance(leaves[0], QuantizedLinear):
+            return _stack_qlinears(list(leaves))
+        if type(leaves[0]).__name__ == "FakeQuantLinear":
+            import dataclasses
+            fields = {}
+            for f in ("w_hat", "rot", "outlier_mask"):
+                vals = [getattr(q, f) for q in leaves]
+                fields[f] = None if vals[0] is None else jnp.stack(vals)
+            return dataclasses.replace(leaves[0], **fields)
+        return jnp.stack(leaves)
+
+    return jax.tree.map(stack, *units, is_leaf=_is_container)
+
+
+def model_quantized_bytes(params) -> tuple[int, int]:
+    """(quantized-leaf bytes, fp-leaf bytes) for Table-6 accounting."""
+    qbytes = 0
+    fpbytes = 0
+
+    def visit(leaf):
+        nonlocal qbytes, fpbytes
+        if isinstance(leaf, QuantizedLinear):
+            qbytes += leaf.packed_bytes()
+        elif hasattr(leaf, "dtype"):
+            fpbytes += leaf.size * 2  # stored fp16
+        return leaf
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(x, QuantizedLinear))
+    return qbytes, fpbytes

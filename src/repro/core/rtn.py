@@ -1,0 +1,55 @@
+"""Round-to-nearest (RTN) quantization — Eq. (3) of the paper.
+
+``X_q = clamp(round(X/mu) + z, 0, 2^k - 1)`` with
+``mu = (max - min) / (2^k - 1)`` and ``z = -round(min/mu)``;
+dequantization is ``x_hat = mu * (X_q - z)``.
+
+Per-token (rows) for activations, per-channel (rows of W) for weights.
+All functions operate along the LAST axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def rtn_params(x: jnp.ndarray, bits: int, symmetric: bool = False):
+    """Return (mu, z) computed along the last axis (keepdims)."""
+    levels = 2**bits - 1
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        mu = jnp.maximum(2.0 * amax / levels, _EPS)
+        z = jnp.full_like(mu, levels // 2 + (levels & 1))  # mid-point
+        z = jnp.round(z)
+    else:
+        lo = jnp.min(x, axis=-1, keepdims=True)
+        hi = jnp.max(x, axis=-1, keepdims=True)
+        mu = jnp.maximum((hi - lo) / levels, _EPS)
+        z = -jnp.round(lo / mu)
+    return mu, z
+
+
+def rtn_quantize(x: jnp.ndarray, bits: int, symmetric: bool = False):
+    """Quantize -> (x_q int32 in [0, 2^bits-1], mu, z)."""
+    mu, z = rtn_params(x, bits, symmetric)
+    xq = jnp.clip(jnp.round(x / mu) + z, 0, 2**bits - 1).astype(jnp.int32)
+    return xq, mu, z
+
+
+def rtn_dequantize(xq: jnp.ndarray, mu: jnp.ndarray, z: jnp.ndarray):
+    return mu * (xq.astype(mu.dtype) - z)
+
+
+def rtn_fake_quant(x: jnp.ndarray, bits: int, symmetric: bool = False):
+    """quantize+dequantize in one step (baseline building block)."""
+    xq, mu, z = rtn_quantize(x, bits, symmetric)
+    return rtn_dequantize(xq, mu, z)
+
+
+def int8_rowwise(w: jnp.ndarray):
+    """Symmetric per-row INT8 (outlier weights): returns (w8, scale)."""
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, _EPS)
+    w8 = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w8, scale

@@ -1,0 +1,3 @@
+from repro.data.corpus import load_corpus_text
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.loader import TokenStream, make_batches

@@ -1,0 +1,45 @@
+"""Offline real-text corpus: Python standard-library sources.
+
+No datasets ship with this container, so the training/calibration corpus
+is built from the installed CPython stdlib — real, richly structured
+text (code + docstrings + prose comments) with a Zipfian byte
+distribution, available on any machine, fully deterministic given the
+interpreter version.
+"""
+from __future__ import annotations
+
+import os
+import sysconfig
+
+_EXCLUDE_DIRS = {"site-packages", "test", "tests", "idle_test",
+                 "__pycache__", "lib2to3"}
+
+
+def stdlib_files(limit_files: int | None = None) -> list[str]:
+    root = sysconfig.get_paths()["stdlib"]
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in _EXCLUDE_DIRS)
+        for f in sorted(filenames):
+            if f.endswith(".py"):
+                out.append(os.path.join(dirpath, f))
+                if limit_files and len(out) >= limit_files:
+                    return out
+    return out
+
+
+def load_corpus_text(max_bytes: int = 8 << 20, seed: int = 0) -> str:
+    """Deterministic concatenation of stdlib sources up to ``max_bytes``."""
+    chunks: list[str] = []
+    total = 0
+    for path in stdlib_files():
+        try:
+            with open(path, encoding="utf-8", errors="ignore") as f:
+                t = f.read()
+        except OSError:
+            continue
+        chunks.append(t)
+        total += len(t)
+        if total >= max_bytes:
+            break
+    return "".join(chunks)[:max_bytes]

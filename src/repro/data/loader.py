@@ -1,0 +1,47 @@
+"""Sharding-aware token batching.
+
+`TokenStream` yields {"tokens", "targets"} next-token batches from a
+flat token array, deterministic per (seed, step) — a restart at step k
+reproduces the exact batch sequence (required for checkpoint/resume
+equivalence tests).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+class TokenStream:
+    def __init__(self, tokens: np.ndarray, batch: int, seq: int,
+                 seed: int = 0, pad_vocab_to: int | None = None):
+        self.tokens = np.asarray(tokens, np.int32)
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        n_windows = (len(self.tokens) - 1) // seq
+        assert n_windows >= 1, "corpus too small for seq length"
+        self.n_windows = n_windows
+        self.vocab_clip = pad_vocab_to
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        idx = rng.integers(0, self.n_windows, size=self.batch)
+        starts = idx * self.seq
+        tok = np.stack([self.tokens[s : s + self.seq] for s in starts])
+        tgt = np.stack([self.tokens[s + 1 : s + self.seq + 1] for s in starts])
+        if self.vocab_clip:
+            tok = tok % self.vocab_clip
+            tgt = tgt % self.vocab_clip
+        return {"tokens": tok, "targets": tgt}
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batches(text_tokens: np.ndarray, batch: int, seq: int,
+                 seed: int = 0) -> TokenStream:
+    return TokenStream(text_tokens, batch, seq, seed)

@@ -1,0 +1,23 @@
+"""Byte-level tokenizer (vocab 256 + specials), no external assets."""
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB_SIZE = 259
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB_SIZE
+
+    def encode(self, text: str, add_bos: bool = False) -> np.ndarray:
+        b = np.frombuffer(text.encode("utf-8", errors="ignore"),
+                          dtype=np.uint8).astype(np.int32)
+        if add_bos:
+            b = np.concatenate([[BOS], b])
+        return b
+
+    def decode(self, ids) -> str:
+        ids = np.asarray(ids)
+        ids = ids[(ids >= 0) & (ids < 256)].astype(np.uint8)
+        return ids.tobytes().decode("utf-8", errors="ignore")

@@ -1,0 +1,51 @@
+"""In-model sharding hints that no-op outside a mesh context.
+
+GSPMD propagates weight shardings well through matmuls but loses the
+plot at reshapes that split a sharded feature dim into (heads, head_dim)
+when the per-shard width does not align to head boundaries.  These
+helpers pin the canonical activation layouts:
+
+    batch   -> the data axes ('pod','data')
+    heads   -> 'model'
+
+Used by the attention/MoE blocks; under plain CPU tests (no mesh) they
+return the input unchanged.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _axes():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return None
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return dp or None, tp
+
+
+def hint(x, *dims):
+    """dims: per-dimension tags from {'batch', 'model', None}."""
+    ax = _axes()
+    if ax is None:
+        return x
+    dp, tp = ax
+    spec = []
+    for i, d in enumerate(dims):
+        if d == "batch" and dp is not None and x.shape[i] % _size(dp) == 0 \
+                and x.shape[i] >= _size(dp):
+            spec.append(dp)
+        elif d == "model" and tp is not None and x.shape[i] >= 1:
+            spec.append(tp)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _size(axes) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes]))

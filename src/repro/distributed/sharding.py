@@ -1,0 +1,143 @@
+"""Sharding rules: param/cache/data pytrees -> PartitionSpec pytrees.
+
+Tensor parallelism ('model' axis):
+  column-parallel (wq/wk/wv/w_gate/w_up/in-projections): last dim
+  row-parallel (wo/w_down/out-projections): contraction dim
+  vocab-parallel embedding + LM head
+  expert parallelism: MoE expert stacks sharded on the expert dim
+FSDP ('data' axis, optional): the remaining large dim of every matrix is
+sharded over data; XLA inserts per-layer all-gathers (ZeRO-3) which
+overlap with the layer scan.  Required to fit optimizer state for the
+large assigned archs.
+
+All rules are by leaf NAME, resilient to the stacked leading scan dim.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.utils.pytree import tree_map_with_path_names
+
+
+# (suffix pattern, spec builder) — specs given for the LAST ndims of the
+# leaf; leading dims (scan stack, expert stack handled separately) get None.
+def _rules(fsdp: bool):
+    dp = "data" if fsdp else None
+    return [
+        # attention / generic projections
+        ("wq", (dp, "model")), ("wk", (dp, "model")), ("wv", (dp, "model")),
+        ("wo", ("model", dp)),
+        ("bq", ("model",)), ("bk", ("model",)), ("bv", ("model",)),
+        # dense mlp
+        ("w_gate", (dp, "model")), ("w_up", (dp, "model")),
+        ("w_down", ("model", dp)),
+        ("dw_gate", (dp, "model")), ("dw_up", (dp, "model")),
+        ("dw_down", ("model", dp)),
+        ("w1", (dp, "model")), ("w2", ("model", dp)),
+        ("b1", ("model",)), ("b2", (None,)),
+        # router: tiny, replicated
+        ("router", (None, None)),
+        # ssm
+        ("in_proj", (dp, "model")), ("out_proj", ("model", dp)),
+        ("in_z", (dp, "model")), ("in_x", (dp, "model")),
+        ("in_bcdt", (dp, None)),
+        ("conv_w_x", (None, "model")), ("conv_w_b", (None, None)),
+        ("conv_w_c", (None, None)), ("conv_w", (None, "model")),
+        ("a_log", ("model",)), ("dt_bias", ("model",)), ("d_skip", (None,)),
+        # rg-lru
+        ("w_gate_in", (dp, "model")), ("w_rec_in", (dp, "model")),
+        ("w_out", ("model", dp)),
+        ("w_a", (dp, "model")), ("w_x", (dp, "model")),
+        ("b_a", ("model",)), ("b_x", ("model",)), ("lam", ("model",)),
+        # embeddings
+        ("embed", ("model", dp)), ("lm_head", (dp, "model")),
+        ("frontend_proj", (None, "model")),
+        # norms
+        ("norm", (None,)),
+    ]
+
+
+def _leaf_spec(path: str, leaf, mesh, fsdp: bool) -> P:
+    name = path.split("/")[-1]
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    is_expert = "/ffn/" in path and name in (
+        "w_gate", "w_up", "w_down") and ndim >= 4
+    if is_expert:
+        # [n_units, E, in, out] -> experts over 'model' (EP) + FSDP over
+        # 'data' on the input dim (otherwise optimizer state alone is
+        # params*12B/16 per device — 360 GB for arctic; EXPERIMENTS §Perf)
+        spec = [None] * ndim
+        spec[-3] = "model"
+        if fsdp and leaf.shape[-2] % mesh.shape.get("data", 1) == 0:
+            spec[-2] = "data"
+        return P(*spec)
+    if "norm" in name:
+        return P(*([None] * ndim))
+    for suffix, dims in _rules(fsdp):
+        if name == suffix:
+            if ndim < len(dims):
+                return P(*([None] * ndim))
+            spec = [None] * (ndim - len(dims)) + list(dims)
+            # jit in_shardings requires the dim to DIVIDE the axis size;
+            # drop axes that don't (replicate that dim instead).
+            shape = leaf.shape
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                dim = shape[i]
+                ax_size = int(np.prod([mesh.shape[a] for a in
+                                       (ax if isinstance(ax, tuple) else (ax,))]))
+                if dim % ax_size != 0:
+                    spec[i] = None
+            return P(*spec)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params, mesh, fsdp: bool = False):
+    """PartitionSpec pytree for model params."""
+    return tree_map_with_path_names(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh, fsdp), params)
+
+
+def batch_pspec(mesh, *, batch: int | None = None,
+                seq_shard: bool = False) -> P:
+    """[B, S] token batches: batch over (pod, data); if the batch is too
+    small (long-context decode), shard the SEQUENCE over data instead."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if seq_shard or (batch is not None and batch < dp_size):
+        return P(None, dp)
+    return P(dp, None)
+
+
+def cache_pspecs(caches, mesh, batch: int):
+    """Decode caches: shard batch over data when divisible; otherwise
+    shard the sequence dim (sequence-parallel KV) for 4D+ caches; heads
+    stay on 'model' where present via dim-size heuristics."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ok = batch % dp_size == 0 and batch >= dp_size
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        # layouts: [L, B, S, H, D] (kv), [L, B, S, 2/..] scales,
+        # [L, B, H, P, N] ssm state, [L, B, K-1, C] conv, [L, B, W] lru
+        spec = [None] * nd
+        if nd >= 2:
+            if batch_ok:
+                spec[1] = dp
+            elif nd >= 3 and ("/k" in path or "/v" in path):
+                spec[2] = dp          # sequence-parallel KV cache
+        return P(*spec)
+
+    return tree_map_with_path_names(spec, caches)
+
+
+def named_shardings(pspecs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

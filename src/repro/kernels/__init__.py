@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the W(1+1)A(1x4) compute hot spots.
+
+- bwa_matvec: packed popcount GEMV (decode; the paper's binary inner loop,
+  TPU-adapted: uint32 bit-planes + lax.population_count on the VPU).
+- bwa_matmul: dequant-in-VMEM GEMM (prefill; streams 2-bit weights from
+  HBM, expands next to the MXU — Marlin-style for TPU).
+- act_quant: fused per-token RTN-INT4 + bit-plane packing.
+- kv4_attention: flash-decode attention streaming the INT4-packed KV
+  cache (4 bits/element from HBM, dequant + online softmax in VMEM).
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).
+"""
+from repro.kernels.bwa_matvec.ops import bwa_matvec
+from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
+from repro.kernels.act_quant.ops import act_quant_pack
+from repro.kernels.kv4_attention.ops import kv4_decode_attention

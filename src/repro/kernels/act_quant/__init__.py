@@ -1,0 +1,1 @@
+from repro.kernels.act_quant.ops import act_quant_pack

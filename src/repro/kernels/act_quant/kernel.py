@@ -1,0 +1,62 @@
+"""Fused per-token RTN-INT4 quantize + 1x4 bit-plane pack (Section 3.1(3)).
+
+One pass over the activations produces the packed uint32 bit-planes the
+popcount GEMV consumes, plus per-token (mu, z).  Fusing quantize+pack
+keeps the fp activations in VMEM and writes only 4/32 of their bytes
+back to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-8
+
+
+def _kernel(x_ref, planes_ref, mu_ref, z_ref, *, n_planes: int):
+    x = x_ref[...].astype(jnp.float32)           # [BT, C]
+    bt, c = x.shape
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    levels = float(2**n_planes - 1)
+    mu = jnp.maximum((hi - lo) / levels, _EPS)
+    z = -jnp.round(lo / mu)
+    xq = jnp.clip(jnp.round(x / mu) + z, 0, levels).astype(jnp.uint32)
+
+    w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    xq_w = xq.reshape(bt, c // 32, 32)
+    for a in range(n_planes):                    # static unroll
+        bits = (xq_w >> jnp.uint32(a)) & jnp.uint32(1)
+        planes_ref[:, a, :] = jnp.sum(bits * w, axis=-1).astype(jnp.uint32)
+    mu_ref[...] = mu
+    z_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("n_planes", "block_t",
+                                              "interpret"))
+def act_quant_kernel(x, *, n_planes: int = 4, block_t: int = 64,
+                     interpret: bool = True):
+    t, c = x.shape
+    assert c % 32 == 0
+    bt = min(block_t, t)
+    assert t % bt == 0
+    planes, mu, z = pl.pallas_call(
+        functools.partial(_kernel, n_planes=n_planes),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, c), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bt, n_planes, c // 32), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, n_planes, c // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x)
+    return planes, mu, z

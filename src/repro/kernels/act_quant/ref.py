@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: RTN-INT4 + plane decompose + pack via core ops."""
+from __future__ import annotations
+
+from repro.core.act_decompose import quantize_act_int4_planes
+from repro.core.packing import pack_bits_u32
+
+
+def act_quant_pack_ref(x, n_planes: int = 4):
+    planes, mu, z = quantize_act_int4_planes(x, n_planes)
+    return pack_bits_u32(planes), mu, z

@@ -1,0 +1,1 @@
+from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant

@@ -1,0 +1,45 @@
+"""jit'd wrapper: BWA linear prefill GEMM through the dequant kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.act_decompose import fake_quant_act_1x4
+from repro.core.gptq import QuantizedLinear
+from repro.core.rtn import rtn_quantize
+from repro.kernels.bwa_matvec.ops import centers_to_cd
+from repro.kernels.bwa_matmul.kernel import bwa_matmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "quantize_acts", "block_t", "block_n", "block_k", "interpret"))
+def bwa_matmul_dequant(q: QuantizedLinear, x: jnp.ndarray, *,
+                       quantize_acts: bool = True, block_t: int = 128,
+                       block_n: int = 128, block_k: int = 256,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Prefill-shape BWA linear: y [T, C_out] = x @ What^T (+outliers).
+
+    Activations go through the paper's 1x4 fake-quant (cheap, elementwise)
+    outside the kernel; the kernel streams 2-bit weights and dequantizes
+    in VMEM.
+    """
+    xp = jnp.take(x, q.perm, axis=-1)
+    xn, xo = xp[..., : q.c_norm], xp[..., q.c_norm:]
+    if quantize_acts:
+        xn = fake_quant_act_1x4(xn.astype(jnp.float32), q.act_gamma)
+    cd = centers_to_cd(q.centers)
+    y = bwa_matmul_kernel(
+        xn, q.q_packed, q.m_packed, cd, group=q.group_size,
+        block_t=block_t, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    if q.n_outlier:
+        xo = xo.astype(jnp.float32)
+        if quantize_acts:
+            x8, mu8, z8 = rtn_quantize(xo, 8)
+            xo = mu8 * (x8.astype(jnp.float32) - z8)
+        y = y + xo @ (q.w8.astype(jnp.float32) * q.w8_scale).T
+    if q.bias is not None:
+        y = y + q.bias
+    return y

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the dequant GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_bits_u32
+
+
+def dequant_weight_ref(q_packed, m_packed, cd, group: int):
+    """[C_out, C/32] packed -> [C_out, C] fp32 dequantized weights."""
+    c_out = q_packed.shape[0]
+    qb = unpack_bits_u32(q_packed).astype(jnp.float32)
+    mb = unpack_bits_u32(m_packed).astype(jnp.float32)
+    c = qb.shape[1]
+    lo0 = jnp.repeat(cd[..., 0], group, axis=1)
+    d0 = jnp.repeat(cd[..., 1], group, axis=1)
+    lo1 = jnp.repeat(cd[..., 2], group, axis=1)
+    d1 = jnp.repeat(cd[..., 3], group, axis=1)
+    return (1.0 - mb) * (lo0 + d0 * qb) + mb * (lo1 + d1 * qb)
+
+
+def bwa_matmul_ref(x, q_packed, m_packed, cd, group: int = 128):
+    w = dequant_weight_ref(q_packed, m_packed, cd, group)
+    return x.astype(jnp.float32) @ w.T

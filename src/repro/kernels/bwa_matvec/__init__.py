@@ -1,0 +1,1 @@
+from repro.kernels.bwa_matvec.ops import bwa_matvec

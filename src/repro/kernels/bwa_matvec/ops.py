@@ -1,0 +1,64 @@
+"""jit'd wrapper: full BWA linear layer through the popcount kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.act_decompose import quantize_act_int4_planes
+from repro.core.gptq import QuantizedLinear
+from repro.core.packing import pack_bits_u32
+from repro.core.rtn import rtn_quantize
+from repro.kernels.bwa_matvec.kernel import bwa_matvec_kernel
+
+
+def centers_to_cd(centers: jnp.ndarray) -> jnp.ndarray:
+    """[.., 4] sorted centers -> (lo0, hi0-lo0, lo1, hi1-lo1)."""
+    lo0, hi0, lo1, hi1 = (centers[..., 0], centers[..., 1],
+                          centers[..., 2], centers[..., 3])
+    return jnp.stack([lo0, hi0 - lo0, lo1, hi1 - lo1], axis=-1)
+
+
+def pack_planes(planes: jnp.ndarray, g: int, b: int) -> jnp.ndarray:
+    """[T, A, C_nrm] {0,1} -> [T, A, G, B/32] uint32."""
+    t, a, c = planes.shape
+    return pack_bits_u32(planes.reshape(t, a, g, b))
+
+
+@functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
+def bwa_matvec(q: QuantizedLinear, x: jnp.ndarray, *, block_out: int = 256,
+               interpret: bool = True) -> jnp.ndarray:
+    """y = BWA_linear(x) with the binary inner loop in the Pallas kernel.
+
+    x [T, C_in] (original channel order).  Matches bwa_apply_planes.
+    """
+    t = x.shape[0]
+    B = q.group_size
+    g = q.c_norm // B
+    xp = jnp.take(x, q.perm, axis=-1)
+    xn, xo = xp[..., : q.c_norm], xp[..., q.c_norm:]
+
+    planes, mu, z = quantize_act_int4_planes(xn.astype(jnp.float32), 4)
+    planes_packed = pack_planes(planes, g, B)
+
+    qp = q.q_packed.reshape(q.c_out, g, B // 32)
+    mp = q.m_packed.reshape(q.c_out, g, B // 32)
+    cd = centers_to_cd(q.centers)
+    pw = (2.0 ** jnp.arange(4, dtype=jnp.float32)) * q.act_gamma
+
+    acc = bwa_matvec_kernel(qp, mp, cd, planes_packed, pw,
+                            block_out=min(block_out, q.c_out),
+                            interpret=interpret)
+    y = mu * acc - (mu * z) * q.row_sum
+
+    if q.n_outlier:
+        x8, mu8, z8 = rtn_quantize(xo.astype(jnp.float32), 8)
+        x8c = (x8 - 128).astype(jnp.int8)
+        iacc = jnp.einsum("tc,jc->tj", x8c, q.w8,
+                          preferred_element_type=jnp.int32).astype(jnp.float32)
+        w8_rowsum = jnp.sum(q.w8.astype(jnp.int32), axis=1).astype(jnp.float32)
+        y = y + (mu8 * iacc - (mu8 * (z8 - 128.0)) * w8_rowsum) * q.w8_scale[:, 0]
+    if q.bias is not None:
+        y = y + q.bias
+    return y

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the popcount GEMV kernel (unpacked bit algebra)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_bits_u32
+
+
+def bwa_matvec_ref(q_packed, m_packed, cd, planes, pw):
+    """Same contract as bwa_matvec_kernel, computed by unpacking bits."""
+    c_out, g, wg = q_packed.shape
+    t, n_planes = planes.shape[:2]
+    B = wg * 32
+
+    qb = unpack_bits_u32(q_packed.reshape(c_out, g * wg)).reshape(
+        c_out, g, B).astype(jnp.float32)
+    mb = unpack_bits_u32(m_packed.reshape(c_out, g * wg)).reshape(
+        c_out, g, B).astype(jnp.float32)
+    bb = unpack_bits_u32(planes.reshape(t, n_planes, g * wg)).reshape(
+        t, n_planes, g, B).astype(jnp.float32)
+
+    m1, m0 = mb, 1.0 - mb
+    v1 = jnp.einsum("tagb,jgb->tjga", bb, qb * m1)
+    v0 = jnp.einsum("tagb,jgb->tjga", bb, qb * m0)
+    r1 = jnp.einsum("tagb,jgb->tjga", bb, m1)
+    r0 = jnp.einsum("tagb,jgb->tjga", bb, m0)
+
+    lo0, d0 = cd[..., 0], cd[..., 1]
+    lo1, d1 = cd[..., 2], cd[..., 3]
+    per_ga = (lo0[None, :, :, None] * r0 + d0[None, :, :, None] * v0
+              + lo1[None, :, :, None] * r1 + d1[None, :, :, None] * v1)
+    return jnp.einsum("tjga,a->tj", per_ga, pw)

@@ -1,0 +1,1 @@
+from repro.kernels.kv4_attention.ops import kv4_decode_attention

@@ -1,0 +1,17 @@
+"""jit'd wrapper: decode attention directly from a KVCache pytree."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.kv4_attention.kernel import kv4_decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_decode_attention(q, cache, kv_len, *, s_chunk: int = 512,
+                         interpret: bool = True):
+    """q [B, H, D]; cache: repro.models.attention.KVCache (int4 layout)."""
+    return kv4_decode_attention_kernel(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, kv_len,
+        s_chunk=s_chunk, interpret=interpret)

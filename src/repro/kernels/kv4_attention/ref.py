@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: dequantize the full cache, plain masked attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvquant import kv_dequantize
+
+
+def kv4_decode_attention_ref(q, k_packed, k_scales, v_packed, v_scales,
+                             kv_len):
+    b, h, d = q.shape
+    hkv = k_packed.shape[2]
+    k = kv_dequantize(k_packed, k_scales[..., :1], k_scales[..., 1:], 4,
+                      jnp.float32)                     # [B, S, Hkv, D]
+    v = kv_dequantize(v_packed, v_scales[..., :1], v_scales[..., 1:], 4,
+                      jnp.float32)
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) / (d ** 0.5)
+    mask = jnp.arange(k.shape[1])[None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v)

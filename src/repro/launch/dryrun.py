@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh (16x16 single-pod and 2x16x16 multi-pod),
+record memory_analysis / cost_analysis / collective schedule, and derive
+the three roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--quant] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config.model_config import SHAPES, QuantConfig   # noqa: E402
+from repro.config.registry import ASSIGNED_ARCHS, get_arch  # noqa: E402
+from repro.core.gptq import QuantizedLinear                 # noqa: E402
+from repro.distributed.sharding import (                    # noqa: E402
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.launch import roofline as rl                     # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import (                            # noqa: E402
+    make_functions,
+    model_flops_estimate,
+    quantized_leaf_pspecs,
+)
+from repro.utils.pytree import tree_map_with_path_names     # noqa: E402
+
+
+def _is_q(x):
+    return isinstance(x, QuantizedLinear)
+
+
+def _shardings_for(args_struct, mesh, shape_cfg, fsdp: bool):
+    """NamedSharding pytree for the step args (params/state/batch/caches)."""
+    import numpy as np
+
+    def params_shardings(p_struct):
+        # split quantized leaves from dense ones
+        dense_specs = param_pspecs(
+            jax.tree.map(lambda x: x, p_struct,
+                         is_leaf=_is_q),
+            mesh, fsdp=fsdp)
+
+        def merge(path, leaf):
+            if _is_q(leaf):
+                return quantized_leaf_pspecs(leaf, mesh)
+            return None  # filled from dense_specs below
+
+        # param_pspecs already handles dense leaves; for quantized leaves
+        # build field specs.
+        def spec_of(path, leaf):
+            if _is_q(leaf):
+                return quantized_leaf_pspecs(leaf, mesh)
+            return dense_leaf_spec(path, leaf)
+
+        from repro.distributed.sharding import _leaf_spec
+
+        def dense_leaf_spec(path, leaf):
+            return _leaf_spec(path, leaf, mesh, fsdp)
+
+        return tree_map_with_path_names(spec_of, p_struct)
+
+    # Walk the top-level args
+    def to_named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            tree, is_leaf=lambda x: isinstance(x, P))
+
+    out = []
+    for a in args_struct:
+        if isinstance(a, dict) and "tokens" in a:        # batch dict
+            spec = {}
+            for k, v in a.items():
+                spec[k] = batch_pspec(mesh, batch=v.shape[0])
+            out.append(to_named(spec))
+        elif isinstance(a, dict) and ("main" in a):       # caches
+            out.append(to_named(cache_pspecs(
+                a, mesh, batch=shape_cfg.global_batch)))
+        elif hasattr(a, "params"):                        # TrainState
+            pspec = params_shardings(a.params)
+            opt_spec = type(a.opt)(
+                step=P(),
+                mu=params_shardings(a.opt.mu),
+                nu=params_shardings(a.opt.nu),
+                master=params_shardings(a.opt.master),
+            )
+            err_spec = (params_shardings(a.err)
+                        if a.err is not None else None)
+            out.append(to_named(type(a)(params=pspec, opt=opt_spec,
+                                        err=err_spec)))
+        elif isinstance(a, dict) or _is_q(a) or (
+                hasattr(a, "shape") and len(getattr(a, "shape", ())) > 2):
+            # params dict (serve) or stray arrays
+            if isinstance(a, dict):
+                out.append(to_named(params_shardings(a)))
+            else:
+                out.append(to_named(batch_pspec(mesh, batch=a.shape[0])))
+        elif hasattr(a, "shape") and len(a.shape) == 2:   # tokens [B, S]
+            out.append(to_named(batch_pspec(mesh, batch=a.shape[0])))
+        elif hasattr(a, "shape") and len(a.shape) == 1:   # token [B]
+            out.append(to_named(P(("pod", "data")
+                                  if "pod" in mesh.axis_names else ("data",))
+                                if a.shape[0] >= mesh.devices.size //
+                                mesh.shape["model"] else P(None)))
+        else:
+            out.append(to_named(P()))
+    return tuple(out)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: bool,
+             fsdp: bool = True, out_dir: str = "experiments/dryrun",
+             microbatches: int = 1, remat: bool = True,
+             tag: str = "", ssm_chunk: int = 0) -> dict:
+    cfg = get_arch(arch)
+    if ssm_chunk and cfg.ssm is not None:
+        import dataclasses
+        cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm, chunk=ssm_chunk))
+    shape_cfg = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}" + (
+        "__quant" if quant else "") + (f"__{tag}" if tag else "")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell + ".json")
+
+    if shape_cfg.name == "long_500k" and not cfg.subquadratic:
+        rec = {"cell": cell, "status": "skipped",
+               "reason": "pure full-attention arch; 500k dense decode is "
+                         "outside the operating envelope (see DESIGN.md)"}
+        json.dump(rec, open(out_path, "w"), indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    fn, args_struct, donate = make_functions(
+        cfg, shape_cfg, quant=quant, microbatches=microbatches, remat=remat,
+        scan_unroll=False)
+    shardings = _shardings_for(args_struct, mesh, shape_cfg, fsdp)
+    build_t = time.time() - t0
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=shardings,
+                         donate_argnums=donate)
+        t0 = time.time()
+        lowered = jitted.lower(*args_struct)
+        lower_t = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_t = time.time() - t0
+
+    mem = rl.memory_summary(compiled)
+    roof = rl.analyze(
+        compiled,
+        model_flops_per_device=model_flops_estimate(cfg, shape_cfg, n_dev),
+        default_group=16)
+    analytic = (rl.serve_analytic(cfg, shape_cfg, n_dev, quant=quant)
+                if shape_cfg.kind != "train" else None)
+    rec = {
+        "cell": cell, "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "quant": quant, "fsdp": fsdp,
+        "microbatches": microbatches, "remat": remat,
+        "n_devices": int(n_dev),
+        "build_s": round(build_t, 2), "lower_s": round(lower_t, 2),
+        "compile_s": round(compile_t, 2),
+        "memory": mem, "roofline": roof.to_dict(),
+        "serve_analytic": analytic,
+    }
+    json.dump(rec, open(out_path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS) + ["llama1-7b"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="W(1+1)A(1x4) weights for serve cells")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPES:
+                quant = args.quant and SHAPES[shape].kind != "train"
+                cells.append((arch, shape, quant))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape,
+                      args.quant and SHAPES[args.shape].kind != "train"))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape, quant in cells:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            cell = f"{arch}__{shape}__{mesh_name}" + (
+                "__quant" if quant else "") + (
+                f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, cell + ".json")
+            if args.skip_existing and os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[skip] {cell}")
+                    continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=multi_pod, quant=quant,
+                               fsdp=not args.no_fsdp, out_dir=args.out,
+                               microbatches=args.microbatches,
+                               remat=not args.no_remat, tag=args.tag,
+                               ssm_chunk=args.ssm_chunk)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok]   {cell}: compile {rec['compile_s']}s "
+                          f"flops/dev {r['flops']:.3g} "
+                          f"hbm {r['bytes_hbm']:.3g} link {r['bytes_link']:.3g} "
+                          f"bottleneck={r['bottleneck']} "
+                          f"hbm_total {rec['memory']['total_hbm_bytes']/1e9:.2f}GB")
+                else:
+                    print(f"[skip] {cell}: {rec['reason']}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"[FAIL] {cell}: {e}")
+                traceback.print_exc()
+                json.dump({"cell": cell, "status": "fail", "error": str(e)},
+                          open(path, "w"), indent=1)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf probe: compile one cell and print the top collective/byte
+contributors (computation-aware, trip-count scaled) — the 'profile'
+for hypothesis-driven perf iteration on a dry-run-only target."""
+import argparse  # noqa: E402
+import re        # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.config.model_config import SHAPES              # noqa: E402
+from repro.config.registry import get_arch                # noqa: E402
+from repro.launch.dryrun import _shardings_for            # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.steps import make_functions             # noqa: E402
+from repro.utils import hlo_cost as H                     # noqa: E402
+
+
+def compile_cell(arch, shape_name, *, multi_pod=False, quant=False,
+                 fsdp=True, microbatches=1, **kw):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, donate = make_functions(cfg, shape, quant=quant,
+                                      microbatches=microbatches,
+                                      scan_unroll=False, **kw)
+    sh = _shardings_for(args, mesh, shape, fsdp)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=sh,
+                           donate_argnums=donate).lower(*args).compile()
+    return compiled
+
+
+def top_contributors(text, kind_filter=None, top=12):
+    comps = H.parse_hlo(text)
+    entry = comps.get("__entry__")
+    mult: dict[str, float] = {}
+
+    def visit(comp, times):
+        mult[comp.name] = mult.get(comp.name, 0.0) + times
+        for ins in comp.instrs:
+            if ins.kind == "while":
+                refs = dict(H._called_comps(ins))
+                b = comps.get(refs.get("body", ""))
+                c = comps.get(refs.get("condition", ""))
+                t = H._trip_count(c) if c else 1
+                if b:
+                    visit(b, times * t)
+                if c:
+                    visit(c, times * (t + 1))
+            else:
+                for _, cn in H._called_comps(ins):
+                    cc = comps.get(cn)
+                    if cc is not None and cc is not comp:
+                        visit(cc, times)
+
+    visit(entry, 1.0)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        times = mult.get(cname, 0.0)
+        if not times:
+            continue
+        for ins in comp.instrs:
+            is_coll = any(ins.kind == c or ins.kind == c + "-start"
+                          for c in H._COLLECTIVES)
+            if kind_filter == "collective" and not is_coll:
+                continue
+            if kind_filter == "bytes" and ins.kind in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "call"):
+                continue
+            nb = H._nbytes(ins.result_type)
+            for op in ins.operands:
+                oi = comp.by_name.get(op)
+                if oi is not None:
+                    nb += H._nbytes(oi.result_type)
+            meta = re.search(r'op_name="([^"]+)"', ins.raw)
+            rows.append((nb * times, times, ins.kind, ins.result_type[:48],
+                         (meta.group(1)[-72:] if meta else ""), cname[:28]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--kind", default="collective",
+                    choices=["collective", "bytes"])
+    args = ap.parse_args()
+    compiled = compile_cell(args.arch, args.shape, quant=args.quant,
+                            multi_pod=args.multi_pod,
+                            microbatches=args.microbatches)
+    text = compiled.as_text()
+    print(f"=== top {args.kind} contributors (bytes x trips) ===")
+    for nb, times, kind, rtype, op_name, comp in top_contributors(
+            text, args.kind):
+        print(f"{nb:12.4g}B x{times:6.0f} {kind:22s} {rtype:48s} {op_name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+
+XLA's ``cost_analysis()`` counts a while-loop (lax.scan) body ONCE, so
+scan-over-layers models under-report by ~L x.  We therefore derive
+FLOPs / HBM bytes / collective link bytes with a computation-aware HLO
+parser (`repro.utils.hlo_cost`) that scales loop bodies by their parsed
+trip counts.  Validated against a fully-unrolled lowering of
+qwen2-1.5b/train_4k: flops within 8%, bytes within 35%, identical
+collective kinds.  Shapes in the partitioned module are per-device, so
+all terms are per-device.  (The raw cost_analysis values are also
+recorded for reference.)
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.utils.hlo_cost import analyze_hlo
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_hbm: float
+    bytes_link: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPS (per device)
+    collective_counts: dict
+    collective_bytes_by_kind: dict
+    xla_flops_rolled: float      # raw cost_analysis (body counted once)
+    xla_bytes_rolled: float
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, *, model_flops_per_device: float,
+            default_group: int = 1, hlo_text: str | None = None) -> Roofline:
+    cost_xla = compiled.cost_analysis()
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze_hlo(text, default_group=default_group)
+    t_c = cost.flops / PEAK_FLOPS
+    t_m = cost.bytes_hbm / HBM_BW
+    t_l = cost.link_bytes / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        flops=cost.flops,
+        bytes_hbm=cost.bytes_hbm,
+        bytes_link=cost.link_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_l,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_device,
+        useful_ratio=(model_flops_per_device / cost.flops
+                      if cost.flops else 0.0),
+        collective_counts={k: int(v) for k, v in
+                           cost.collective_counts.items()},
+        collective_bytes_by_kind={k: float(v) for k, v in
+                                  cost.collective_bytes.items()},
+        xla_flops_rolled=float(cost_xla.get("flops", 0.0)),
+        xla_bytes_rolled=float(cost_xla.get("bytes accessed", 0.0)),
+    )
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[f] = int(getattr(ma, f, 0))
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out
+
+
+# ----------------------------------------------------------------------
+# Analytic serving roofline (kernel-level; decode/prefill)
+# ----------------------------------------------------------------------
+# The XLA dry-run lowering of the quantized path must MATERIALIZE the
+# dequantized weights in HBM (no cross-op VMEM residency), so its memory
+# term upper-bounds the real cost.  The Pallas kernels
+# (kernels/bwa_matvec, kernels/bwa_matmul) stream PACKED weights and
+# expand in VMEM; this analytic model gives the kernel-level terms both
+# for bf16 and W(1+1)A(1x4) weights, per device.
+
+def serve_analytic(cfg, shape, n_devices: int, *, quant: bool,
+                   n_tp: int = 16) -> dict:
+    """Per-device decode/prefill roofline terms from first principles.
+
+    Sharding-aware denominators: weights replicate across data (each
+    device reads its 1/TP shard per step); KV shards over data x
+    min(kv_heads, TP); activations shard over all devices."""
+    n_dp = max(n_devices // n_tp, 1)
+    n_active = cfg.active_param_count()
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_fc = max(n_active - emb, 0)
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.global_batch * shape.seq_len)
+
+    # weight traffic: every FC weight read once per step (decode) or
+    # ~once per GEMM at good tile reuse (prefill)
+    if quant:
+        # 1+1 bit planes + fp16 centers per (row, 128-group) + int8 ovh
+        w_bytes = n_fc * 2.125 / 8 + emb * 2
+    else:
+        w_bytes = n_fc * 2 + emb * 2
+    w_bytes /= n_tp
+
+    # kv cache traffic (decode reads the whole cache once per step)
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    kv_elems = (2 * cfg.n_layers * shape.global_batch * shape.seq_len
+                * cfg.n_kv_heads * hd) if hd else 0
+    kv_shards = n_dp * min(max(cfg.n_kv_heads, 1), n_tp)
+    if hd and (shape.kind == "prefill"
+               or (shape.kind == "decode" and not cfg.subquadratic)):
+        kv_bytes = kv_elems * (0.5 if quant else 2.0) / kv_shards
+    else:
+        kv_bytes = 0.0
+
+    act_bytes = tokens * cfg.d_model * cfg.n_layers * 4 * 2 / n_devices
+    flops = 2.0 * n_active * tokens / n_devices
+    t_mem = (w_bytes + kv_bytes + act_bytes) / HBM_BW
+    t_cmp = flops / PEAK_FLOPS
+    return {
+        "w_bytes": w_bytes, "kv_bytes": kv_bytes, "act_bytes": act_bytes,
+        "flops": flops, "t_memory": t_mem, "t_compute": t_cmp,
+        "t_total": max(t_mem, t_cmp),
+        "bottleneck": "memory" if t_mem > t_cmp else "compute",
+    }

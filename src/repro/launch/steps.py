@@ -1,0 +1,172 @@
+"""Step functions + ShapeDtypeStruct input builders for the dry-run and
+the real launchers.  No jax device state is touched at import time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ArchConfig, QuantConfig, ShapeConfig
+from repro.core.gptq import QuantizedLinear
+from repro.core.quantize_model import QUANT_LEAF_NAMES
+from repro.models.model import LanguageModel, build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import StepConfig, TrainState, init_train_state, make_train_step
+from repro.utils.pytree import tree_map_with_path_names
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+# ----------------------------------------------------------------------
+# structural W(1+1)A(1x4) quantization (shapes only, for the dry-run)
+# ----------------------------------------------------------------------
+
+def quantize_param_structs(params_struct, qcfg: QuantConfig):
+    """Replace quantizable weight leaves (by name) with QuantizedLinear
+    ShapeDtypeStruct pytrees — the serving artifact's exact layout."""
+    B = qcfg.group_size
+
+    def visit(path, leaf):
+        name = path.split("/")[-1]
+        in_blocks = ("/blocks/" in f"/{path}/" or "/tail/" in f"/{path}/"
+                     or "/encoder/" in f"/{path}/")
+        if name not in QUANT_LEAF_NAMES or not in_blocks or leaf.ndim < 3:
+            return leaf
+        *lead, c_in, c_out = leaf.shape
+        if c_in % B or c_in // B < 2:
+            return leaf
+        n_out_groups = min(qcfg.n_outlier_groups, c_in // B - 1)
+        K = n_out_groups * B
+        c_nrm = c_in - K
+        g_n = c_nrm // B
+        lead = tuple(lead)
+        return QuantizedLinear(
+            q_packed=sds(lead + (c_out, c_nrm // 32), jnp.uint32),
+            m_packed=sds(lead + (c_out, c_nrm // 32), jnp.uint32),
+            centers=sds(lead + (c_out, g_n, 4), jnp.float32),
+            w8=sds(lead + (c_out, K), jnp.int8),
+            w8_scale=sds(lead + (c_out, 1), jnp.float32),
+            perm=sds(lead + (c_in,), jnp.int32),
+            act_gamma=sds(lead + (4,), jnp.float32),
+            row_sum=sds(lead + (c_out,), jnp.float32),
+            bias=None,
+            group_size=B, c_in=c_in, c_out=c_out, n_outlier=K,
+        )
+
+    return tree_map_with_path_names(visit, params_struct)
+
+
+def quantized_leaf_pspecs(qspecs, mesh):
+    """Sharding for QuantizedLinear fields: C_out over 'model'
+    (column-parallel everywhere; baseline — see EXPERIMENTS §Perf)."""
+    from jax.sharding import PartitionSpec as P
+
+    def visit(path, leaf):
+        nd = leaf.ndim
+        name = path.split("/")[-1]
+        spec = [None] * nd
+        if name in ("q_packed", "m_packed", "w8", "w8_scale"):
+            spec[-2] = "model"
+        elif name == "centers":
+            spec[-3] = "model"
+        elif name in ("row_sum",):
+            spec[-1] = "model"
+        return P(*spec)
+
+    return tree_map_with_path_names(visit, qspecs)
+
+
+# ----------------------------------------------------------------------
+# input specs per (arch x shape)
+# ----------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    n_img = cfg.frontend.n_tokens if cfg.frontend.kind == "vision_patches" else 0
+    s_text = max(s - n_img, 1) if n_img else s
+    out = {"tokens": sds((b, s_text), jnp.int32),
+           "targets": sds((b, s_text), jnp.int32)}
+    if n_img:
+        out["frontend_emb"] = sds((b, n_img, cfg.frontend.feature_dim),
+                                  jnp.bfloat16)
+    if cfg.encoder_layers:
+        out["enc_frames"] = sds((b, cfg.encoder_seq,
+                                 cfg.frontend.feature_dim), jnp.bfloat16)
+    return out
+
+
+def make_functions(cfg: ArchConfig, shape: ShapeConfig, *,
+                   quant: bool = False, q_chunk: int = 512,
+                   microbatches: int = 1, remat: bool = True,
+                   compress_grads: bool = False, scan_unroll: bool = True):
+    """Returns (fn, arg_structs, donate) for the cell's step kind.
+
+    ``scan_unroll=True`` (dry-run default): XLA cost_analysis counts a
+    rolled scan body once, so roofline terms require unrolled layers.
+    """
+    model = build_model(cfg, q_chunk=q_chunk, scan_unroll=scan_unroll)
+    qcfg = QuantConfig()
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if quant:
+        serve_params = quantize_param_structs(params_struct, qcfg)
+    else:
+        serve_params = params_struct
+
+    if shape.kind == "train":
+        step_cfg = StepConfig(microbatches=microbatches, remat=remat,
+                              compress_grads=compress_grads,
+                              optimizer=AdamWConfig())
+        train_step = make_train_step(model, step_cfg)
+        state_struct = jax.eval_shape(
+            functools.partial(init_train_state, cfg=step_cfg), params_struct)
+        batch = batch_specs(cfg, shape)
+
+        def fn(state, batch):
+            return train_step(state, batch)
+
+        return fn, (state_struct, batch), (0,)
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape)
+        bs = {k: v for k, v in batch.items() if k != "targets"}
+        max_len = shape.seq_len + 128
+
+        def fn(params, tokens, extras):
+            return model.prefill(params, tokens, max_len=max_len, **extras)
+
+        extras = {k: v for k, v in bs.items() if k != "tokens"}
+        return fn, (serve_params, bs["tokens"], extras), ()
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    cache_struct = jax.eval_shape(
+        lambda: model.init_caches(batch=b, max_len=shape.seq_len + 128,
+                                  fill_len=shape.seq_len))
+    token = sds((b,), jnp.int32)
+    pos = sds((), jnp.int32)
+
+    def fn(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos)
+
+    return fn, (serve_params, token, cache_struct, pos), (2,)
+
+
+def model_flops_estimate(cfg: ArchConfig, shape: ShapeConfig,
+                         n_devices: int) -> float:
+    """MODEL_FLOPS per device: 6*N*D train / 2*N_active*D inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens / n_devices

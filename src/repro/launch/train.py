@@ -1,0 +1,67 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --tiny \
+        --steps 100 --batch 8 --seq 256 [--ckpt-dir checkpoints]
+
+``--tiny`` trains the reduced config (CPU-runnable); without it the full
+config is launched (real accelerators required).  Byte-level stdlib
+corpus; deterministic per-(seed, step) batches so restarts resume
+losslessly.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama1-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.config.registry import get_arch
+    from repro.configs.tiny import tiny_variant
+    from repro.data.corpus import load_corpus_text
+    from repro.data.loader import TokenStream
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.models.model import build_model
+    from repro.train.train_step import StepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_arch(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    toks = ByteTokenizer().encode(load_corpus_text(max_bytes=4 << 20))
+    toks = np.asarray(toks) % cfg.vocab_size
+    stream = TokenStream(toks, batch=args.batch, seq=args.seq,
+                         seed=args.seed)
+
+    tc = TrainerConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        step=StepConfig(microbatches=args.microbatches,
+                        compress_grads=args.compress_grads,
+                        total_steps=args.steps),
+    )
+    result = Trainer(model, params, tc, stream.batch_at).run()
+    print(f"done at step {result['final_step']}; "
+          f"final loss {result['history'][-1]['loss']:.4f}; "
+          f"stragglers flagged: {result['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

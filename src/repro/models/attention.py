@@ -1,0 +1,216 @@
+"""GQA attention: training/prefill (q-chunked, memory-efficient), decode
+with optional INT4-quantized KV cache, sliding-window (local) variant.
+
+Shapes: activations [B, S, D]; heads folded into projections.
+KV cache layouts:
+  full   : k/v [B, S_max, Hkv, Dh] (bf16) or packed int4 (+ scales)
+  window : ring buffer [B, W, Hkv, Dh] for local-attention layers
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvquant import kv_dequantize, kv_quantize
+from repro.core.quant_container import dot
+from repro.distributed.hints import hint
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """One layer's cache. For int4: k/v packed int8 nibbles + scales."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: jnp.ndarray | None   # (mu, z) stacked [..., 2] when quantized
+    v_scale: jnp.ndarray | None
+    length: jnp.ndarray           # [] int32 current fill
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  kv_bits: int, dtype=jnp.bfloat16) -> KVCache:
+    if kv_bits == 4:
+        k = jnp.zeros((batch, max_len, n_kv, head_dim // 2), jnp.int8)
+        v = jnp.zeros_like(k)
+        ks = jnp.zeros((batch, max_len, n_kv, 2), jnp.float32)
+        vs = jnp.zeros_like(ks)
+    else:
+        k = jnp.zeros((batch, max_len, n_kv, head_dim), dtype)
+        v = jnp.zeros_like(k)
+        ks = vs = None
+    return KVCache(k, v, ks, vs, jnp.zeros((), jnp.int32))
+
+
+def _store(cache: KVCache, k_new, v_new, pos, kv_bits: int) -> KVCache:
+    """Insert [B, T, Hkv, Dh] at positions [pos, pos+T)."""
+    if kv_bits == 4:
+        kp, kmu, kz = kv_quantize(k_new, 4)
+        vp, vmu, vz = kv_quantize(v_new, 4)
+        ks = jnp.concatenate([kmu, kz], axis=-1)
+        vs = jnp.concatenate([vmu, vz], axis=-1)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kp, pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vp, pos, axis=1)
+        kss = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos, axis=1)
+        vss = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos, axis=1)
+        return KVCache(k, v, kss, vss, cache.length + k_new.shape[1])
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    return KVCache(k, v, None, None, cache.length + k_new.shape[1])
+
+
+def _load(cache: KVCache, kv_bits: int, dtype):
+    if kv_bits == 4:
+        k = kv_dequantize(cache.k, cache.k_scale[..., :1], cache.k_scale[..., 1:],
+                          4, dtype)
+        v = kv_dequantize(cache.v, cache.v_scale[..., :1], cache.v_scale[..., 1:],
+                          4, dtype)
+        return k, v
+    return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, Hkv, D] -> [B, S, H, D] by group broadcast."""
+    b, s, hkv, d = k.shape
+    rep = n_heads // hkv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, d))
+    return k.reshape(b, s, n_heads, d)
+
+
+def attend_full(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0,
+                kv_len: jnp.ndarray | None = None, window: int = 0,
+                q_chunk: int = 1024):
+    """Memory-efficient attention: scan over q-chunks; scores [.., qc, S].
+
+    q [B, Sq, H, D]; k/v [B, Sk, H(kv expanded), D].
+    ``q_offset``: absolute position of q[0] (for causal masks in decode).
+    ``kv_len``: valid cache length (positions >= kv_len are masked).
+    ``window`` > 0: sliding-window (local) attention.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kv_pos = jnp.arange(sk)
+
+    def one_chunk(qc, qpos):
+        # qc [B, C, H, D]; qpos [C] absolute positions
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = jnp.ones((qc.shape[1], sk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            mask &= (kv_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+    if sq <= q_chunk:
+        qpos = q_offset + jnp.arange(sq)
+        return one_chunk(q, qpos).astype(q.dtype)
+
+    pad = (-sq) % q_chunk
+    if pad:  # ragged tail (e.g. whisper's 1500-frame encoder): pad+slice
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sq_p = sq + pad
+    n_chunks = sq_p // q_chunk
+    qs = q.reshape(b, n_chunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        qc, i = xs
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return carry, one_chunk(qc, qpos)
+
+    _, out = jax.lax.scan(body, 0, (qs, jnp.arange(n_chunks)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, d)
+    if pad:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def qkv_project(params: dict[str, Any], x: jnp.ndarray, n_heads: int,
+                n_kv: int, head_dim: int):
+    """Project to q/k/v heads (+ optional bias, e.g. qwen2)."""
+    q = dot(x, params["wq"])
+    k = dot(x, params["wk"])
+    v = dot(x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    b, s, _ = x.shape
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    return q, k, v
+
+
+def attention_block(params, x, *, n_heads, n_kv, head_dim, rope_theta,
+                    causal=True, window=0, positions=None, q_chunk=1024):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(k, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(v, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=causal, window=window, q_chunk=q_chunk)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, s, n_heads * head_dim), params["wo"])
+    return out, (k, v)
+
+
+def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
+                     head_dim, rope_theta, kv_bits, window=0):
+    """Single-token decode with (possibly int4) KV cache.
+
+    x [B, 1, D]; pos [] int32 absolute position. Returns (out, new_cache).
+    For ``window`` layers the cache is a ring buffer of size W.
+    """
+    b = x.shape[0]
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    if rope_theta:
+        p = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, p, rope_theta)
+        k = apply_rope(k, p, rope_theta)
+    if window:
+        slot = pos % cache.k.shape[1]
+        cache = _store(cache, k, v, slot, kv_bits)._replace(
+            length=jnp.minimum(pos + 1, cache.k.shape[1]))
+        kc, vc = _load(cache, kv_bits, x.dtype)
+        kv_len = cache.length
+        ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+        ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+        # ring buffer: every stored slot is within the window by
+        # construction; mask only unfilled slots.
+        out = attend_full(q, ke, ve, causal=False, kv_len=kv_len)
+    else:
+        cache = _store(cache, k, v, pos, kv_bits)
+        kc, vc = _load(cache, kv_bits, x.dtype)
+        ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+        ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+        out = attend_full(q, ke, ve, causal=True, q_offset=pos,
+                          kv_len=pos + 1)
+    out = dot(out.reshape(b, 1, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
+def cross_attention(params, x, enc_kv, *, n_heads, n_kv, head_dim):
+    """Decoder cross-attention to a precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    q = dot(x, params["wq"]).reshape(b, s, n_heads, head_dim)
+    k, v = enc_kv
+    ke = _expand_kv(k, n_heads)
+    ve = _expand_kv(v, n_heads)
+    out = attend_full(q, ke, ve, causal=False)
+    return dot(out.reshape(b, s, n_heads * head_dim), params["wo"])

@@ -1,0 +1,76 @@
+"""Shared layer primitives: norms, RoPE, MLPs, initializers.
+
+All matmuls route through repro.core.quant_container.dot so any weight
+may be a W(1+1)A(1x4) QuantizedLinear."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_container import dot
+
+
+def dense_init(rng, c_in: int, c_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(c_in, jnp.float32))
+    return (jax.random.normal(rng, (c_in, c_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x [B, S, H, D]; positions [B, S] (or [S])."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(dot(x, w_gate)) * dot(x, w_up)
+    return dot(h, w_down)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(dot(x, w1) + b1, approximate=True)
+    return dot(h, w2) + b2
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """Depthwise causal conv along time. x [B, S, C]; w [K, C].
+
+    If ``state`` [B, K-1, C] is given, runs in streaming mode and returns
+    (y, new_state); otherwise pads with zeros (train/prefill) and returns
+    (y, final_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)           # [B, S+K-1, C]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xx[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(state)
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,408 @@
+"""Public model API: ``build_model(cfg)`` -> LanguageModel with
+init / apply (train logits) / loss / prefill / decode_step / input_specs.
+
+Covers all assigned families: decoder-only LMs (dense / MoE / SSM /
+hybrid), enc-dec audio (whisper), and VLM/audio frontend stubs whose
+precomputed embeddings are extra inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.distributed.hints import hint
+from repro.models import attention as attn_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import layernorm, rmsnorm
+from repro.models.transformer import (
+    DecodeCtx,
+    apply_sublayer,
+    init_stack,
+    stack_counts,
+    sublayer_kinds,
+)
+
+
+class LanguageModel:
+    def __init__(self, cfg: ArchConfig, q_chunk: int = 512,
+                 loss_chunk: int = 512, kv_bits: int = 4,
+                 scan_unroll: int | bool = 1):
+        self.cfg = cfg
+        self.kinds = sublayer_kinds(cfg)
+        self.n_units, self.n_tail = stack_counts(cfg)
+        self.q_chunk = q_chunk
+        self.loss_chunk = loss_chunk
+        self.kv_bits = kv_bits
+        # full unroll for the dry-run: XLA cost_analysis counts a rolled
+        # while-loop body ONCE, so roofline terms need the real op count
+        self.scan_unroll = scan_unroll
+
+    def _scan(self, body, init, xs):
+        return jax.lax.scan(body, init, xs, unroll=self.scan_unroll)
+
+    # ---------------- init ----------------
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 8)
+        scale = 1.0 / np.sqrt(cfg.d_model)
+        params: dict[str, Any] = {
+            "embed": (jax.random.normal(
+                ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * scale
+            ).astype(dtype),
+            "blocks": init_stack(ks[1], cfg, self.n_units, self.kinds, dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if cfg.ffn_kind == FFNKind.GELU:
+            params["final_norm_b"] = jnp.zeros((cfg.d_model,), dtype)
+        if self.n_tail:
+            params["tail"] = init_stack(
+                ks[2], cfg, self.n_tail, self.kinds[: 1], dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                ks[3], (cfg.d_model, cfg.vocab_size), jnp.float32) * scale
+            ).astype(dtype)
+        if cfg.encoder_layers:
+            params["encoder"] = init_stack(
+                ks[4], cfg.replace(block_kind=BlockKind.ATTENTION),
+                cfg.encoder_layers, ["attention"], dtype)
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+            params["enc_final_norm_b"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.frontend.kind != "none" and cfg.frontend.feature_dim:
+            params["frontend_proj"] = (jax.random.normal(
+                ks[5], (cfg.frontend.feature_dim, cfg.d_model), jnp.float32)
+                * scale).astype(dtype)
+        return params
+
+    # ---------------- helpers ----------------
+
+    def _final_norm(self, params, x):
+        if self.cfg.ffn_kind == FFNKind.GELU:
+            return layernorm(x, params["final_norm"], params["final_norm_b"])
+        return rmsnorm(x, params["final_norm"], eps=self.cfg.rmsnorm_eps)
+
+    def _logits(self, params, x):
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        logits = (x @ head).astype(jnp.float32)
+        # vocab-parallel logits: [.., S, V] with V on 'model'
+        return hint(logits, *([None] * (logits.ndim - 1)), "model")
+
+    def _embed(self, params, tokens, frontend_emb=None):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if frontend_emb is not None and self.cfg.frontend.kind == "vision_patches":
+            fe = frontend_emb
+            if "frontend_proj" in params:
+                fe = fe @ params["frontend_proj"]
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        return x
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings [B, S_enc, feat]."""
+        cfg = self.cfg
+        x = frames
+        if "frontend_proj" in params:
+            x = x @ params["frontend_proj"]
+        x = x.astype(jnp.dtype(cfg.dtype))
+        x = _scan_encoder(cfg, params["encoder"], x, self.q_chunk,
+                          unroll=self.scan_unroll)
+        return layernorm(x, params["enc_final_norm"],
+                         params["enc_final_norm_b"])
+
+    # ---------------- train forward ----------------
+
+    def apply(self, params, tokens, frontend_emb=None, enc_frames=None,
+              remat: bool = False):
+        """Full causal forward -> logits [B, S_total, V] (fp32)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_emb)
+        enc_kv_stack = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, enc_frames)
+            enc_kv_stack = _encoder_kv(cfg, params["blocks"], enc_out)
+
+        def unit_fn(h, unit_params, enc_kv=None):
+            aux_total = 0.0
+            for si, kind in enumerate(self.kinds):
+                h, _, aux = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h, mode="train",
+                    enc_kv=enc_kv, q_chunk=self.q_chunk)
+                aux_total += aux
+            return h, aux_total
+
+        if remat:
+            unit_fn = jax.checkpoint(unit_fn)
+
+        def scan_body(h, xs):
+            if enc_kv_stack is not None:
+                unit_params, enc_kv = xs
+                h, aux = unit_fn(h, unit_params, enc_kv)
+            else:
+                h, aux = unit_fn(h, xs)
+            return h, aux
+
+        xs = (params["blocks"], enc_kv_stack) if enc_kv_stack is not None \
+            else params["blocks"]
+        x, auxs = self._scan(scan_body, x, xs)
+        if self.n_tail:
+            def tail_body(h, unit_params):
+                h, _, aux = apply_sublayer(
+                    cfg, self.kinds[0], unit_params["sub_0"], h, mode="train",
+                    q_chunk=self.q_chunk)
+                return h, aux
+            x, t_aux = self._scan(tail_body, x, params["tail"])
+            auxs = jnp.concatenate([jnp.atleast_1d(auxs),
+                                    jnp.atleast_1d(t_aux)])
+        x = self._final_norm(params, x)
+        return self._logits(params, x), jnp.sum(auxs)
+
+    def loss(self, params, tokens, targets, frontend_emb=None,
+             enc_frames=None, remat: bool = False,
+             aux_weight: float = 0.01):
+        """Chunked next-token CE (never materializes [B, S, V])."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_emb)
+        n_img = 0
+        if frontend_emb is not None and cfg.frontend.kind == "vision_patches":
+            n_img = frontend_emb.shape[1]
+        enc_kv_stack = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, enc_frames)
+            enc_kv_stack = _encoder_kv(cfg, params["blocks"], enc_out)
+
+        def unit_fn(h, unit_params, enc_kv=None):
+            aux_total = 0.0
+            for si, kind in enumerate(self.kinds):
+                h, _, aux = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h, mode="train",
+                    enc_kv=enc_kv, q_chunk=self.q_chunk)
+                aux_total += aux
+            return h, aux_total
+
+        if remat:
+            unit_fn = jax.checkpoint(unit_fn)
+
+        def scan_body(h, xs):
+            if enc_kv_stack is not None:
+                up, ekv = xs
+                return unit_fn(h, up, ekv)
+            return unit_fn(h, xs)
+
+        xs = (params["blocks"], enc_kv_stack) if enc_kv_stack is not None \
+            else params["blocks"]
+        x, auxs = self._scan(scan_body, x, xs)
+        if self.n_tail:
+            def tail_body(h, up):
+                h, _, aux = apply_sublayer(
+                    cfg, self.kinds[0], up["sub_0"], h, mode="train",
+                    q_chunk=self.q_chunk)
+                return h, aux
+            x, t_aux = self._scan(tail_body, x, params["tail"])
+            auxs = jnp.sum(auxs) + jnp.sum(t_aux)
+        x = self._final_norm(params, x)
+        if n_img:
+            x = x[:, n_img:]
+        ce = _chunked_ce(self, params, x, targets, self.loss_chunk)
+        return ce + aux_weight * jnp.sum(auxs)
+
+    # ---------------- prefill / decode ----------------
+
+    def prefill(self, params, tokens, max_len: int, frontend_emb=None,
+                enc_frames=None):
+        """Run the prompt; returns (last-token logits [B, V], caches)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_emb)
+        enc_kv_stack = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, enc_frames)
+            enc_kv_stack = _encoder_kv(cfg, params["blocks"], enc_out)
+
+        def scan_body(h, xs):
+            unit_params = xs[0] if enc_kv_stack is not None else xs
+            enc_kv = xs[1] if enc_kv_stack is not None else None
+            caches = {}
+            for si, kind in enumerate(self.kinds):
+                h, c, _ = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h, mode="prefill",
+                    enc_kv=enc_kv, q_chunk=self.q_chunk, max_len=max_len,
+                    kv_bits=self.kv_bits)
+                caches[f"sub_{si}"] = c
+            return h, caches
+
+        xs = (params["blocks"], enc_kv_stack) if enc_kv_stack is not None \
+            else params["blocks"]
+        x, caches = self._scan(scan_body, x, xs)
+        tail_caches = None
+        if self.n_tail:
+            def tail_body(h, up):
+                h, c, _ = apply_sublayer(
+                    cfg, self.kinds[0], up["sub_0"], h, mode="prefill",
+                    q_chunk=self.q_chunk, max_len=max_len,
+                    kv_bits=self.kv_bits)
+                return h, {"sub_0": c}
+            x, tail_caches = self._scan(tail_body, x, params["tail"])
+        x = self._final_norm(params, x[:, -1:])
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"main": caches, "tail": tail_caches}
+
+    def decode_step(self, params, token, caches, pos):
+        """One token. token [B] int32; pos [] int32 absolute position.
+        Returns (logits [B, V], new caches)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+        ctx = DecodeCtx(pos=pos)
+
+        def scan_body(h, xs):
+            unit_params, cache = xs
+            new_caches = {}
+            for si, kind in enumerate(self.kinds):
+                h, c, _ = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h, mode="decode",
+                    cache=cache[f"sub_{si}"], ctx=ctx, kv_bits=self.kv_bits)
+                new_caches[f"sub_{si}"] = c
+            return h, new_caches
+
+        x, new_main = self._scan(scan_body, x,
+                                 (params["blocks"], caches["main"]))
+        new_tail = None
+        if self.n_tail:
+            def tail_body(h, xs):
+                up, cache = xs
+                h, c, _ = apply_sublayer(
+                    cfg, self.kinds[0], up["sub_0"], h, mode="decode",
+                    cache=cache["sub_0"], ctx=ctx, kv_bits=self.kv_bits)
+                return h, {"sub_0": c}
+            x, new_tail = self._scan(tail_body, x,
+                                     (params["tail"], caches["tail"]))
+        x = self._final_norm(params, x)
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"main": new_main, "tail": new_tail}
+
+    # ---------------- decode-cache construction ----------------
+
+    def init_caches(self, batch: int, max_len: int, fill_len):
+        """Allocate decode caches as if ``fill_len`` tokens were prefilled
+        (used by the dry-run: ShapeDtypeStruct-compatible, no prefill
+        pass needed)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim if cfg.n_heads else 0
+
+        def one(kind):
+            if kind in ("attention", "crossdec"):
+                c = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                           hd, kv_bits=self.kv_bits)
+                c = c._replace(length=jnp.asarray(fill_len, jnp.int32))
+                if kind == "crossdec":
+                    enc = (jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                      hd), jnp.dtype(cfg.dtype)),
+                           jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                      hd), jnp.dtype(cfg.dtype)))
+                    return {"self": c, "enc": enc}
+                return c
+            if kind == "local":
+                c = attn_lib.init_kv_cache(batch, cfg.rglru.window,
+                                           cfg.n_kv_heads, hd,
+                                           kv_bits=self.kv_bits)
+                return c._replace(
+                    length=jnp.asarray(min(fill_len, cfg.rglru.window),
+                                       jnp.int32))
+            if kind == "ssm":
+                return ssm_lib.init_ssm_state(batch, cfg.ssm, cfg.d_model,
+                                              jnp.dtype(cfg.dtype))
+            if kind == "rglru":
+                return rglru_lib.init_rglru_state(batch, cfg.rglru,
+                                                  cfg.d_model,
+                                                  jnp.dtype(cfg.dtype))
+            raise ValueError(kind)
+
+        def stack(n, tree):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), tree)
+
+        main = {f"sub_{si}": stack(self.n_units, one(kind))
+                for si, kind in enumerate(self.kinds)}
+        tail = ({"sub_0": stack(self.n_tail, one(self.kinds[0]))}
+                if self.n_tail else None)
+        return {"main": main, "tail": tail}
+
+
+def _scan_encoder(cfg: ArchConfig, enc_params, x, q_chunk, unroll=1):
+    """Bidirectional encoder stack (whisper)."""
+    from repro.models.attention import attention_block
+
+    hd = cfg.resolved_head_dim
+
+    def body(h, unit):
+        sub = unit["sub_0"]
+        hn = layernorm(h, sub["norm1"], sub["norm1_b"])
+        mix, _ = attention_block(
+            sub["mix"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=hd, rope_theta=0.0, causal=False, q_chunk=q_chunk)
+        h = h + mix
+        from repro.models.layers import gelu_mlp
+        f = sub["ffn"]
+        hn2 = layernorm(h, sub["norm2"], sub["norm2_b"])
+        h = h + gelu_mlp(hn2, f["w1"], f["b1"], f["w2"], f["b2"])
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc_params, unroll=unroll)
+    return x
+
+
+def _encoder_kv(cfg: ArchConfig, blocks, enc_out):
+    """Per-decoder-layer cross K/V from encoder output (stacked)."""
+    hd = cfg.resolved_head_dim
+    cross = blocks["sub_0"]["cross"]
+    b, s, _ = enc_out.shape
+
+    from repro.core.quant_container import dot
+
+    def per_layer(wk, wv):
+        k = dot(enc_out, wk).reshape(b, s, cfg.n_kv_heads, hd)
+        v = dot(enc_out, wv).reshape(b, s, cfg.n_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(per_layer)(cross["wk"], cross["wv"])
+
+
+def _chunked_ce(model: LanguageModel, params, x, targets, chunk: int):
+    """Next-token CE over sequence chunks; logits never fully realized.
+
+    Each chunk is remat'ed so the [B, chunk, V] logits are recomputed in
+    the backward pass instead of being stored as scan residuals (without
+    this, large-vocab models hold n_chunks full logit blocks in HBM).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    @jax.checkpoint
+    def ce_of(xc, tc):
+        logits = model._logits(params, xc)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(tot, xs):
+        xc, tc = xs
+        return tot + ce_of(xc, tc), None
+
+    xm = x[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    tm = targets[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xm, tm),
+                            unroll=model.scan_unroll)
+    if rem:
+        total = total + ce_of(x[:, n * chunk:], targets[:, n * chunk:])
+    return total / (b * s)
+
+
+def build_model(cfg: ArchConfig, **kw) -> LanguageModel:
+    return LanguageModel(cfg, **kw)

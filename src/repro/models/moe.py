@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, sort-based
+dispatch (fixed shapes, jit/SPMD-safe), optional dense-residual branch
+(Snowflake-Arctic) / shared expert (Llama-4).
+
+Expert weights are stacked [E, ...] so expert-parallel sharding is a
+PartitionSpec on the leading axis; dispatch/combine lower to
+scatter/gather + all-to-all under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import MoEConfig
+from repro.core.quant_container import edot
+from repro.models.layers import swiglu
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+            capacity: int | None = None):
+    """x [B, S, D] -> [B, S, D].
+
+    params: router [D, E]; w_gate/w_up [E, D, F]; w_down [E, F, D];
+    optional dense branch dw_gate/dw_up [D, Fd], dw_down [Fd, D].
+    Dropped tokens (over capacity) contribute zero (standard GShard
+    behaviour); the residual stream carries them unchanged.
+    """
+    from repro.distributed.hints import hint
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    xt = hint(x.reshape(b * s, d), "batch", None)
+    t = b * s
+    cap = capacity or moe_capacity(t, cfg)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)       # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, k)                # [T, k]
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    eid = top_idx.reshape(-1)                                  # [T*k]
+    gw = top_vals.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    sorted_eid = eid[order]
+    counts = jnp.bincount(sorted_eid, length=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k) - offsets[sorted_eid]              # rank in expert
+    keep = pos < cap
+    dest_e = jnp.where(keep, sorted_eid, e)                    # trash row = e
+    dest_p = jnp.where(keep, pos, 0).astype(jnp.int32)
+    tok = order // k                                           # source token
+
+    # keep every token-indexed intermediate data-sharded AND in the
+    # compute dtype (without these hints GSPMD materializes REPLICATED
+    # [T_global*k, d] f32 tensors and all-reduces them — 58 GB/layer for
+    # arctic; see EXPERIMENTS §Perf)
+    cdt = x.dtype
+    rows = hint(jnp.take(xt, tok, axis=0).astype(cdt), "batch", None)
+    buf = jnp.zeros((e + 1, cap, d), cdt)
+    buf = buf.at[dest_e, dest_p].set(rows)
+    buf_e = hint(buf[:e], "model", None, None)
+
+    h = jax.nn.silu(edot("ecd,edf->ecf", buf_e, params["w_gate"])) \
+        * edot("ecd,edf->ecf", buf_e, params["w_up"])
+    out_e = edot("ecf,efd->ecd", h, params["w_down"]).astype(cdt)
+    out_e = hint(out_e, "model", None, None)
+
+    out_pad = jnp.concatenate(
+        [out_e, jnp.zeros((1, cap, d), cdt)], axis=0)
+    gathered = hint(out_pad[dest_e, dest_p], "batch", None)    # [T*k, d]
+    w_sorted = (gw[order] * keep).astype(cdt)
+    y = jax.ops.segment_sum(gathered * w_sorted[:, None], tok,
+                            num_segments=t).astype(cdt)
+    y = hint(y, "batch", None)
+
+    if "dw_gate" in params:  # dense residual / shared expert
+        y = y + swiglu(xt, params["dw_gate"], params["dw_up"],
+                       params["dw_down"]).astype(y.dtype)
+    return y.reshape(b, s, d).astype(x.dtype), logits
+
+
+def moe_aux_loss(router_logits: jnp.ndarray, cfg: MoEConfig) -> jnp.ndarray:
+    """Switch-style load-balancing loss: E * sum_e f_e * p_e."""
+    gates = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(gates, -1), cfg.num_experts)
+    f = jnp.mean(hard, axis=0)
+    p = jnp.mean(gates, axis=0)
+    return cfg.num_experts * jnp.sum(f * p)

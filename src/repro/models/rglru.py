@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                 (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(Lambda)      (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Linear-in-time via associative scan (train/prefill); O(1) decode step.
+The surrounding block is the Griffin recurrent block: two input linears
+(gate branch + recurrent branch), causal conv, RG-LRU, GeLU-gated merge,
+output linear.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import RGLRUConfig
+from repro.core.quant_container import dot
+from repro.models.layers import causal_conv1d
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray        # [B, W] recurrence state
+    conv: jnp.ndarray     # [B, K-1, W] conv ring
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ params["w_x"] + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r      # log(a_t) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_scan(params, x):
+    """x [B, S, W] -> (y [B, S, W], h_final [B, W]) via associative scan."""
+    a, b = _gates(params, x)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    ya, yb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    # h_t for h_0 = 0 is just yb
+    return yb.astype(x.dtype), yb[:, -1]
+
+
+def rglru_step(params, x, h):
+    """x [B, 1, W]; h [B, W] -> (y [B, 1, W], h_new)."""
+    a, b = _gates(params, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def griffin_recurrent_block(params, x, cfg: RGLRUConfig,
+                            state: RGLRUState | None = None,
+                            decode: bool = False):
+    """Full Griffin recurrent block. x [B, S, D] -> (y, new_state)."""
+    gate = jax.nn.gelu(dot(x, params["w_gate_in"]), approximate=True)
+    rec = dot(x, params["w_rec_in"])
+    conv_state = None if state is None else state.conv
+    rec, new_conv = causal_conv1d(rec, params["conv_w"], conv_state)
+    if decode:
+        assert state is not None
+        y, h_new = rglru_step(params, rec, state.h)
+    else:
+        y, h_new = rglru_scan(params, rec)
+    out = dot(y * gate, params["w_out"])
+    return out, RGLRUState(h_new.astype(jnp.float32), new_conv)
+
+
+def init_rglru_state(batch: int, cfg: RGLRUConfig, d_model: int,
+                     dtype=jnp.bfloat16) -> RGLRUState:
+    w = cfg.lru_width or d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    )

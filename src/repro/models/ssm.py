@@ -1,0 +1,166 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked algorithm (paper Listing 1) for train/prefill:
+  1. intra-chunk (quadratic within block, via the 1-semiseparable mask),
+  2. chunk states, 3. inter-chunk recurrence, 4. state->output.
+Decode is the O(1) recurrent step on the SSM state
+``h[t] = exp(dt*a) h[t-1] + dt * B[t] x[t]``, plus the conv ring state.
+
+B/C are shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import SSMConfig
+from repro.core.quant_container import dot
+from repro.distributed.hints import hint
+from repro.models.layers import causal_conv1d
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray          # [B, H, P, N] SSM state
+    conv: tuple             # (x, b, c) conv ring states [B, K-1, ch]
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """[..., L] -> [..., L, L] lower-triangular pairwise cumulative sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, b, c, chunk: int):
+    """SSD scan.  xh [B, L, H, P]; dt [B, L, H]; a_log [H];
+    b, c [B, L, N] (shared across heads).  Returns (y [B,L,H,P],
+    final_state [B,H,P,N])."""
+    B_, L, H, P = xh.shape
+    N = b.shape[-1]
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    nc = L // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # [H] negative
+    da = dt.astype(jnp.float32) * a[None, None, :]             # [B, L, H]
+
+    # chunked views
+    dac = da.reshape(B_, nc, chunk, H).transpose(0, 3, 1, 2)   # [B,H,c,Q]
+    dtc = dt.reshape(B_, nc, chunk, H).astype(jnp.float32)
+    xc = xh.reshape(B_, nc, chunk, H, P).astype(jnp.float32)
+    bc = b.reshape(B_, nc, chunk, N).astype(jnp.float32)
+    cc = c.reshape(B_, nc, chunk, N).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(dac, axis=-1)                           # [B,H,c,Q]
+
+    # 1) intra-chunk
+    Lmat = jnp.exp(_segsum(dac))                               # [B,H,c,Q,Q]
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckh,bckhp->bcqhp",
+                        cc, bc, Lmat, dtc, xc)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # [B,H,c,Q]
+    states = jnp.einsum("bckn,bhck,bckh,bckhp->bchpn",
+                        bc, decay_states, dtc, xc)             # [B,c,H,P,N]
+
+    # 3) inter-chunk recurrence over chunk boundaries (scan over c)
+    chunk_decay = jnp.exp(a_cum[..., -1])                      # [B,H,c]
+
+    def body(h, inp):
+        st, dec = inp                                          # [B,H,P,N],[B,H]
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                        # emit PREVIOUS
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                 # [c,B,H,P,N]
+    decay_t = chunk_decay.transpose(2, 0, 1)                   # [c,B,H]
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    h_final, prev_states = jax.lax.scan(body, h0, (states_t, decay_t))
+    prev = prev_states.transpose(1, 0, 2, 3, 4)                # [B,c,H,P,N]
+
+    # 4) contribution of carried-in state to each position
+    state_decay = jnp.exp(a_cum)                               # [B,H,c,Q]
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cc, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(B_, L, H, P)
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(h, xh, dt, a_log, b, c):
+    """One-token SSD update. xh [B,1,H,P]; dt [B,1,H]; b,c [B,1,N]."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt[:, 0].astype(jnp.float32) * a[None, :])    # [B,H]
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(jnp.float32),
+                     b[:, 0].astype(jnp.float32),
+                     xh[:, 0].astype(jnp.float32))
+    h_new = h * da[..., None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), h_new)
+    return y[:, None].astype(xh.dtype), h_new
+
+
+def _split_proj(cfg: SSMConfig, d_model: int):
+    d_inner = cfg.expand * d_model
+    n_heads = cfg.n_heads or d_inner // cfg.head_dim
+    # in_proj columns: [z, x, B, C, dt]
+    return d_inner, n_heads, (d_inner, d_inner, cfg.state_dim, cfg.state_dim,
+                              n_heads)
+
+
+def mamba2_block(params, x, cfg: SSMConfig, state: SSMState | None = None,
+                 decode: bool = False):
+    """Full Mamba-2 block: projections -> conv -> SSD -> gate -> out.
+
+    The z/x/(b,c,dt) projections are SEPARATE weights so each output
+    shards cleanly ('model' on d_inner; b/c/dt replicated) — a fused
+    in_proj splits a sharded feature axis at off-shard boundaries and
+    GSPMD falls back to token-replicated layouts (EXPERIMENTS §Perf).
+    Returns (y [B, S, D], new_state).
+    """
+    d_model = x.shape[-1]
+    d_inner, n_heads, _ = _split_proj(cfg, d_model)
+    n = cfg.state_dim
+    z = hint(dot(x, params["in_z"]), "batch", None, "model")
+    xc = hint(dot(x, params["in_x"]), "batch", None, "model")
+    bcdt = dot(x, params["in_bcdt"])                  # [B, S, 2N + H]
+    b, c, dt = (bcdt[..., :n], bcdt[..., n : 2 * n],
+                bcdt[..., 2 * n :])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    conv_state = None if state is None else state.conv
+    cs = (None, None, None) if conv_state is None else conv_state
+    xc, ring_x = causal_conv1d(xc, params["conv_w_x"], cs[0])
+    b, ring_b = causal_conv1d(b, params["conv_w_b"], cs[1])
+    c, ring_c = causal_conv1d(c, params["conv_w_c"], cs[2])
+    xc = hint(jax.nn.silu(xc), "batch", None, "model")
+    b = jax.nn.silu(b)
+    c = jax.nn.silu(c)
+
+    bsz, slen = x.shape[:2]
+    xh = hint(xc.reshape(bsz, slen, n_heads, cfg.head_dim),
+              "batch", None, "model", None)
+    dt = hint(dt, "batch", None, "model")
+    if decode:
+        assert state is not None and slen == 1
+        y, h_new = ssd_decode_step(state.h, xh, dt, params["a_log"], b, c)
+    else:
+        y, h_new = ssd_chunked(xh, dt, params["a_log"], b, c,
+                               min(cfg.chunk, slen))
+    y = hint(y.reshape(bsz, slen, d_inner), "batch", None, "model")
+    y = y + xc * params["d_skip"]                     # D (skip) term
+    y = y * jax.nn.silu(z)
+    out = dot(y, params["out_proj"])
+    return out, SSMState(h_new, (ring_x, ring_b, ring_c))
+
+
+def init_ssm_state(batch: int, cfg: SSMConfig, d_model: int,
+                   dtype=jnp.bfloat16) -> SSMState:
+    d_inner, n_heads, _ = _split_proj(cfg, d_model)
+    kw = cfg.conv_width - 1
+    return SSMState(
+        h=jnp.zeros((batch, n_heads, cfg.head_dim, cfg.state_dim),
+                    jnp.float32),
+        conv=(jnp.zeros((batch, kw, d_inner), dtype),
+              jnp.zeros((batch, kw, cfg.state_dim), dtype),
+              jnp.zeros((batch, kw, cfg.state_dim), dtype)),
+    )

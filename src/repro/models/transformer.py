@@ -1,0 +1,316 @@
+"""Model assembly: heterogeneous block stacks with scan-over-layers.
+
+A model is a stack of ``n_periods`` scan units; each unit applies
+``layer_period`` sub-layers (e.g. RecurrentGemma: RG-LRU, RG-LRU, local
+attention).  Remainder layers (n_layers % period) form a short tail
+stack.  Parameters are stored STACKED over the scan dim so the HLO stays
+small for 88-layer models and sharding specs are uniform.
+
+Sub-layer kinds: "attention" | "local" | "ssm" | "rglru" | "crossdec"
+(whisper decoder: self-attn + cross-attn).  Each sub-layer carries its
+pre-norm(s) and an optional FFN (swiglu / gelu / moe / none).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    dense_init,
+    gelu_mlp,
+    layernorm,
+    rmsnorm,
+    swiglu,
+)
+
+
+# --------------------------------------------------------------------------
+# Structure derivation
+# --------------------------------------------------------------------------
+
+def sublayer_kinds(cfg: ArchConfig) -> list[str]:
+    """Kinds of the sub-layers inside one scan unit."""
+    if cfg.block_kind == BlockKind.RGLRU:
+        assert cfg.rglru is not None
+        return [{"rglru": "rglru", "local": "local"}[p]
+                for p in cfg.rglru.block_pattern]
+    if cfg.block_kind == BlockKind.SSM:
+        return ["ssm"]
+    if cfg.encoder_layers:          # whisper decoder blocks
+        return ["crossdec"]
+    return ["attention"]
+
+
+def stack_counts(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_periods for the main scan, n_tail sub-layers)."""
+    period = len(sublayer_kinds(cfg))
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_attn(rng, cfg: ArchConfig, dtype, n: int):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _stacked(ks[0], n, d, cfg.n_heads * hd, dtype),
+        "wk": _stacked(ks[1], n, d, cfg.n_kv_heads * hd, dtype),
+        "wv": _stacked(ks[2], n, d, cfg.n_kv_heads * hd, dtype),
+        "wo": _stacked(ks[3], n, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, cfg.n_heads * hd), dtype)
+        p["bk"] = jnp.zeros((n, cfg.n_kv_heads * hd), dtype)
+        p["bv"] = jnp.zeros((n, cfg.n_kv_heads * hd), dtype)
+    return p
+
+
+def _init_cross(rng, cfg: ArchConfig, dtype, n: int):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": _stacked(ks[0], n, d, cfg.n_heads * hd, dtype),
+        "wk": _stacked(ks[1], n, d, cfg.n_kv_heads * hd, dtype),
+        "wv": _stacked(ks[2], n, d, cfg.n_kv_heads * hd, dtype),
+        "wo": _stacked(ks[3], n, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _stacked(rng, n, c_in, c_out, dtype):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(c_in, jnp.float32))
+    return (jax.random.normal(rng, (n, c_in, c_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def _init_ffn(rng, cfg: ArchConfig, dtype, n: int):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.ffn_kind == FFNKind.SWIGLU:
+        ks = jax.random.split(rng, 3)
+        return {
+            "w_gate": _stacked(ks[0], n, d, ff, dtype),
+            "w_up": _stacked(ks[1], n, d, ff, dtype),
+            "w_down": _stacked(ks[2], n, ff, d, dtype),
+        }
+    if cfg.ffn_kind == FFNKind.GELU:
+        ks = jax.random.split(rng, 2)
+        return {
+            "w1": _stacked(ks[0], n, d, ff, dtype),
+            "b1": jnp.zeros((n, ff), dtype),
+            "w2": _stacked(ks[1], n, ff, d, dtype),
+            "b2": jnp.zeros((n, d), dtype),
+        }
+    if cfg.ffn_kind == FFNKind.MOE:
+        m = cfg.moe
+        ks = jax.random.split(rng, 7)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+        p = {
+            "router": (jax.random.normal(ks[0], (n, d, m.num_experts),
+                                         jnp.float32) * scale).astype(dtype),
+            "w_gate": _stacked_e(ks[1], n, m.num_experts, d, ff, dtype),
+            "w_up": _stacked_e(ks[2], n, m.num_experts, d, ff, dtype),
+            "w_down": _stacked_e(ks[3], n, m.num_experts, ff, d, dtype),
+        }
+        if m.d_ff_dense:
+            p["dw_gate"] = _stacked(ks[4], n, d, m.d_ff_dense, dtype)
+            p["dw_up"] = _stacked(ks[5], n, d, m.d_ff_dense, dtype)
+            p["dw_down"] = _stacked(ks[6], n, m.d_ff_dense, d, dtype)
+        return p
+    return {}
+
+
+def _stacked_e(rng, n, e, c_in, c_out, dtype):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(c_in, jnp.float32))
+    return (jax.random.normal(rng, (n, e, c_in, c_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def _init_ssm(rng, cfg: ArchConfig, dtype, n: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = s.n_heads or d_inner // s.head_dim
+    ks = jax.random.split(rng, 7)
+    return {
+        # z / x / (b,c,dt) projections kept SEPARATE for clean sharding
+        "in_z": _stacked(ks[0], n, d, d_inner, dtype),
+        "in_x": _stacked(ks[1], n, d, d_inner, dtype),
+        "in_bcdt": _stacked(ks[2], n, d, 2 * s.state_dim + n_heads, dtype),
+        "out_proj": _stacked(ks[3], n, d_inner, d, dtype),
+        "conv_w_x": (jax.random.normal(ks[4], (n, s.conv_width, d_inner),
+                                       jnp.float32) * 0.1).astype(dtype),
+        "conv_w_b": (jax.random.normal(ks[5], (n, s.conv_width, s.state_dim),
+                                       jnp.float32) * 0.1).astype(dtype),
+        "conv_w_c": (jax.random.normal(ks[6], (n, s.conv_width, s.state_dim),
+                                       jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((n, n_heads), jnp.float32),
+        "dt_bias": jnp.zeros((n, n_heads), jnp.float32),
+        "d_skip": jnp.ones((n, 1), jnp.float32) * 0.0,
+    }
+
+
+def _init_rglru(rng, cfg: ArchConfig, dtype, n: int):
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_gate_in": _stacked(ks[0], n, d, w, dtype),
+        "w_rec_in": _stacked(ks[1], n, d, w, dtype),
+        "w_out": _stacked(ks[2], n, w, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (n, g.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[4], (n, w, w), jnp.float32)
+                / jnp.sqrt(float(w))).astype(jnp.float32),
+        "b_a": jnp.zeros((n, w), jnp.float32),
+        "w_x": (jax.random.normal(ks[5], (n, w, w), jnp.float32)
+                / jnp.sqrt(float(w))).astype(jnp.float32),
+        "b_x": jnp.zeros((n, w), jnp.float32),
+        "lam": jnp.ones((n, w), jnp.float32) * 0.5,
+    }
+
+
+_SUB_INIT = {
+    "attention": _init_attn,
+    "local": _init_attn,
+    "crossdec": _init_attn,
+    "ssm": _init_ssm,
+    "rglru": _init_rglru,
+}
+
+
+def init_stack(rng, cfg: ArchConfig, n_units: int, kinds: list[str], dtype):
+    """One stacked param dict for a scan of ``n_units`` periods."""
+    params: dict[str, Any] = {}
+    for si, kind in enumerate(kinds):
+        rng, k1, k2, k3 = jax.random.split(rng, 4)
+        sub = {"norm1": jnp.ones((n_units, cfg.d_model), dtype),
+               "mix": _SUB_INIT[kind](k1, cfg, dtype, n_units)}
+        if kind == "crossdec":
+            sub["cross"] = _init_cross(k2, cfg, dtype, n_units)
+            sub["norm_cross"] = jnp.ones((n_units, cfg.d_model), dtype)
+            sub["norm_cross_b"] = jnp.zeros((n_units, cfg.d_model), dtype)
+        if kind != "ssm" and cfg.ffn_kind != FFNKind.NONE:
+            sub["norm2"] = jnp.ones((n_units, cfg.d_model), dtype)
+            sub["ffn"] = _init_ffn(k3, cfg, dtype, n_units)
+            if cfg.ffn_kind == FFNKind.GELU:
+                sub["norm2_b"] = jnp.zeros((n_units, cfg.d_model), dtype)
+        if cfg.ffn_kind == FFNKind.GELU:
+            sub["norm1_b"] = jnp.zeros((n_units, cfg.d_model), dtype)
+        params[f"sub_{si}"] = sub
+    return params
+
+
+# --------------------------------------------------------------------------
+# Sub-layer application
+# --------------------------------------------------------------------------
+
+class DecodeCtx(NamedTuple):
+    pos: jnp.ndarray          # absolute position (scalar int32)
+
+
+def _norm(cfg, x, g, b=None):
+    if cfg.ffn_kind == FFNKind.GELU:   # whisper: LayerNorm
+        return layernorm(x, g, b if b is not None else jnp.zeros_like(g))
+    return rmsnorm(x, g, eps=cfg.rmsnorm_eps)
+
+
+def _apply_ffn(cfg: ArchConfig, sub, x):
+    """Returns (y, aux_loss)."""
+    if "ffn" not in sub:
+        return None, 0.0
+    f = sub["ffn"]
+    if cfg.ffn_kind == FFNKind.SWIGLU:
+        return swiglu(x, f["w_gate"], f["w_up"], f["w_down"]), 0.0
+    if cfg.ffn_kind == FFNKind.GELU:
+        return gelu_mlp(x, f["w1"], f["b1"], f["w2"], f["b2"]), 0.0
+    if cfg.ffn_kind == FFNKind.MOE:
+        y, router_logits = moe_lib.moe_ffn(f, x, cfg.moe)
+        aux = moe_lib.moe_aux_loss(
+            router_logits.reshape(-1, cfg.moe.num_experts), cfg.moe)
+        return y, aux
+    raise ValueError(cfg.ffn_kind)
+
+
+def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
+                   cache=None, ctx: DecodeCtx | None = None,
+                   enc_kv=None, q_chunk: int = 512,
+                   max_len: int | None = None, kv_bits: int = 4):
+    """mode in {train, prefill, decode}. Returns (x, new_cache, aux)."""
+    h = _norm(cfg, x, sub["norm1"], sub.get("norm1_b"))
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    new_cache = cache
+    window = cfg.rglru.window if (kind == "local" and cfg.rglru) else 0
+
+    if kind in ("attention", "local", "crossdec"):
+        akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                   rope_theta=cfg.rope_theta)
+        self_cache = cache["self"] if kind == "crossdec" and cache else cache
+        if kind == "crossdec" and cache:
+            enc_kv = cache["enc"]
+        if mode == "decode":
+            mix, new_self = attn.attention_decode(
+                sub["mix"], h, self_cache, ctx.pos, kv_bits=kv_bits,
+                window=window, **akw)
+        else:
+            mix, kv = attn.attention_block(
+                sub["mix"], h, causal=True, window=window, q_chunk=q_chunk,
+                **akw)
+            if mode == "prefill":
+                new_self = _fill_cache(cfg, kv, window, max_len, kv_bits)
+        if mode in ("prefill", "decode"):
+            new_cache = ({"self": new_self, "enc": enc_kv}
+                         if kind == "crossdec" else new_self)
+    elif kind == "ssm":
+        mix, st = ssm_lib.mamba2_block(
+            sub["mix"], h, cfg.ssm, state=cache if mode == "decode" else None,
+            decode=(mode == "decode"))
+        new_cache = st if mode in ("prefill", "decode") else None
+    elif kind == "rglru":
+        mix, st = rglru_lib.griffin_recurrent_block(
+            sub["mix"], h, cfg.rglru,
+            state=cache if mode == "decode" else None,
+            decode=(mode == "decode"))
+        new_cache = st if mode in ("prefill", "decode") else None
+    else:
+        raise ValueError(kind)
+
+    x = x + mix.astype(x.dtype)
+    if kind == "crossdec":
+        hc = _norm(cfg, x, sub["norm_cross"], sub.get("norm_cross_b"))
+        x = x + attn.cross_attention(
+            sub["cross"], hc, enc_kv, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=hd).astype(x.dtype)
+
+    y, aux = _apply_ffn(
+        cfg, sub, _norm(cfg, x, sub.get("norm2", sub["norm1"]),
+                        sub.get("norm2_b")))
+    if y is not None:
+        x = x + y.astype(x.dtype)
+    return x, new_cache, aux
+
+
+def _fill_cache(cfg: ArchConfig, kv, window: int, max_len: int | None,
+                kv_bits: int = 4):
+    """Build a decode cache from prefill K/V [B, S, Hkv, Dh] (int4)."""
+    k, v = kv
+    b, s, hkv, hd = k.shape
+    max_len = window if window else (max_len or cfg.max_seq_len)
+    cache = attn.init_kv_cache(b, max_len, hkv, hd, kv_bits=kv_bits)
+    if window:
+        keep = min(window, s)
+        k, v = k[:, -keep:], v[:, -keep:]
+        cache = attn._store(cache, k, v, 0, kv_bits)
+        return cache._replace(length=jnp.asarray(keep, jnp.int32))
+    return attn._store(cache, k, v, 0, kv_bits)

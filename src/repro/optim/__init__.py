@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    compress_decompress_int8,
+    init_error_feedback,
+)

@@ -1,0 +1,5 @@
+from repro.quant.baselines import (
+    FakeQuantLinear,
+    BASELINES,
+    quantize_model_baseline,
+)

@@ -1,0 +1,242 @@
+"""Baseline PTQ methods the paper compares against (Tables 1/2/7/8).
+
+All baselines produce a `FakeQuantLinear` per layer: weights stored
+already-dequantized (accuracy-exact simulation of the integer pipeline),
+activations quantized dynamically per token at dot() time, with optional
+QuaRot rotation and Atom-style INT8 outlier channels.
+
+  rtn-wXaY     : group RTN weights + per-token RTN acts
+  gptq-wXaY    : + GPTQ column compensation (Hessian from calibration)
+  quarot-wXaY  : randomized-Hadamard rotation, then RTN (QuaRot-lite)
+  atom-wXaY    : act-scale reorder + 128 INT8 outlier channels + GPTQ
+  billm-a16    : magnitude-split 1+1-bit binarization, fp16 acts
+                 (BiLLM-lite)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import QuantConfig
+from repro.core.em import rtn_grid_centers
+from repro.core.gptq import _cholesky_inv_upper, _quantize_block_columns
+from repro.quant.hadamard import rotation
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w_hat", "rot", "outlier_mask"),
+    meta_fields=("act_bits", "act_outlier_bits"),
+)
+@dataclass
+class FakeQuantLinear:
+    """Dequantized-weight stand-in with runtime activation quantization."""
+
+    w_hat: jnp.ndarray              # [in, out] (rotation folded in)
+    rot: jnp.ndarray | None         # [in, in] applied to x first
+    outlier_mask: jnp.ndarray | None  # [in] {0,1} channels kept at 8 bit
+    act_bits: int = 4
+    act_outlier_bits: int = 8
+
+
+def _masked_rtn(x, bits, mask=None):
+    """Per-token asym RTN over the last axis, restricted to mask==0."""
+    xf = x.astype(jnp.float32)
+    if mask is None:
+        lo = jnp.min(xf, -1, keepdims=True)
+        hi = jnp.max(xf, -1, keepdims=True)
+    else:
+        big = jnp.float32(3e38)
+        lo = jnp.min(jnp.where(mask, big, xf), -1, keepdims=True)
+        hi = jnp.max(jnp.where(mask, -big, xf), -1, keepdims=True)
+    levels = 2.0**bits - 1
+    mu = jnp.maximum((hi - lo) / levels, 1e-8)
+    q = jnp.clip(jnp.round((xf - lo) / mu), 0, levels)
+    return q * mu + lo
+
+
+def fq_dot(x: jnp.ndarray, f: FakeQuantLinear) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if f.rot is not None:
+        xf = xf @ f.rot
+    if f.act_bits < 16:
+        if f.outlier_mask is not None:
+            m = f.outlier_mask.astype(bool)
+            x_n = _masked_rtn(xf, f.act_bits, m)
+            x_o = _masked_rtn(xf, f.act_outlier_bits)
+            xf = jnp.where(m, x_o, x_n)
+        else:
+            xf = _masked_rtn(xf, f.act_bits)
+    return (xf @ f.w_hat).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# weight quantizers (operate on w [C_out, C_in] like core.gptq)
+# ----------------------------------------------------------------------
+
+def _grid_quant_block(wb, bits):
+    """Per-(row, block) RTN grid fake-quant. wb [R, B]."""
+    c = rtn_grid_centers(wb, k=2**bits)
+    d = jnp.abs(wb[..., None] - c[..., None, :])
+    idx = jnp.argmin(d, -1)
+    return jnp.take_along_axis(c, idx, -1)
+
+
+def rtn_weight(w, bits, group):
+    c_out, c_in = w.shape
+    wb = w.reshape(c_out, c_in // group, group)
+    out = jax.vmap(_grid_quant_block, in_axes=(1, None), out_axes=1)(wb, bits)
+    return out.reshape(c_out, c_in)
+
+
+def gptq_weight(w, x, bits, group, damp=0.01):
+    """GPTQ with an RTN grid per (row, group)."""
+    w = jnp.asarray(w, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    c_out, c_in = w.shape
+    h = 2.0 * (x.T @ x)
+    h = h + (damp * jnp.mean(jnp.diag(h)) + 1e-8) * jnp.eye(c_in)
+    _, hc = _cholesky_inv_upper(h)
+    wq = jnp.zeros_like(w)
+    for g0 in range(0, c_in, group):
+        sl = slice(g0, g0 + group)
+        wb = w[:, sl]
+        centers = rtn_grid_centers(wb, k=2**bits)
+        idx, errs = _quantize_block_columns(wb, centers, hc[sl, sl],
+                                            2**bits, True)
+        wq = wq.at[:, sl].set(jnp.take_along_axis(centers, idx.astype(
+            jnp.int32), -1))
+        mask = (jnp.arange(c_in) >= g0 + group).astype(w.dtype)
+        w = w - errs @ (hc[sl, :] * mask[None, :])
+        w = w.at[:, sl].set(wb)  # keep original block for reporting
+    return wq
+
+
+def billm_weight(w, hinv_diag=None, group=128):
+    """BiLLM-lite: per-(row, group) magnitude split into salient /
+    non-salient halves, each binarized to +-mean|w| (1+1 bits)."""
+    c_out, c_in = w.shape
+    g = max(c_in // group, 1)
+    wb = w.reshape(c_out, g, -1)
+    mag = jnp.abs(wb)
+    thresh = jnp.median(mag, axis=-1, keepdims=True)
+    hi = mag >= thresh
+    alpha_hi = jnp.sum(mag * hi, -1, keepdims=True) / jnp.maximum(
+        jnp.sum(hi, -1, keepdims=True), 1)
+    alpha_lo = jnp.sum(mag * (~hi), -1, keepdims=True) / jnp.maximum(
+        jnp.sum(~hi, -1, keepdims=True), 1)
+    alpha = jnp.where(hi, alpha_hi, alpha_lo)
+    return (jnp.sign(wb) * alpha).reshape(c_out, c_in)
+
+
+# ----------------------------------------------------------------------
+# per-leaf quantizers (plug into quantize_model_sequential)
+# ----------------------------------------------------------------------
+
+def _acts_concat(acts_list):
+    return jnp.asarray(np.concatenate(acts_list, axis=0), jnp.float32)
+
+
+def _leafq(fn):
+    """Adapt a [C_out, C_in]-convention quantizer to model leaves, which
+    are stored [in, out] (or experts [E, in, out])."""
+    def wrap(w, acts_list, qcfg):
+        if w.ndim == 2:
+            return fn(jnp.asarray(w, jnp.float32).T, acts_list, qcfg)
+        x_e = jnp.asarray(np.concatenate(acts_list, axis=1), jnp.float32)
+        outs = [fn(jnp.asarray(w[i], jnp.float32).T,
+                   [np.asarray(x_e[i])], qcfg) for i in range(w.shape[0])]
+        return FakeQuantLinear(
+            w_hat=jnp.stack([o.w_hat for o in outs]),
+            rot=None if outs[0].rot is None else jnp.stack(
+                [o.rot for o in outs]),
+            outlier_mask=None if outs[0].outlier_mask is None else jnp.stack(
+                [o.outlier_mask for o in outs]),
+            act_bits=outs[0].act_bits,
+            act_outlier_bits=outs[0].act_outlier_bits)
+    return wrap
+
+
+def make_rtn(wbits, abits):
+    @_leafq
+    def q(w, acts, qcfg):
+        wq = rtn_weight(w, wbits, qcfg.group_size)
+        return FakeQuantLinear(wq.T, None, None, act_bits=abits)
+    return q
+
+
+def make_gptq(wbits, abits):
+    @_leafq
+    def q(w, acts, qcfg):
+        x = _acts_concat(acts)
+        wq = gptq_weight(w, x, wbits, qcfg.group_size, qcfg.hessian_damp)
+        return FakeQuantLinear(wq.T, None, None, act_bits=abits)
+    return q
+
+
+def make_quarot(wbits, abits, seed=0):
+    @_leafq
+    def q(w, acts, qcfg):
+        c_in = w.shape[1]
+        rot = jnp.asarray(rotation(c_in, seed))
+        w_rot = w @ rot                       # W' = W R ; x' = x R
+        wq = rtn_weight(w_rot, wbits, qcfg.group_size)
+        return FakeQuantLinear(wq.T, rot, None, act_bits=abits)
+    return q
+
+
+def make_atom(wbits, abits):
+    @_leafq
+    def q(w, acts, qcfg):
+        x = _acts_concat(acts)
+        scale = jnp.mean(x * x, axis=0)
+        k = min(qcfg.group_size, w.shape[1] // 2)
+        thresh = jnp.sort(scale)[-k]
+        mask = (scale >= thresh).astype(jnp.float32)
+        wq = gptq_weight(w, x, wbits, qcfg.group_size, qcfg.hessian_damp)
+        # outlier channels' weights kept at 8 bit
+        w8 = rtn_weight(w, 8, qcfg.group_size)
+        w_mix = wq * (1 - mask)[None, :] + w8 * mask[None, :]
+        return FakeQuantLinear(w_mix.T, None, mask, act_bits=abits)
+    return q
+
+
+def make_billm():
+    @_leafq
+    def q(w, acts, qcfg):
+        wq = billm_weight(w, group=qcfg.group_size)
+        return FakeQuantLinear(wq.T, None, None, act_bits=16)
+    return q
+
+
+def make_billm_a4():
+    @_leafq
+    def q(w, acts, qcfg):
+        wq = billm_weight(w, group=qcfg.group_size)
+        return FakeQuantLinear(wq.T, None, None, act_bits=4)
+    return q
+
+
+BASELINES = {
+    "rtn-w4a4": make_rtn(4, 4),
+    "rtn-w2a4": make_rtn(2, 4),
+    "gptq-w2a4": make_gptq(2, 4),
+    "quarot-w2a4": make_quarot(2, 4),
+    "quarot-w4a4": make_quarot(4, 4),
+    "atom-w2a4": make_atom(2, 4),
+    "atom-w4a4": make_atom(4, 4),
+    "billm-a16": make_billm(),
+    "billm-a4": make_billm_a4(),
+}
+
+
+def quantize_model_baseline(model, params, calib_tokens, qcfg: QuantConfig,
+                            method: str, **kw):
+    from repro.core.quantize_model import quantize_model_sequential
+    return quantize_model_sequential(
+        model, params, calib_tokens, qcfg,
+        leaf_quantizer=BASELINES[method], **kw)

@@ -1,0 +1,30 @@
+"""Randomized orthogonal rotations (QuaRot-style outlier smoothing)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester Hadamard (n must be a power of 2), normalized."""
+    assert n & (n - 1) == 0, f"{n} not a power of two"
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+def random_orthogonal(n: int, seed: int = 0) -> np.ndarray:
+    """QR-based random rotation for non-power-of-two dims."""
+    rng = np.random.default_rng(seed)
+    q, r = np.linalg.qr(rng.normal(size=(n, n)))
+    q *= np.sign(np.diag(r))
+    return q.astype(np.float32)
+
+
+def rotation(n: int, seed: int = 0) -> np.ndarray:
+    """Randomized Hadamard (D*H) when possible, else random orthogonal."""
+    if n & (n - 1) == 0:
+        rng = np.random.default_rng(seed)
+        d = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+        return hadamard_matrix(n) * d[:, None]
+    return random_orthogonal(n, seed)

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request
+from repro.serve.sampler import sample_token

@@ -1,0 +1,17 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(rng, logits: jnp.ndarray, temperature: float = 0.0,
+                 top_k: int = 0) -> jnp.ndarray:
+    """logits [B, V] -> token ids [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

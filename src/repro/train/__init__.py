@@ -1,0 +1,2 @@
+from repro.train.train_step import make_train_step, TrainState
+from repro.train.trainer import Trainer, TrainerConfig

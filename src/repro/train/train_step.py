@@ -1,0 +1,94 @@
+"""The jit-able train step: loss -> grad -> (optional int8 compression)
+-> AdamW, with microbatch gradient accumulation and remat.
+
+``make_train_step(model, cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for jax.jit with
+donate_argnums=(0,).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.grad_compress import compress_decompress_int8, init_error_feedback
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1          # gradient accumulation
+    remat: bool = True
+    compress_grads: bool = False   # int8 + error feedback
+    aux_weight: float = 0.01
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    err: Any | None                # error-feedback buffers (or None)
+
+
+def init_train_state(params, cfg: StepConfig) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        err=init_error_feedback(params) if cfg.compress_grads else None,
+    )
+
+
+def make_train_step(model, cfg: StepConfig):
+    def loss_fn(params, tokens, targets, extras):
+        return model.loss(params, tokens, targets, remat=cfg.remat,
+                          aux_weight=cfg.aux_weight, **extras)
+
+    def grads_of(params, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        extras = {k: v for k, v in batch.items()
+                  if k in ("frontend_emb", "enc_frames")}
+        if cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, tokens, targets, extras)
+
+        mb = cfg.microbatches
+        b = tokens.shape[0]
+        assert b % mb == 0
+
+        def split(x):
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        mtk, mtg = split(tokens), split(targets)
+        mex = {k: split(v) for k, v in extras.items()}
+
+        def body(carry, xs):
+            loss_acc, g_acc = carry
+            tk, tg = xs[0], xs[1]
+            ex = {k: xs[2 + i] for i, k in enumerate(sorted(mex))}
+            l, g = jax.value_and_grad(loss_fn)(params, tk, tg, ex)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype),
+                                 g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (mtk, mtg) + tuple(mex[k] for k in sorted(mex))
+        (loss, g), _ = jax.lax.scan(body, (jnp.zeros(()), g0), xs)
+        return loss / mb, jax.tree.map(lambda x: x / mb, g)
+
+    def step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        err = state.err
+        if cfg.compress_grads:
+            grads, err = compress_decompress_int8(grads, err)
+        lr_scale = cosine_schedule(state.opt.step, warmup=cfg.warmup_steps,
+                                   total=cfg.total_steps)
+        params, opt, metrics = adamw_update(grads, state.opt, cfg.optimizer,
+                                            lr_scale)
+        metrics["loss"] = loss
+        return TrainState(params, opt, err), metrics
+
+    return step

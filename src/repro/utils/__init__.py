@@ -1,0 +1,6 @@
+from repro.utils.pytree import (
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_names,
+    named_leaves,
+)

@@ -1,0 +1,130 @@
+"""HLO-text analysis: collective-bytes extraction for the roofline.
+
+``compiled.cost_analysis()`` reports per-device FLOPs and bytes but NOT
+collective traffic; we parse the (optimized) HLO text and sum the operand
+sizes of every collective op.  Replica-group-aware: an all-gather over a
+16-way group moves (g-1)/g of the gathered bytes across links per device
+(ring); an all-reduce moves 2*(g-1)/g of the reduced bytes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of one HLO shape string like 'bf16[16,128]{1,0}'."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_shapes(line: str) -> list[str]:
+    """Shape strings on the LHS of an HLO instruction line."""
+    # e.g.  %ar = (f32[128]{0}, f32[64]{0}) all-reduce(...)
+    #       %ag = bf16[4,128]{1,0} all-gather(...)
+    lhs = line.split("=", 1)[0] if "=" in line else ""
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    # take the type annotation right after '='
+    m = re.match(r"\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", rhs)
+    if not m:
+        return []
+    t = m.group(1)
+    if t.startswith("("):
+        return re.findall(r"[a-z0-9]+\[[0-9,]*\]", t)
+    return re.findall(r"[a-z0-9]+\[[0-9,]*\]", t)[:1]
+
+
+def _group_size(line: str, default: int) -> int:
+    """Size of the replica groups participating in this collective."""
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota form [n,g]
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device link traffic (bytes) attributed to each collective kind."""
+
+    counts: dict = field(default_factory=dict)
+    bytes_by_kind: dict = field(default_factory=dict)
+    link_bytes: float = 0.0  # ring-model per-device bytes over ICI
+    raw_bytes: float = 0.0   # sum of payload sizes (no ring factor)
+
+    def add(self, kind: str, payload: float, group: int) -> None:
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        if group <= 1:
+            factor = 0.0
+        elif kind == "all-reduce":
+            factor = 2.0 * (group - 1) / group
+        elif kind in ("all-gather", "reduce-scatter"):
+            # payload = full (gathered/pre-reduced) size; ring moves
+            # (g-1)/g of it per device.
+            factor = (group - 1) / group
+        elif kind == "all-to-all":
+            factor = (group - 1) / group
+        else:  # collective-permute: one hop
+            factor = 1.0
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + payload * factor
+        self.link_bytes += payload * factor
+        self.raw_bytes += payload
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    """Parse optimized HLO text and account collective traffic.
+
+    Uses result shapes (the gathered / reduced tensor), skipping `-start`/
+    `-done` duplicate pairs (we count `-start`; `-done` has the same shape).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("ROOT tuple"):
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # match " all-reduce(" or " all-reduce-start(" on the RHS
+            if re.search(rf"(?<![\w-]){c}(-start)?\(", s):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if re.search(rf"{kind}-done\(", s):
+            continue  # counted at -start
+        payload = sum(_shape_bytes(sh) for sh in _result_shapes(s))
+        group = _group_size(s, default_group)
+        stats.add(kind, payload, group)
+    return stats

@@ -1,0 +1,310 @@
+"""Computation-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so scan-over
+-layers models report ~1/L of their real FLOPs.  This parser walks the
+optimized (partitioned) HLO text, builds the call graph (entry -> fusion
+/ call / while-body computations), extracts scan trip counts from the
+loop-condition compare constants, and accumulates
+
+  - dot FLOPs (2 * prod(output dims) * contraction size)
+  - HBM bytes (operands + results of top-level ops; fusion internals are
+    VMEM-resident and excluded)
+  - collective link bytes (ring model, replica-group aware)
+
+each scaled by the computation's total call multiplicity.  Shapes in the
+partitioned module are PER-DEVICE, so all results are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    kind: str
+    result_type: str
+    operands: list[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line or line.startswith(
+                ("ENTRY", "%"))):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, rtype, kind, rest = m.groups()
+            ops = _operand_names(rest)
+            ins = Instr(name, kind, rtype, ops, line)
+            cur.instrs.append(ins)
+            cur.by_name[name] = ins
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are up to the matching close paren; names start with %
+    depth = 1
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    for m in re.finditer(r"%?([\w\.\-]+)", token):
+        out.append(m.group(1))
+    return out
+
+
+def _called_comps(ins: Instr) -> list[str]:
+    """Computations referenced via to_apply/calls/body/condition."""
+    out = []
+    for key in ("to_apply", "body", "condition", "true_computation",
+                "false_computation", "called_computations"):
+        for m in re.finditer(rf"{key}=%?([\w\.\-]+)", ins.raw):
+            out.append((key, m.group(1)))
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+    if m:
+        out.append(("calls", m.group(1)))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Extract N from the loop condition.
+
+    The compare is often outlined into a wrapped computation, so the
+    robust signal is the bound constant materialized in the condition
+    body (scan lowers to `iv < N`): take the max integer constant."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.kind == "compare":
+            pass
+        m = re.search(r"constant\((\d+)\)", ins.raw)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comps, comp: Computation) -> float:
+    """2 * prod(result dims) * contraction size for dot ops."""
+    shapes = _shape_list(ins.result_type)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    # contraction size from the lhs operand's shape
+    k = 1
+    lhs = ins.operands[0] if ins.operands else None
+    lhs_ins = comp.by_name.get(lhs)
+    if lhs_ins is not None:
+        ls = _shape_list(lhs_ins.result_type)
+        if ls:
+            _, ldims = ls[0]
+            for c in cdims:
+                if c < len(ldims):
+                    k *= ldims[c]
+    else:
+        k = 1
+    return 2.0 * out_elems * max(k, 1)
+
+
+def _group_size(raw: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", raw)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    link_bytes: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+    collective_bytes: dict = field(default_factory=dict)
+    dot_flops_by_comp: dict = field(default_factory=dict)
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> HloCost:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloCost()
+
+    # computation multiplicities via DFS from entry
+    mult: dict[str, float] = {}
+
+    def visit(comp: Computation, times: float):
+        mult[comp.name] = mult.get(comp.name, 0.0) + times
+        for ins in comp.instrs:
+            if ins.kind == "while":
+                refs = dict(_called_comps(ins))
+                body = comps.get(refs.get("body", ""))
+                cond = comps.get(refs.get("condition", ""))
+                trips = _trip_count(cond) if cond else 1
+                if body:
+                    visit(body, times * trips)
+                if cond:
+                    visit(cond, times * (trips + 1))
+            else:
+                for key, cname in _called_comps(ins):
+                    c = comps.get(cname)
+                    if c is not None and c is not comp:
+                        visit(c, times)
+
+    visit(entry, 1.0)
+
+    cost = HloCost()
+    fusion_comps = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.kind == "fusion":
+                for _, cname in _called_comps(ins):
+                    fusion_comps.add(cname)
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        times = mult.get(cname, 0.0)
+        if times <= 0:
+            continue
+        in_fusion = cname in fusion_comps
+        comp_flops = 0.0
+        for ins in comp.instrs:
+            if ins.kind in ("dot", "dot-general") or ins.kind.startswith(
+                    "dot"):
+                comp_flops += _dot_flops(ins, comps, comp)
+            if ins.kind == "convolution":
+                comp_flops += _conv_flops(ins, comp)
+            if not in_fusion and ins.kind not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "fusion", "call"):
+                nb = _nbytes(ins.result_type)
+                for op in ins.operands:
+                    oi = comp.by_name.get(op)
+                    if oi is not None:
+                        nb += _nbytes(oi.result_type)
+                cost.bytes_hbm += nb * times
+            if not in_fusion and ins.kind == "fusion":
+                nb = _nbytes(ins.result_type)
+                for op in ins.operands:
+                    oi = comp.by_name.get(op)
+                    if oi is not None:
+                        nb += _nbytes(oi.result_type)
+                cost.bytes_hbm += nb * times
+            for c in _COLLECTIVES:
+                if ins.kind == c or ins.kind == c + "-start":
+                    payload = _nbytes(ins.result_type)
+                    g = _group_size(ins.raw, default_group)
+                    if g <= 1:
+                        factor = 0.0
+                    elif c == "all-reduce":
+                        factor = 2.0 * (g - 1) / g
+                    elif c == "collective-permute":
+                        factor = 1.0
+                    else:
+                        factor = (g - 1) / g
+                    cost.link_bytes += payload * factor * times
+                    cost.collective_counts[c] = (
+                        cost.collective_counts.get(c, 0) + times)
+                    cost.collective_bytes[c] = (
+                        cost.collective_bytes.get(c, 0.0)
+                        + payload * factor * times)
+                    break
+        if comp_flops:
+            cost.flops += comp_flops * times
+            cost.dot_flops_by_comp[cname] = comp_flops * times
+    return cost
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    shapes = _shape_list(ins.result_type)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    # approximate: 2 * out * kernel_elems (kernel from operand 1)
+    k = 1
+    if len(ins.operands) > 1:
+        oi = comp.by_name.get(ins.operands[1])
+        if oi is not None:
+            ks = _shape_list(oi.result_type)
+            if ks:
+                for d in ks[0][1][:-1]:
+                    k *= d
+    return 2.0 * out_elems * k

@@ -1,0 +1,292 @@
+"""Unit tests for the paper's core quantization pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.model_config import QuantConfig
+from repro.core.act_decompose import (
+    balance_plane_scales,
+    dequant_from_planes,
+    fake_quant_act_1x4,
+    quantize_act_int4_planes,
+)
+from repro.core.bwa_linear import (
+    bwa_apply_planes,
+    bwa_apply_ref,
+    dequantize_weight,
+)
+from repro.core.em import em_fit, rtn_grid_centers
+from repro.core.gptq import quantize_linear
+from repro.core.kvquant import kv_dequantize, kv_quantize
+from repro.core.packing import (
+    pack_bits_u32,
+    pack_int4_pairs,
+    unpack_bits_u32,
+    unpack_int4_pairs,
+)
+from repro.core.rtn import rtn_dequantize, rtn_fake_quant, rtn_quantize
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestRTN:
+    def test_roundtrip_bounds(self):
+        x = jnp.asarray(_rng().normal(size=(8, 64)).astype(np.float32))
+        xq, mu, z = rtn_quantize(x, 4)
+        assert xq.min() >= 0 and xq.max() <= 15
+        xhat = rtn_dequantize(xq, mu, z)
+        # max error bounded by mu/2 per element
+        assert float(jnp.max(jnp.abs(x - xhat))) <= float(jnp.max(mu)) * 0.51
+
+    def test_8bit_tighter_than_4bit(self):
+        x = jnp.asarray(_rng(1).normal(size=(4, 128)).astype(np.float32))
+        e4 = float(jnp.mean((x - rtn_fake_quant(x, 4)) ** 2))
+        e8 = float(jnp.mean((x - rtn_fake_quant(x, 8)) ** 2))
+        assert e8 < e4 / 10
+
+    def test_constant_row_safe(self):
+        x = jnp.ones((2, 16), jnp.float32) * 3.0
+        xhat = rtn_fake_quant(x, 4)
+        assert np.allclose(np.asarray(xhat), 3.0, atol=1e-3)
+
+
+class TestPacking:
+    def test_bits_roundtrip(self):
+        bits = jnp.asarray(_rng(2).integers(0, 2, size=(5, 96)), jnp.int8)
+        packed = pack_bits_u32(bits)
+        assert packed.shape == (5, 3) and packed.dtype == jnp.uint32
+        out = unpack_bits_u32(packed)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+    def test_int4_roundtrip(self):
+        x = jnp.asarray(_rng(3).integers(0, 16, size=(4, 32)), jnp.int32)
+        out = unpack_int4_pairs(pack_int4_pairs(x))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+class TestActDecompose:
+    def test_planes_exact_decomposition(self):
+        """Eq. (4): the 1x4 plane recomposition equals plain INT4 dequant."""
+        x = jnp.asarray(_rng(4).normal(size=(16, 256)).astype(np.float32))
+        planes, mu, z = quantize_act_int4_planes(x)
+        xq, mu2, z2 = rtn_quantize(x, 4)
+        direct = rtn_dequantize(xq, mu2, z2)
+        via_planes = dequant_from_planes(planes, mu, z)
+        np.testing.assert_allclose(
+            np.asarray(via_planes), np.asarray(direct), rtol=0, atol=1e-5)
+
+    def test_balancing_reduces_error(self):
+        """Appendix A: balanced plane scales lower the L1/L2 error."""
+        x = jnp.asarray(
+            _rng(5).standard_t(df=4, size=(256, 128)).astype(np.float32))
+        gamma = balance_plane_scales(x)
+        base = fake_quant_act_1x4(x, None)
+        bal = fake_quant_act_1x4(x, gamma)
+        e_base = float(jnp.mean(jnp.abs(x - base)))
+        e_bal = float(jnp.mean(jnp.abs(x - bal)))
+        assert e_bal <= e_base * 1.0001
+        assert gamma.shape == (4,)
+
+    def test_gamma_near_one(self):
+        x = jnp.asarray(_rng(6).normal(size=(64, 64)).astype(np.float32))
+        gamma = np.asarray(balance_plane_scales(x))
+        assert np.all(np.abs(gamma - 1.0) < 0.5)
+
+
+class TestEM:
+    def test_perfect_clusters_recovered(self):
+        true = np.array([-2.0, -0.5, 0.7, 3.0], np.float32)
+        idx = _rng(7).integers(0, 4, size=(6, 128))
+        w = jnp.asarray(true[idx] + _rng(8).normal(size=idx.shape) * 1e-3,
+                        jnp.float32)
+        c = em_fit(w, jnp.ones((128,)), k=4, iters=25)
+        np.testing.assert_allclose(np.asarray(c), np.tile(true, (6, 1)),
+                                   atol=1e-3)
+
+    def test_em_beats_rtn_grid(self):
+        """Minimum-distance quantization < RTN grid in weighted MSE."""
+        w = jnp.asarray(
+            np.concatenate([
+                _rng(9).normal(-1, 0.05, size=(16, 100)),
+                _rng(10).normal(2, 0.05, size=(16, 28)),
+            ], axis=1).astype(np.float32))
+        h = jnp.ones((128,))
+        for k in (2, 4):
+            c_em = em_fit(w, h, k=k, iters=30)
+            c_rtn = rtn_grid_centers(w, k=k)
+
+            def mse(c):
+                d = jnp.min((w[..., None] - c[:, None, :]) ** 2, axis=-1)
+                return float(jnp.mean(d))
+
+            assert mse(c_em) < mse(c_rtn)
+
+    def test_hessian_weighting_prioritizes(self):
+        """High-importance elements get lower reconstruction error."""
+        w = jnp.asarray(_rng(11).normal(size=(8, 64)).astype(np.float32))
+        imp = jnp.ones((64,)).at[:8].set(100.0)
+        c = em_fit(w, imp, k=4, iters=30)
+        cu = em_fit(w, jnp.ones((64,)), k=4, iters=30)
+        def err_on(cols, c_):
+            d = jnp.min((w[:, cols, None] - c_[:, None, :]) ** 2, axis=-1)
+            return float(jnp.mean(d))
+        assert err_on(slice(0, 8), c) <= err_on(slice(0, 8), cu) + 1e-6
+
+
+def _quant_setup(seed=0, c_out=96, c_in=128, T=256, **cfg_kw):
+    rng = _rng(seed)
+    kw = dict(group_size=32, n_outlier_groups=1, em_iters=12)
+    kw.update(cfg_kw)
+    cfg = QuantConfig(**kw)
+    # correlated activations with a couple of outlier channels
+    base = rng.normal(size=(T, c_in)).astype(np.float32)
+    base[:, -3:] *= 8.0
+    mix = rng.normal(size=(c_in, c_in)).astype(np.float32) * 0.1
+    x = base + base @ mix
+    w = rng.normal(size=(c_out, c_in)).astype(np.float32) / np.sqrt(c_in)
+    return cfg, jnp.asarray(w), jnp.asarray(x)
+
+
+class TestQuantizeLinear:
+    def test_shapes_and_dtypes(self):
+        cfg, w, x = _quant_setup()
+        q = quantize_linear(w, x, cfg)
+        assert q.q_packed.shape == (96, (128 - 32) // 32)
+        assert q.q_packed.dtype == jnp.uint32
+        assert q.centers.shape == (96, 3, 4)
+        assert q.w8.shape == (96, 32)
+        assert q.perm.shape == (128,)
+        # centers sorted ascending
+        c = np.asarray(q.centers)
+        assert np.all(np.diff(c, axis=-1) >= -1e-6)
+
+    def test_outliers_are_high_scale_channels(self):
+        cfg, w, x = _quant_setup()
+        q = quantize_linear(w, x, cfg)
+        scale = np.mean(np.asarray(x) ** 2, axis=0)
+        outlier_ch = np.asarray(q.perm)[-32:]
+        # the 3 manually-boosted channels must be in the outlier block
+        assert {125, 126, 127} <= set(outlier_ch.tolist())
+        assert np.min(scale[outlier_ch]) >= np.median(scale)
+
+    def test_weight_reconstruction_reasonable(self):
+        # Without GPTQ compensation the dequantized weights approximate W
+        # directly (Lloyd-Max 2-bit on ~Gaussian -> rel err ~0.34); WITH
+        # compensation weight-space error grows by design (it minimizes
+        # OUTPUT error instead) — check both directions.
+        cfg, w, x = _quant_setup(use_gptq=False)
+        q = quantize_linear(w, x, cfg)
+        w_hat = dequantize_weight(q, original_order=True)
+        rel = float(jnp.linalg.norm(w - w_hat) / jnp.linalg.norm(w))
+        assert rel < 0.4  # 2-bit weights: coarse but sane
+
+        cfg_g, _, _ = _quant_setup()
+        qg = quantize_linear(w, x, cfg_g)
+        y = x @ w.T
+        err_plain = float(jnp.linalg.norm(
+            bwa_apply_ref(q, x, quantize_acts=False) - y))
+        err_gptq = float(jnp.linalg.norm(
+            bwa_apply_ref(qg, x, quantize_acts=False) - y))
+        assert err_gptq < err_plain  # compensation must help output error
+
+    def test_full_method_beats_rtn_on_output_error(self):
+        """End metric the paper optimizes: ||WX - What Xhat||."""
+        cfg, w, x = _quant_setup(T=512)
+        y_ref = x @ w.T
+
+        def out_err(**kw):
+            c = QuantConfig(group_size=32, n_outlier_groups=1, em_iters=12,
+                            **kw)
+            q = quantize_linear(w, x, c)
+            y = bwa_apply_ref(q, x)
+            return float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+
+        full = out_err()
+        no_em = out_err(use_em=False)
+        no_fine = out_err(use_fine_grained=False)
+        no_gptq = out_err(use_gptq=False)
+        assert full < no_em
+        assert full < no_fine
+        assert full <= no_gptq * 1.05
+        assert full < 0.2
+
+    def test_planes_path_matches_ref(self):
+        """Eq. (5)-(7) integer restructure == oracle (the core identity)."""
+        cfg, w, x = _quant_setup()
+        q = quantize_linear(w, x, cfg)
+        xs = x[:17]
+        y_ref = bwa_apply_ref(q, xs)
+        y_pl = bwa_apply_planes(q, xs)
+        np.testing.assert_allclose(
+            np.asarray(y_pl), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+    def test_no_outlier_groups(self):
+        cfg, w, x = _quant_setup(n_outlier_groups=0)
+        q = quantize_linear(w, x, cfg)
+        assert q.n_outlier == 0 and q.w8.shape == (96, 0)
+        y = bwa_apply_ref(q, x[:4])
+        assert y.shape == (4, 96)
+        np.testing.assert_allclose(
+            np.asarray(bwa_apply_planes(q, x[:4])), np.asarray(y),
+            rtol=2e-4, atol=2e-4)
+
+    def test_bias_applied(self):
+        cfg, w, x = _quant_setup()
+        b = jnp.arange(96, dtype=jnp.float32)
+        q = quantize_linear(w, x, cfg, bias=b)
+        y0 = bwa_apply_ref(quantize_linear(w, x, cfg), x[:2])
+        y1 = bwa_apply_ref(q, x[:2])
+        np.testing.assert_allclose(np.asarray(y1 - y0), np.tile(np.arange(96), (2, 1)),
+                                   atol=1e-3)
+
+
+class TestKVQuant:
+    def test_roundtrip_error_small(self):
+        kv = jnp.asarray(_rng(12).normal(size=(2, 8, 4, 64)).astype(np.float32))
+        p, mu, z = kv_quantize(kv, 4)
+        assert p.shape == (2, 8, 4, 32) and p.dtype == jnp.int8
+        back = kv_dequantize(p, mu, z, 4, dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(kv - back)))
+        assert err <= float(jnp.max(mu)) * 0.51
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
+
+
+class TestAppendixB:
+    def test_alpha_beta_recovery_from_centers(self):
+        """Appendix B Eq. (12): each fine group's two EM centers convert
+        exactly to an INT1 (alpha, beta) affine form."""
+        cfg, w, x = _quant_setup()
+        q = quantize_linear(w, x, cfg)
+        c = np.asarray(q.centers)                     # [R, G, 4] sorted
+        for s in (0, 1):
+            lo, hi = c[..., 2 * s], c[..., 2 * s + 1]
+            alpha = (hi - lo) / 2.0
+            beta = (hi + lo) / 2.0
+            np.testing.assert_allclose(beta + alpha, hi, rtol=1e-5,
+                                       atol=1e-6)
+            np.testing.assert_allclose(beta - alpha, lo, rtol=1e-5,
+                                       atol=1e-6)
+            assert np.all(alpha >= -1e-7)             # centers sorted
+
+    def test_em_centers_equal_spacing_within_group(self):
+        """The two centers of one fine group span an INT1 grid — i.e. the
+        dequantized values are {beta - alpha, beta + alpha}, never more."""
+        cfg, w, x = _quant_setup()
+        q = quantize_linear(w, x, cfg)
+        from repro.core.bwa_linear import dequantize_weight, _unpacked_bits
+        w_hat = np.asarray(dequantize_weight(q))[:, : q.c_norm]
+        qb, mb = (np.asarray(a) for a in _unpacked_bits(q))
+        c = np.asarray(q.centers)
+        B = q.group_size
+        for r in (0, 3):
+            for i in range(q.c_norm):
+                g = i // B
+                idx = 2 * mb[r, i] + qb[r, i]
+                np.testing.assert_allclose(w_hat[r, i], c[r, g, idx],
+                                           rtol=1e-6)

@@ -1,0 +1,68 @@
+"""Kernel-vs-oracle tests for the INT4-KV flash-decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvquant import kv_quantize
+from repro.kernels.kv4_attention.kernel import kv4_decode_attention_kernel
+from repro.kernels.kv4_attention.ops import kv4_decode_attention
+from repro.kernels.kv4_attention.ref import kv4_decode_attention_ref
+from repro.models.attention import KVCache
+
+
+def _setup(seed, b, s_max, h, hkv, d):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s_max, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s_max, hkv, d)).astype(np.float32))
+    kp, kmu, kz = kv_quantize(k, 4)
+    vp, vmu, vz = kv_quantize(v, 4)
+    ks = jnp.concatenate([kmu, kz], -1)
+    vs = jnp.concatenate([vmu, vz], -1)
+    return q, kp, ks, vp, vs
+
+
+@pytest.mark.parametrize("b,s_max,h,hkv,d,kv_len,s_chunk", [
+    (2, 256, 4, 2, 32, 256, 64),     # full cache
+    (2, 256, 4, 2, 32, 100, 64),     # partial fill crossing a chunk
+    (1, 512, 8, 1, 64, 333, 128),    # MQA
+    (3, 128, 4, 4, 32, 1, 128),      # single valid token, one chunk
+])
+def test_matches_ref(b, s_max, h, hkv, d, kv_len, s_chunk):
+    q, kp, ks, vp, vs = _setup(0, b, s_max, h, hkv, d)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    got = kv4_decode_attention_kernel(q, kp, ks, vp, vs, kv_len,
+                                      s_chunk=s_chunk)
+    want = kv4_decode_attention_ref(q, kp, ks, vp, vs, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cache_wrapper():
+    q, kp, ks, vp, vs = _setup(1, 2, 128, 4, 2, 32)
+    cache = KVCache(kp, vp, ks, vs, jnp.asarray(77, jnp.int32))
+    got = kv4_decode_attention(q, cache, cache.length, s_chunk=64)
+    want = kv4_decode_attention_ref(q, kp, ks, vp, vs, 77)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_invariant_under_padding_garbage():
+    """Positions >= kv_len must not affect the output."""
+    q, kp, ks, vp, vs = _setup(2, 1, 128, 4, 2, 32)
+    out1 = kv4_decode_attention_kernel(q, kp, ks, vp, vs,
+                                       jnp.asarray(50, jnp.int32),
+                                       s_chunk=64)
+    # trash the tail of the cache
+    kp2 = kp.at[:, 50:].set(127)
+    vs2 = vs.at[:, 50:].set(99.0)
+    out2 = kv4_decode_attention_kernel(q, kp2, ks, vp, vs2,
+                                       jnp.asarray(50, jnp.int32),
+                                       s_chunk=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

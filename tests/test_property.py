@@ -1,0 +1,186 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.act_decompose import (
+    dequant_from_planes,
+    fake_quant_act_1x4,
+    quantize_act_int4_planes,
+)
+from repro.core.em import em_fit
+from repro.core.kvquant import kv_dequantize, kv_quantize
+from repro.core.packing import (
+    pack_bits_u32,
+    pack_int4_pairs,
+    unpack_bits_u32,
+    unpack_int4_pairs,
+)
+from repro.core.rtn import rtn_dequantize, rtn_fake_quant, rtn_quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def float_matrix(draw, max_rows=8, cols_mult=32, max_cols_mult=4):
+    rows = draw(st.integers(1, max_rows))
+    cm = draw(st.integers(1, max_cols_mult))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.normal(size=(rows, cm * cols_mult)) * scale).astype(np.float32))
+
+
+class TestRTNProperties:
+    @given(x=float_matrix(), bits=st.sampled_from([2, 4, 8]))
+    @settings(**SETTINGS)
+    def test_error_bounded_by_half_step(self, x, bits):
+        xq, mu, z = rtn_quantize(x, bits)
+        xhat = rtn_dequantize(xq, mu, z)
+        bound = np.asarray(mu) * 0.5 + 1e-4 * np.abs(np.asarray(x)).max()
+        assert np.all(np.abs(np.asarray(x - xhat)) <= bound + 1e-6)
+
+    @given(x=float_matrix(), bits=st.sampled_from([2, 4, 8]))
+    @settings(**SETTINGS)
+    def test_idempotent(self, x, bits):
+        once = rtn_fake_quant(x, bits)
+        twice = rtn_fake_quant(once, bits)
+        np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(x=float_matrix())
+    @settings(**SETTINGS)
+    def test_levels_in_range(self, x):
+        xq, _, _ = rtn_quantize(x, 4)
+        assert xq.min() >= 0 and xq.max() <= 15
+
+
+class TestPackingProperties:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 4))
+    @settings(**SETTINGS)
+    def test_bits_roundtrip(self, seed, rows, words):
+        rng = np.random.default_rng(seed)
+        bits = jnp.asarray(rng.integers(0, 2, (rows, words * 32)), jnp.int8)
+        out = unpack_bits_u32(pack_bits_u32(bits))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_int4_roundtrip(self, seed, pairs):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(0, 16, (3, pairs * 2)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_int4_pairs(pack_int4_pairs(x))), np.asarray(x))
+
+
+class TestPlaneDecompositionProperties:
+    @given(x=float_matrix())
+    @settings(**SETTINGS)
+    def test_planes_reconstruct_int4_exactly(self, x):
+        """Eq. (4) is an EXACT identity, for any input distribution."""
+        planes, mu, z = quantize_act_int4_planes(x)
+        xq, mu2, z2 = rtn_quantize(x, 4)
+        np.testing.assert_allclose(
+            np.asarray(dequant_from_planes(planes, mu, z)),
+            np.asarray(rtn_dequantize(xq, mu2, z2)), rtol=1e-5, atol=1e-5)
+
+    @given(x=float_matrix(), g=st.floats(0.8, 1.2))
+    @settings(**SETTINGS)
+    def test_gamma_scales_planes_linearly(self, x, g):
+        gamma = jnp.full((4,), g, jnp.float32)
+        planes, mu, z = quantize_act_int4_planes(x)
+        base = dequant_from_planes(planes, mu, z)
+        scaled = dequant_from_planes(planes, mu, z, gamma)
+        # x_hat_gamma = g * (x_hat + z*mu) - z*mu ; the two computations
+        # cancel the z*mu shift differently, so tolerance scales with it
+        want = g * (np.asarray(base) + np.asarray(mu * z)) - np.asarray(mu * z)
+        shift = float(np.max(np.abs(np.asarray(mu * z)))) + 1.0
+        np.testing.assert_allclose(np.asarray(scaled), want, rtol=1e-3,
+                                   atol=1e-5 * shift)
+
+
+class TestEMProperties:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]))
+    @settings(**SETTINGS)
+    def test_centers_within_range_and_sorted(self, seed, k):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+        c = em_fit(w, jnp.ones((64,)), k=k, iters=10)
+        cn = np.asarray(c)
+        assert np.all(np.diff(cn, axis=-1) >= -1e-6)
+        lo = np.asarray(w).min(-1, keepdims=True) - 1e-5
+        hi = np.asarray(w).max(-1, keepdims=True) + 1e-5
+        assert np.all(cn >= lo) and np.all(cn <= hi)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_more_iters_never_increase_loss(self, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(2, 96)).astype(np.float32))
+        h = jnp.ones((96,))
+
+        def loss(c):
+            d = jnp.min((w[..., None] - c[..., None, :]) ** 2, -1)
+            return float(jnp.sum(d))
+
+        l5 = loss(em_fit(w, h, 4, iters=5))
+        l25 = loss(em_fit(w, h, 4, iters=25))
+        assert l25 <= l5 + 1e-5
+
+
+class TestKVQuantProperties:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]))
+    @settings(**SETTINGS)
+    def test_roundtrip_bound(self, seed, bits):
+        rng = np.random.default_rng(seed)
+        kv = jnp.asarray(rng.normal(size=(2, 3, 2, 32)).astype(np.float32))
+        p, mu, z = kv_quantize(kv, bits)
+        back = kv_dequantize(p, mu, z, bits, dtype=jnp.float32)
+        assert np.all(np.abs(np.asarray(kv - back))
+                      <= np.asarray(mu) * 0.51 + 1e-5)
+
+
+class TestHLOCostParser:
+    def test_synthetic_module(self):
+        from repro.utils.hlo_cost import analyze_hlo
+        hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %dot.1 = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%dot.1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ivn = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ivn, %ar)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %iv2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%iv2, %n), direction=LT
+}
+
+ENTRY %main (x0: f32[8,8]) -> f32[8,8] {
+  %x0 = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %x0)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+        cost = analyze_hlo(hlo, default_group=4)
+        # dot: 2*8*8*8 = 1024 flops x 10 trips
+        assert cost.flops == pytest.approx(1024 * 10)
+        # all-reduce payload 256B x ring 2*(4-1)/4 x 10
+        assert cost.link_bytes == pytest.approx(256 * 1.5 * 10)
+        assert cost.collective_counts["all-reduce"] == 10
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
