@@ -17,13 +17,14 @@ import subprocess
 import sys
 
 SUITES = ["table6", "fig3", "table5", "table4", "table9", "table1",
-          "table3", "quant_time"]
+          "table3", "quant_time", "serve"]
 
 
 def run_inline(names, quick):
     from benchmarks import (
         fig3_kernels,
         quant_time,
+        serve_throughput,
         table1_methods,
         table3_tasks,
         table4_ablation,
@@ -36,6 +37,7 @@ def run_inline(names, quick):
         "table5": table5_ladder, "table4": table4_ablation,
         "table9": table9_outliers, "table1": table1_methods,
         "table3": table3_tasks, "quant_time": quant_time,
+        "serve": serve_throughput,
     }
     rows = []
     for name in names:

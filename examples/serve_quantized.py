@@ -37,8 +37,11 @@ def main():
     for i, p in enumerate(prompts):
         completion = tok.decode(np.asarray(done[i]))
         print(f"  {p!r} -> {completion!r}")
+    st = engine.last_stats
     print(f"served {len(prompts)} requests on {engine.slots} slots "
-          "(W(1+1)A(1x4) weights, INT4 KV cache)")
+          "(W(1+1)A(1x4) weights, shared INT4 KV cache): "
+          f"{st['tokens']} tokens at {st['tokens_per_sec']:.1f} tok/s, "
+          f"one decode dispatch per step x {st['decode_steps']} steps")
 
 
 if __name__ == "__main__":

@@ -10,15 +10,62 @@ helpers pin the canonical activation layouts:
 
 Used by the attention/MoE blocks; under plain CPU tests (no mesh) they
 return the input unchanged.
+
+The mesh lookup is version-portable: newer jax exposes
+``jax.sharding.get_abstract_mesh`` / ``jax.set_mesh``; on 0.4.x the
+context mesh lives in ``jax._src.mesh`` (``get_abstract_mesh`` for the
+abstract context, ``thread_resources.env.physical_mesh`` for the
+classic ``with mesh:`` block).  ``current_mesh``/``mesh_context`` wrap
+the whole ladder so callers never touch version-specific APIs.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 
+def current_mesh():
+    """The active (abstract or physical) mesh, or None outside any
+    mesh context."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        try:
+            from jax._src import mesh as mesh_lib
+            getter = getattr(mesh_lib, "get_abstract_mesh", None)
+        except ImportError:  # pragma: no cover - very old jax
+            getter = None
+    if getter is not None:
+        try:
+            mesh = getter()
+            if mesh is not None and getattr(mesh, "axis_names", ()):
+                return mesh
+        except Exception:  # noqa: BLE001 - fall through to physical mesh
+            pass
+    try:
+        from jax._src import mesh as mesh_lib
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:  # noqa: BLE001
+        return None
+    return None
+
+
+def mesh_context(mesh):
+    """``with mesh_context(mesh):`` — ``jax.set_mesh`` where available,
+    the classic ``with mesh:`` resource context otherwise."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext()  # pragma: no cover
+
+
 def _axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or not mesh.axis_names:
         return None
     names = mesh.axis_names
@@ -46,6 +93,6 @@ def hint(x, *dims):
 
 
 def _size(axes) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     import numpy as np
     return int(np.prod([mesh.shape[a] for a in axes]))

@@ -42,7 +42,10 @@ def act_quant_kernel(x, *, n_planes: int = 4, block_t: int = 64,
     t, c = x.shape
     assert c % 32 == 0
     bt = min(block_t, t)
-    assert t % bt == 0
+    pad = (-t) % bt
+    if pad:  # ragged tail: rows are independent, zero-pad + slice is exact
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        t += pad
     planes, mu, z = pl.pallas_call(
         functools.partial(_kernel, n_planes=n_planes),
         grid=(t // bt,),
@@ -59,4 +62,6 @@ def act_quant_kernel(x, *, n_planes: int = 4, block_t: int = 64,
         ),
         interpret=interpret,
     )(x)
+    if pad:
+        planes, mu, z = planes[: t - pad], mu[: t - pad], z[: t - pad]
     return planes, mu, z

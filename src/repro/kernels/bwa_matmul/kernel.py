@@ -71,14 +71,28 @@ def bwa_matmul_kernel(x, q_packed, m_packed, cd, *, group: int = 128,
                       block_k: int = 256, interpret: bool = True):
     t, c_in = x.shape
     c_out = q_packed.shape[0]
+    assert c_in % group == 0 and c_in % 32 == 0
     bt = min(block_t, t)
-    bn = min(block_n, c_out)
     bk = min(block_k, c_in)
     bk = max(group, (bk // group) * group)
-    assert c_in % bk == 0 and c_out % bn == 0 and t % bt == 0
+    while c_in % bk:      # fall back toward one group per k-tile
+        bk -= group
+    bn = min(block_n, c_out)
+    # ragged tails: zero-pad tokens (rows independent) and output
+    # channels (zero weight rows yield zero outputs), slice after
+    pad_t = (-t) % bt
+    pad_n = (-c_out) % bn
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+    if pad_n:
+        q_packed = jnp.pad(q_packed, ((0, pad_n), (0, 0)))
+        m_packed = jnp.pad(m_packed, ((0, pad_n), (0, 0)))
+        cd = jnp.pad(cd, ((0, pad_n), (0, 0), (0, 0)))
+    t += pad_t
+    c_out += pad_n
     n_k = c_in // bk
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, bk=bk, group=group, n_k=n_k),
         grid=(t // bt, c_out // bn, n_k),
         in_specs=[
@@ -92,3 +106,6 @@ def bwa_matmul_kernel(x, q_packed, m_packed, cd, *, group: int = 128,
         scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
         interpret=interpret,
     )(x, q_packed, m_packed, cd)
+    if pad_t or pad_n:
+        out = out[: t - pad_t, : c_out - pad_n]
+    return out

@@ -35,6 +35,7 @@ from repro.launch.steps import (                            # noqa: E402
     quantized_leaf_pspecs,
 )
 from repro.utils.pytree import tree_map_with_path_names     # noqa: E402
+from repro.distributed.hints import mesh_context
 
 
 def _is_q(x):
@@ -150,7 +151,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: bool,
     shardings = _shardings_for(args_struct, mesh, shape_cfg, fsdp)
     build_t = time.time() - t0
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         jitted = jax.jit(fn, in_shardings=shardings,
                          donate_argnums=donate)
         t0 = time.time()

@@ -4,26 +4,47 @@ Kept as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and then calls these.
+
+``_mesh`` papers over the jax API drift: ``jax.make_mesh`` +
+``axis_types`` exist only on newer releases; 0.4.x builds the Mesh from
+``mesh_utils.create_device_mesh``.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+
+
+def _mesh(shape, axes) -> jax.sharding.Mesh:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is not None and axis_type is not None:
+        return make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+    from jax.experimental import mesh_utils
+    n = int(np.prod(shape))
+    avail = jax.devices()
+    if len(avail) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(avail)}")
+    if len(avail) == n:
+        devices = mesh_utils.create_device_mesh(shape)
+    else:  # sub-mesh (e.g. elastic restore onto fewer devices)
+        devices = np.asarray(avail[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for unit tests (requires forced host device count)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

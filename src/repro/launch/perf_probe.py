@@ -15,6 +15,7 @@ from repro.launch.dryrun import _shardings_for            # noqa: E402
 from repro.launch.mesh import make_production_mesh        # noqa: E402
 from repro.launch.steps import make_functions             # noqa: E402
 from repro.utils import hlo_cost as H                     # noqa: E402
+from repro.distributed.hints import mesh_context
 
 
 def compile_cell(arch, shape_name, *, multi_pod=False, quant=False,
@@ -26,7 +27,7 @@ def compile_cell(arch, shape_name, *, multi_pod=False, quant=False,
                                       microbatches=microbatches,
                                       scan_unroll=False, **kw)
     sh = _shardings_for(args, mesh, shape, fsdp)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         compiled = jax.jit(fn, in_shardings=sh,
                            donate_argnums=donate).lower(*args).compile()
     return compiled

@@ -54,6 +54,11 @@ def main():
     done = engine.generate(reqs)
     for i, p in enumerate(prompts):
         print(f"{p!r} -> {tok.decode(np.asarray(done[i]))!r}")
+    st = engine.last_stats
+    print(f"[serve] {st['tokens']} tokens on {st['slots']} slots in "
+          f"{st['seconds']:.2f}s ({st['tokens_per_sec']:.1f} tok/s, "
+          f"{st['decode_steps']} batched decode steps, "
+          f"{st['dispatches_per_step']:.0f} dispatch/step)")
 
 
 if __name__ == "__main__":

@@ -44,23 +44,38 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
     return KVCache(k, v, ks, vs, jnp.zeros((), jnp.int32))
 
 
+def _row_update(buf, val, pos):
+    """Per-row insert: buf [B, S, ...], val [B, T, ...], pos [B]."""
+    return jax.vmap(
+        lambda b, v, p: jax.lax.dynamic_update_slice_in_dim(b, v, p, axis=0)
+    )(buf, val, pos)
+
+
 def _store(cache: KVCache, k_new, v_new, pos, kv_bits: int) -> KVCache:
-    """Insert [B, T, Hkv, Dh] at positions [pos, pos+T)."""
+    """Insert [B, T, Hkv, Dh] at positions [pos, pos+T).
+
+    ``pos`` is a scalar (all rows at the same offset: prefill, single-
+    sequence decode) or a [B] vector (slot-parallel batched decode, each
+    row at its own offset).
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        def upd(buf, val):
+            return _row_update(buf, val.astype(buf.dtype), pos)
+    else:
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), pos, axis=1)
     if kv_bits == 4:
         kp, kmu, kz = kv_quantize(k_new, 4)
         vp, vmu, vz = kv_quantize(v_new, 4)
         ks = jnp.concatenate([kmu, kz], axis=-1)
         vs = jnp.concatenate([vmu, vz], axis=-1)
-        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kp, pos, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vp, pos, axis=1)
-        kss = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos, axis=1)
-        vss = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos, axis=1)
-        return KVCache(k, v, kss, vss, cache.length + k_new.shape[1])
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
-    return KVCache(k, v, None, None, cache.length + k_new.shape[1])
+        return KVCache(upd(cache.k, kp), upd(cache.v, vp),
+                       upd(cache.k_scale, ks), upd(cache.v_scale, vs),
+                       cache.length + k_new.shape[1])
+    return KVCache(upd(cache.k, k_new), upd(cache.v, v_new), None, None,
+                   cache.length + k_new.shape[1])
 
 
 def _load(cache: KVCache, kv_bits: int, dtype):
@@ -87,32 +102,38 @@ def attend_full(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0,
     """Memory-efficient attention: scan over q-chunks; scores [.., qc, S].
 
     q [B, Sq, H, D]; k/v [B, Sk, H(kv expanded), D].
-    ``q_offset``: absolute position of q[0] (for causal masks in decode).
-    ``kv_len``: valid cache length (positions >= kv_len are masked).
+    ``q_offset``: absolute position of q[0] (for causal masks in decode);
+    scalar, or [B] for per-row offsets (slot-parallel batched decode).
+    ``kv_len``: valid cache length (positions >= kv_len are masked);
+    scalar or [B].
     ``window`` > 0: sliding-window (local) attention.
     """
     b, sq, h, d = q.shape
     sk = k.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
     kv_pos = jnp.arange(sk)
+    q_offset = jnp.asarray(q_offset)
 
     def one_chunk(qc, qpos):
-        # qc [B, C, H, D]; qpos [C] absolute positions
+        # qc [B, C, H, D]; qpos [C] or [B, C] absolute positions
         s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
                        k.astype(jnp.float32)) * scale
-        mask = jnp.ones((qc.shape[1], sk), bool)
+        qp = qpos if qpos.ndim == 2 else qpos[None]        # [B|1, C]
+        mask = jnp.ones((qp.shape[0], qc.shape[1], sk), bool)
         if causal:
-            mask &= kv_pos[None, :] <= qpos[:, None]
+            mask &= kv_pos[None, None, :] <= qp[:, :, None]
         if window:
-            mask &= kv_pos[None, :] > qpos[:, None] - window
+            mask &= kv_pos[None, None, :] > qp[:, :, None] - window
         if kv_len is not None:
-            mask &= (kv_pos < kv_len)[None, :]
-        s = jnp.where(mask[None, None], s, NEG_INF)
+            kl = jnp.asarray(kv_len)
+            kl = kl[:, None, None] if kl.ndim else kl
+            mask &= kv_pos[None, None, :] < kl
+        s = jnp.where(mask[:, None], s, NEG_INF)           # [B|1,1,C,Sk]
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
 
     if sq <= q_chunk:
-        qpos = q_offset + jnp.arange(sq)
+        qpos = q_offset[..., None] + jnp.arange(sq)
         return one_chunk(q, qpos).astype(q.dtype)
 
     pad = (-sq) % q_chunk
@@ -124,7 +145,7 @@ def attend_full(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0,
 
     def body(carry, xs):
         qc, i = xs
-        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        qpos = q_offset[..., None] + i * q_chunk + jnp.arange(q_chunk)
         return carry, one_chunk(qc, qpos)
 
     _, out = jax.lax.scan(body, 0, (qs, jnp.arange(n_chunks)))
@@ -174,26 +195,35 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
                      head_dim, rope_theta, kv_bits, window=0):
     """Single-token decode with (possibly int4) KV cache.
 
-    x [B, 1, D]; pos [] int32 absolute position. Returns (out, new_cache).
-    For ``window`` layers the cache is a ring buffer of size W.
+    x [B, 1, D]; pos int32 absolute position — a scalar (all rows at the
+    same position) or a [B] vector (slot-parallel batched decode: each
+    row of the shared cache advances independently).  Returns
+    (out, new_cache).  For ``window`` layers the cache is a ring buffer
+    of size W.
+
+    Validity masks are derived from ``pos`` alone (never from
+    ``cache.length``), so a shared multi-slot cache needs no per-slot
+    length bookkeeping inside the jitted step.
     """
     b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_v = pos if pos.ndim else jnp.full((b,), pos, jnp.int32)   # [B]
     q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
     if rope_theta:
-        p = jnp.full((1,), pos, jnp.int32)
-        q = apply_rope(q, p, rope_theta)
-        k = apply_rope(k, p, rope_theta)
+        q = apply_rope(q, pos_v[:, None], rope_theta)
+        k = apply_rope(k, pos_v[:, None], rope_theta)
     if window:
-        slot = pos % cache.k.shape[1]
-        cache = _store(cache, k, v, slot, kv_bits)._replace(
-            length=jnp.minimum(pos + 1, cache.k.shape[1]))
+        w = cache.k.shape[1]
+        cache = _store(cache, k, v, pos % w, kv_bits)._replace(
+            length=jnp.minimum(jnp.max(pos) + 1, w))
         kc, vc = _load(cache, kv_bits, x.dtype)
-        kv_len = cache.length
         ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
         ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
         # ring buffer: every stored slot is within the window by
-        # construction; mask only unfilled slots.
-        out = attend_full(q, ke, ve, causal=False, kv_len=kv_len)
+        # construction; mask only unfilled slots ([B]-valued when rows
+        # decode at per-slot positions).
+        out = attend_full(q, ke, ve, causal=False,
+                          kv_len=jnp.minimum(pos + 1, w))
     else:
         cache = _store(cache, k, v, pos, kv_bits)
         kc, vc = _load(cache, kv_bits, x.dtype)

@@ -253,7 +253,9 @@ class LanguageModel:
         return logits, {"main": caches, "tail": tail_caches}
 
     def decode_step(self, params, token, caches, pos):
-        """One token. token [B] int32; pos [] int32 absolute position.
+        """One token. token [B] int32; pos int32 absolute position —
+        scalar, or [B] for slot-parallel decode where every batch row
+        (= serving slot) sits at its own position in a shared cache.
         Returns (logits [B, V], new caches)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token[:, None], axis=0)

@@ -217,7 +217,8 @@ def init_stack(rng, cfg: ArchConfig, n_units: int, kinds: list[str], dtype):
 # --------------------------------------------------------------------------
 
 class DecodeCtx(NamedTuple):
-    pos: jnp.ndarray          # absolute position (scalar int32)
+    pos: jnp.ndarray          # absolute position: scalar int32, or [B]
+                              # per-row positions (slot-parallel decode)
 
 
 def _norm(cfg, x, g, b=None):

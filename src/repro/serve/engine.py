@@ -1,23 +1,34 @@
-"""Batched serving engine with INT4 KV cache.
+"""Slot-parallel batched serving engine with a shared INT4 KV cache.
 
 Static-batch continuous serving: a fixed number of slots; finished
-sequences release their slot to queued requests (the new request's
-prompt is prefilled into the shared cache at its slot).  Weights may be
-W(1+1)A(1x4)-quantized params — the same engine serves both.
+sequences release their slot to queued requests.  All slots live in ONE
+preallocated, slot-indexed cache tree (``model.init_caches`` — KV
+layers packed int4 via ``core/kvquant.py``, layout
+``[layers, slots, max_len, heads, ...]``), so every generation step is
+a single jitted ``decode_step`` dispatch over all slots with a per-slot
+position vector, instead of one dispatch per slot per step.
 
-Designed for clarity + testability on CPU; the jitted inner fns are the
-same ones the dry-run lowers at production shapes.
+Admission prefills the new request's prompt (batch=1) and writes the
+resulting cache row directly into the slot's region of the shared tree
+with ``lax.dynamic_update_slice``.  Inactive slots ride along in the
+batched step at a frozen position; their writes land on an already-
+decoded position and every read past a slot's position vector entry is
+masked inside attention, so they cannot pollute live slots.
+
+Weights may be W(1+1)A(1x4)-quantized params — the same engine serves
+both.  Designed for clarity + testability on CPU; the jitted inner fns
+are the same ones the dry-run lowers at production shapes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.sampler import sample_token
+from repro.serve.sampler import sample_token, sample_tokens_batched
 
 
 @dataclasses.dataclass
@@ -32,10 +43,29 @@ class Request:
         self.out_tokens = []
 
 
+def _write_slot(shared, fresh, slot):
+    """Write a freshly prefilled batch=1 cache tree into row ``slot`` of
+    the shared slot-indexed cache via ``lax.dynamic_update_slice``.
+
+    Every state leaf is stacked ``[layers, batch, ...]``, so the slot
+    row is axis 1.  Per-layer scalar bookkeeping (``KVCache.length``,
+    stacked to ndim-1) is left untouched: decode validity masks derive
+    from the engine's position vector, never from stored lengths.
+    """
+    def upd(s, f):
+        if f.ndim < 2:
+            return s
+        start = (0, slot) + (0,) * (s.ndim - 2)
+        return jax.lax.dynamic_update_slice(s, f.astype(s.dtype), start)
+    return jax.tree.map(upd, shared, fresh)
+
+
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None,
                  seed: int = 0):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -46,10 +76,14 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_len=max_len))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        self._sample = jax.jit(sample_tokens_batched)
 
-    def _prefill_one(self, prompt: np.ndarray):
-        logits, caches = self._prefill(self.params, prompt[None, :])
-        return logits, caches
+        # observability: generation steps vs jitted decode dispatches —
+        # slot-parallel batching means these stay EQUAL at any slot count
+        self.decode_steps = 0
+        self.decode_dispatches = 0
+        self.last_stats: dict = {}
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
         """Serve a list of requests with continuous slot reuse."""
@@ -57,49 +91,87 @@ class ServeEngine:
         done: dict[int, list[int]] = {}
         active: list[Request | None] = [None] * self.slots
 
-        # per-slot independent caches (batch=1 each) keeps slot swaps
-        # simple and exact
-        slot_caches = [None] * self.slots
-        slot_pos = [0] * self.slots
-        slot_next = [None] * self.slots
+        caches = self.model.init_caches(self.slots, self.max_len, 0)
+        pos = np.zeros(self.slots, np.int32)        # per-slot abs position
+        next_tok = np.zeros(self.slots, np.int32)
+        temps = np.zeros(self.slots, np.float32)
+        self.rng, sub = jax.random.split(self.rng)
+        keys = jax.random.split(sub, self.slots)    # [slots, 2] per-slot rng
+
+        steps0, disp0 = self.decode_steps, self.decode_dispatches
+        t0, n_tokens = time.perf_counter(), 0
 
         def admit(slot):
+            nonlocal caches, keys, n_tokens
             if not queue:
                 return
             req = queue.pop(0)
-            logits, caches = self._prefill_one(req.prompt)
-            self.rng, k = jax.random.split(self.rng)
-            tok = sample_token(k, logits, req.temperature)
+            logits, fresh = self._prefill(
+                self.params, jnp.asarray(req.prompt)[None, :])
+            caches = self._write(caches, fresh,
+                                 jnp.asarray(slot, jnp.int32))
+            k_next, k_use = jax.random.split(keys[slot])
+            tok = int(sample_token(k_use, logits, req.temperature)[0])
+            keys = keys.at[slot].set(k_next)
             active[slot] = req
-            slot_caches[slot] = caches
-            slot_pos[slot] = len(req.prompt)
-            slot_next[slot] = tok
-            req.out_tokens.append(int(tok[0]))
+            pos[slot] = len(req.prompt)
+            next_tok[slot] = tok
+            temps[slot] = req.temperature
+            req.out_tokens.append(tok)
+            n_tokens += 1
 
-        for s in range(self.slots):
-            admit(s)
-
-        while any(a is not None for a in active):
-            for s in range(self.slots):
+        def sweep(s):
+            """Evict finished requests from slot ``s`` and admit
+            replacements until it holds an unfinished request or goes
+            idle (a fresh admission may finish instantly: max_new=1,
+            first-token eos, or a prompt at the cache ceiling)."""
+            while True:
                 req = active[s]
                 if req is None:
+                    if not queue:
+                        return
+                    admit(s)
                     continue
                 finished = (len(req.out_tokens) >= req.max_new_tokens or
                             (self.eos is not None and req.out_tokens and
                              req.out_tokens[-1] == self.eos) or
-                            slot_pos[s] + 1 >= self.max_len)
-                if finished:
-                    done[req.rid] = req.out_tokens
-                    active[s] = None
-                    slot_caches[s] = None
-                    admit(s)
-                    continue
-                logits, slot_caches[s] = self._decode(
-                    self.params, slot_next[s], slot_caches[s],
-                    jnp.asarray(slot_pos[s], jnp.int32))
-                self.rng, k = jax.random.split(self.rng)
-                tok = sample_token(k, logits, req.temperature)
-                slot_next[s] = tok
-                slot_pos[s] += 1
-                req.out_tokens.append(int(tok[0]))
+                            pos[s] + 1 >= self.max_len)
+                if not finished:
+                    return
+                done[req.rid] = req.out_tokens
+                active[s] = None
+
+        while True:
+            for s in range(self.slots):
+                sweep(s)
+            live = [s for s in range(self.slots) if active[s] is not None]
+            if not live:
+                break
+
+            # ONE jitted dispatch for all slots (donated shared cache)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(next_tok), caches,
+                jnp.asarray(pos))
+            self.decode_dispatches += 1
+            self.decode_steps += 1
+            toks, keys = self._sample(keys, logits, jnp.asarray(temps))
+            toks = np.asarray(toks)
+            for s in live:
+                next_tok[s] = toks[s]
+                pos[s] += 1
+                active[s].out_tokens.append(int(toks[s]))
+                n_tokens += 1
+
+        dt = time.perf_counter() - t0
+        steps = self.decode_steps - steps0
+        dispatches = self.decode_dispatches - disp0
+        self.last_stats = {
+            "requests": len(requests),
+            "slots": self.slots,
+            "tokens": n_tokens,
+            "seconds": dt,
+            "tokens_per_sec": n_tokens / dt if dt > 0 else float("inf"),
+            "decode_steps": steps,
+            "dispatches_per_step": dispatches / steps if steps else 0.0,
+        }
         return done

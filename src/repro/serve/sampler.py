@@ -1,4 +1,4 @@
-"""Token sampling."""
+"""Token sampling: single-stream and slot-parallel batched variants."""
 from __future__ import annotations
 
 import jax
@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 def sample_token(rng, logits: jnp.ndarray, temperature: float = 0.0,
                  top_k: int = 0) -> jnp.ndarray:
-    """logits [B, V] -> token ids [B]."""
+    """logits [B, V] -> token ids [B].  ``temperature`` is a python
+    float shared across the batch (greedy when <= 0)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
@@ -15,3 +16,26 @@ def sample_token(rng, logits: jnp.ndarray, temperature: float = 0.0,
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+def sample_tokens_batched(keys, logits, temperatures, top_k: int = 0):
+    """Per-slot sampling in ONE traced call (no python branch on the
+    temperature, so slots with mixed greedy/stochastic settings share a
+    single jitted dispatch).
+
+    keys [B, 2] uint32 (raw PRNG keys); logits [B, V];
+    temperatures [B] f32 (slot is greedy where <= 0).
+    Returns (tokens [B] int32, new_keys [B, 2]).
+    """
+
+    def one(key, lg, t):
+        k_next, k_use = jax.random.split(key)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        lt = lg / jnp.where(t > 0, t, 1.0)
+        if top_k:
+            kth = jax.lax.top_k(lt, top_k)[0][..., -1:]
+            lt = jnp.where(lt < kth, -jnp.inf, lt)
+        sampled = jax.random.categorical(k_use, lt).astype(jnp.int32)
+        return jnp.where(t > 0, sampled, greedy), k_next
+
+    return jax.vmap(one)(keys, logits, temperatures)

@@ -1,0 +1,56 @@
+"""Shared test fixtures and helpers.
+
+- ``rng`` / ``prng_key``: seeded per-test randomness (numpy / jax).
+- ``assert_trees_close``: tolerance check over whole pytrees with a
+  leaf-path-labelled failure message; the single place tolerance
+  conventions live (bit-exact binarization pipelines die by silently
+  divergent ad-hoc tolerances).
+- ``slow`` marker (registered in pytest.ini): deselect with
+  ``-m "not slow"`` for the fast CI lane.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+
+def _node_seed(request) -> int:
+    # crc32 (not hash()): stable across processes/PYTHONHASHSEED
+    return zlib.crc32(request.node.nodeid.encode()) % (2**31)
+
+
+@pytest.fixture
+def rng(request) -> np.random.Generator:
+    """Seeded numpy Generator; stable per test node."""
+    return np.random.default_rng(_node_seed(request))
+
+
+@pytest.fixture
+def prng_key(request) -> jax.Array:
+    """Seeded jax PRNG key; stable per test node."""
+    return jax.random.PRNGKey(_node_seed(request))
+
+
+def assert_trees_close(got, want, *, rtol: float = 1e-5, atol: float = 1e-5,
+                       err_msg: str = ""):
+    """np.testing.assert_allclose over matching pytrees (arrays pass
+    through as single-leaf trees).  Leaf paths label any failure."""
+    gl, gtree = jax.tree_util.tree_flatten_with_path(got)
+    wl, wtree = jax.tree_util.tree_flatten_with_path(want)
+    assert gtree == wtree, f"tree structures differ: {gtree} vs {wtree}"
+    for (path, g), (_, w) in zip(gl, wl):
+        label = jax.tree_util.keystr(path) or "<leaf>"
+        np.testing.assert_allclose(
+            np.asarray(g, dtype=np.float64), np.asarray(w, dtype=np.float64),
+            rtol=rtol, atol=atol,
+            err_msg=f"{err_msg} at {label}".strip())
+
+
+@pytest.fixture(name="assert_trees_close")
+def assert_trees_close_fixture():
+    """The helper as a fixture, for tests that prefer injection over
+    ``from conftest import assert_trees_close``."""
+    return assert_trees_close

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess meshes: ~1 min wall clock
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -61,6 +63,7 @@ def test_sharded_train_step_matches_single_device():
     from repro.models.model import build_model
     from repro.train.train_step import StepConfig, init_train_state, make_train_step
     from repro.distributed.sharding import param_pspecs, batch_pspec, named_shardings
+    from repro.distributed.hints import mesh_context
     from repro.launch.mesh import make_test_mesh
 
     cfg = tiny_variant(get_arch("llama1-7b"))
@@ -85,7 +88,7 @@ def test_sharded_train_step_matches_single_device():
     mesh = make_test_mesh((2, 2), ("data", "model"))
     psh = named_shardings(param_pspecs(params, mesh, fsdp=True), mesh)
     bsh = NamedSharding(mesh, batch_pspec(mesh, batch=4))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         st = init_train_state(jax.device_put(params, psh), scfg)
         jstep = jax.jit(step)
         losses2 = []

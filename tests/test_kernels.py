@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_trees_close
+
 from repro.config.model_config import QuantConfig
 from repro.core.bwa_linear import bwa_apply_planes
 from repro.core.gptq import quantize_linear
@@ -46,8 +48,7 @@ class TestBwaMatvecKernel:
         pw = jnp.asarray([1.0, 2.0, 4.0, 8.0], jnp.float32)
         got = bwa_matvec_kernel(q, m, cd, planes, pw, block_out=64)
         want = bwa_matvec_ref(q, m, cd, planes, pw)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=1e-5, atol=1e-4)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-4)
 
     def test_full_layer_matches_plane_path(self):
         """ops.bwa_matvec == core.bwa_apply_planes (integer algebra)."""
@@ -60,8 +61,7 @@ class TestBwaMatvecKernel:
         xq = x[:5]
         got = bwa_matvec(qlin, xq, block_out=64)
         want = bwa_apply_planes(qlin, xq)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=2e-4, atol=2e-4)
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
 
     def test_gamma_scaling_respected(self):
         q, m, cd = _random_packed(4, 64, 2, 2)
@@ -71,8 +71,7 @@ class TestBwaMatvecKernel:
         pw2 = pw1 * 1.5
         y1 = bwa_matvec_kernel(q, m, cd, planes, pw1, block_out=64)
         y2 = bwa_matvec_kernel(q, m, cd, planes, pw2, block_out=64)
-        np.testing.assert_allclose(np.asarray(y2), np.asarray(y1) * 1.5,
-                                   rtol=1e-5)
+        assert_trees_close(y2, np.asarray(y1) * 1.5, rtol=1e-5, atol=0)
 
 
 class TestBwaMatmulKernel:
@@ -95,8 +94,7 @@ class TestBwaMatmulKernel:
                                 block_n=64, block_k=max(group, 128))
         want = bwa_matmul_ref(x, q, m, cd, group=group)
         tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=tol, atol=tol)
+        assert_trees_close(got, want, rtol=tol, atol=tol)
 
     def test_full_layer_matches_oracle(self):
         """ops.bwa_matmul_dequant == core.bwa_apply_ref."""
@@ -110,8 +108,7 @@ class TestBwaMatmulKernel:
         xq = x[:T]
         got = bwa_matmul_dequant(qlin, xq, block_t=32, block_n=64, block_k=32)
         want = bwa_apply_ref(qlin, xq)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=2e-4, atol=2e-4)
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
 
 
 class TestActQuantKernel:
@@ -125,8 +122,7 @@ class TestActQuantKernel:
         x = jnp.asarray(_rng(8).normal(size=(t, c))).astype(dtype)
         planes, mu, z = act_quant_pack(x.astype(jnp.float32), block_t=min(t, 32))
         rplanes, rmu, rz = act_quant_pack_ref(x.astype(jnp.float32))
-        np.testing.assert_allclose(np.asarray(mu), np.asarray(rmu), rtol=1e-6)
-        np.testing.assert_allclose(np.asarray(z), np.asarray(rz), rtol=1e-6)
+        assert_trees_close((mu, z), (rmu, rz), rtol=1e-6, atol=0)
         # reconstruct int levels from planes; allow +-1 level at exact
         # round-half ties (1-ULP mu differences flip round-to-even)
         def levels(p):
@@ -151,6 +147,73 @@ class TestActQuantKernel:
         acc = bwa_matvec_kernel(q, m, cd, planes, pw, block_out=64)
         assert acc.shape == (8, c_out)
         assert bool(jnp.all(jnp.isfinite(acc)))
+
+
+class TestOddShapeParity:
+    """Ragged-tail / single-token / empty-outlier parity vs the ref.py
+    oracles in CPU interpret mode: the kernel wrappers zero-pad T (rows
+    independent) and C_out (zero weight rows) to block multiples and
+    slice, so serving-shaped calls never hit block-alignment asserts."""
+
+    @pytest.mark.parametrize("t,c_in,c_out,group", [
+        (1, 64, 32, 32),       # single-token decode
+        (33, 96, 48, 32),      # T not a multiple of block_t
+        (7, 160, 40, 32),      # T and C_out both ragged
+        (3, 256, 24, 64),      # C_out below block_n, 64-wide groups
+        (129, 160, 100, 32),   # tail beyond one block row
+    ])
+    def test_bwa_matmul_ragged(self, rng, t, c_in, c_out, group):
+        q = jnp.asarray(rng.integers(0, 2**32, size=(c_out, c_in // 32),
+                                     dtype=np.uint32))
+        m = jnp.asarray(rng.integers(0, 2**32, size=(c_out, c_in // 32),
+                                     dtype=np.uint32))
+        cd = jnp.asarray(
+            rng.normal(size=(c_out, c_in // group, 4)).astype(np.float32)
+            * 0.1)
+        x = jnp.asarray(rng.normal(size=(t, c_in)).astype(np.float32))
+        got = bwa_matmul_kernel(x, q, m, cd, group=group, block_t=8,
+                                block_n=16, block_k=2 * group)
+        want = bwa_matmul_ref(x, q, m, cd, group=group)
+        assert got.shape == (t, c_out)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_bwa_matmul_empty_outlier(self, rng):
+        """n_outlier_groups=0: the full layer runs kernel-only (no INT8
+        outlier branch) and still matches the plane-path oracle."""
+        from repro.core.bwa_linear import bwa_apply_ref
+        cfg = QuantConfig(group_size=32, n_outlier_groups=0, em_iters=4)
+        c_out, c_in, t = 40, 96, 29
+        w = jnp.asarray(rng.normal(size=(c_out, c_in)).astype(np.float32)
+                        * 0.1)
+        x = jnp.asarray(rng.normal(size=(64, c_in)).astype(np.float32))
+        qlin = quantize_linear(w, x, cfg)
+        assert qlin.n_outlier == 0
+        got = bwa_matmul_dequant(qlin, x[:t], block_t=16, block_n=32,
+                                 block_k=32)
+        want = bwa_apply_ref(qlin, x[:t])
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("t,c", [
+        (1, 32),       # single token, single packed word
+        (7, 96),       # T below the block
+        (33, 64),      # T not a multiple of the block
+    ])
+    def test_act_quant_ragged(self, rng, t, c):
+        x = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32))
+        planes, mu, z = act_quant_pack(x, block_t=8)
+        rplanes, rmu, rz = act_quant_pack_ref(x)
+        assert planes.shape == rplanes.shape == (t, 4, c // 32)
+        assert_trees_close(mu, rmu, rtol=1e-6, atol=0)
+        assert_trees_close(z, rz, rtol=1e-6, atol=1.0)  # +-1 at ties
+
+        def levels(p):
+            bits = np.asarray(p)[..., None] >> np.arange(32) & 1
+            vals = bits.reshape(t, 4, c)
+            return (vals * (2 ** np.arange(4))[None, :, None]).sum(1)
+
+        diff = np.abs(levels(planes) - levels(rplanes))
+        assert diff.max() <= 1        # round-half ties flip one level
+        assert (diff > 0).mean() < 0.01
 
 
 if __name__ == "__main__":

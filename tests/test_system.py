@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # module-scoped quantization fixtures: minutes
+
+from conftest import assert_trees_close
+
 from repro.config.model_config import QuantConfig
 from repro.config.registry import get_arch
 from repro.configs.tiny import tiny_variant
@@ -79,8 +83,7 @@ class TestEndToEndQuantization:
         _, caches = m16.prefill(quantized_lm, toks[:2, :S], max_len=64)
         dec, _ = m16.decode_step(quantized_lm, toks[:2, S], caches,
                                  jnp.asarray(S, jnp.int32))
-        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S]),
-                                   rtol=0.1, atol=0.1)
+        assert_trees_close(dec, full[:, S], rtol=0.1, atol=0.1)
 
 
 class TestServingEngine:
