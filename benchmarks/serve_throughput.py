@@ -1,14 +1,23 @@
-"""Serving throughput of the slot-parallel batched decode engine.
+"""Serving throughput of the continuous-batching engine
+(scheduler / kv-manager / runner split, chunked bucketed prefill).
 
-Measures end-to-end tokens/sec and jitted-dispatch counts for the
-shared-INT4-KV-cache engine at 1/4/8 slots, fp vs W(1+1)A(1x4)
-quantized params, on a small dense LM.  The headline invariant — ONE
-``decode_step`` dispatch per generation step regardless of slot count —
-is reported as ``dispatches/step`` and asserted by
-``tests/test_serve_batched.py``; here it shows up as throughput scaling
-with slot count while the dispatch count stays flat.
+Measures end-to-end tokens/sec, TTFT/ITL, the prefill/decode time
+split, and jitted-dispatch/compile counts for the shared-INT4-KV-cache
+engine at 1/4/8 slots, fp vs W(1+1)A(1x4) quantized params, on a small
+dense LM.  Headline invariants:
 
-    PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+- ONE ``decode_step`` dispatch per generation step at any slot count
+  (``dispatches/step``);
+- prefill compilations bounded by the chunk-bucket count — prompts of
+  ANY length stream through fixed-size padded chunks, so there is no
+  per-prompt-length recompile storm;
+- decode dispatches keep landing while a long prompt is being
+  chunk-prefilled (``interleaved`` > 0 under mixed traffic).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--quick|--tiny]
+
+``--tiny`` is the CI serve-smoke lane: a seconds-scale run that ASSERTS
+the invariants above and exits non-zero on violation.
 
 Also writes the full records to ``experiments/serve/throughput.json``
 (the BENCH json sidecar next to the CSV rows ``run.py`` collects).
@@ -31,22 +40,38 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "serve", "throughput.json")
 
 
-def _requests(n, vocab, max_new, seed=0):
+def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100):
+    """Mixed-length traffic; every ``long_every``-th request gets a long
+    prompt so admission overlaps live decode streams."""
     rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    prompt=rng.integers(0, vocab, 6 + (i % 5)).astype(np.int32),
-                    max_new_tokens=max_new)
-            for i in range(n)]
+    reqs = []
+    for i in range(n):
+        ln = long_len if (long_every and i % long_every == long_every - 1) \
+            else 6 + (i % 5)
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(0, vocab, ln).astype(np.int32),
+                            max_new_tokens=max_new))
+    return reqs
 
 
 def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len):
     engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len)
-    # warmup: compile prefill (one jit per distinct prompt length — the
-    # request generator cycles 5 lengths), decode, and the slot write
-    # outside the timed window
-    engine.generate(_requests(max(slots, 5), vocab, 2, seed=123))
-    engine.generate(_requests(n_requests, vocab, max_new, seed=0))
-    return engine.last_stats
+    # warmup compiles outside the timed window: decode (1), one prefill
+    # per chunk bucket (bounded — NOT one per distinct prompt length)
+    engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
+                              long_every=3, long_len=max_len - 28))
+    engine.generate(_requests(n_requests, vocab, max_new, seed=0,
+                              long_every=4, long_len=max_len - 28))
+    return dict(engine.last_stats)
+
+
+def _fmt_row(label, slots, st):
+    return (f"  {label:<9}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
+            f"  {st['ttft_ms'] or 0:<8.0f}  {st['itl_ms'] or 0:<7.0f}"
+            f"  {st['decode_steps']:<5}  "
+            f"{st['dispatches_per_step']:<9.0f}  "
+            f"{st['prefill_compiles']}/{len(st['chunk_buckets'])}"
+            f"{'':<13}  {st['interleaved_steps']}")
 
 
 def run(quick: bool = False):
@@ -63,7 +88,8 @@ def run(quick: bool = False):
     max_new = 8 if quick else 16
 
     rows, records = [], []
-    print("  variant    slots  tok/s   steps  dispatches/step")
+    print("  variant    slots  tok/s    ttft_ms   itl_ms   steps"
+          "  disp/step  prefill_compiles  interleaved")
     for label, p in (("fp", params), ("quant", qparams)):
         for slots in slot_counts:
             st = _measure(model, p, cfg.vocab_size, slots=slots,
@@ -72,25 +98,61 @@ def run(quick: bool = False):
             rec = {"variant": label, **st,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
             records.append(rec)
-            print(f"  {label:<9}  {slots:<5}  {st['tokens_per_sec']:<6.1f}"
-                  f"  {st['decode_steps']:<5}  "
-                  f"{st['dispatches_per_step']:.0f}")
+            print(_fmt_row(label, slots, st))
             rows.append({
                 "name": f"serve/{label}_slots{slots}",
                 "us_per_call": 1e6 / max(st["tokens_per_sec"], 1e-9),
                 "derived": (f"{st['tokens_per_sec']:.1f}tok_per_s_"
-                            f"{st['dispatches_per_step']:.0f}disp_per_step"),
+                            f"{st['dispatches_per_step']:.0f}disp_per_step_"
+                            f"{st['ttft_ms'] or 0:.0f}ms_ttft"),
             })
 
+    _write(records)
+    return rows
+
+
+def tiny_smoke() -> dict:
+    """CI serve-smoke lane: seconds-scale fp-only run asserting the
+    serving invariants (see module docstring)."""
+    cfg = bench_arch(d_model=64, n_layers=2).replace(max_seq_len=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=4, max_len=128,
+                         chunk_buckets=(8, 32))
+    # short prompts go live first, a long prompt admits mid-decode
+    done = engine.generate(_requests(8, cfg.vocab_size, 12, seed=0,
+                                     long_every=4, long_len=100))
+    st = dict(engine.last_stats)
+    assert len(done) == 8 and all(len(v) > 0 for v in done.values())
+    assert st["dispatches_per_step"] == 1.0, st
+    assert st["prefill_compiles"] <= len(engine.runner.chunk_buckets), st
+    assert st["interleaved_steps"] > 0, st   # decode flowed during admission
+    print(f"  serve-smoke OK: {st['tokens']} tokens, "
+          f"{st['dispatches_per_step']:.0f} dispatch/step, "
+          f"{st['prefill_compiles']} prefill compiles "
+          f"(<= {len(engine.runner.chunk_buckets)} buckets), "
+          f"{st['interleaved_steps']} interleaved prefill+decode steps, "
+          f"ttft {st['ttft_ms']:.0f}ms itl {st['itl_ms']:.1f}ms")
+    _write([{"variant": "tiny-smoke", **st,
+             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}])
+    return st
+
+
+def _write(records):
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     json.dump({"bench": "serve_throughput", "records": records},
               open(OUT_PATH, "w"), indent=1)
     print(f"  wrote {os.path.relpath(OUT_PATH)}")
-    return rows
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: assert serving invariants, fast")
+    args = ap.parse_args()
+    if args.tiny:
+        tiny_smoke()
+    else:
+        run(quick=args.quick)

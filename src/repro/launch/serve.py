@@ -56,9 +56,14 @@ def main():
         print(f"{p!r} -> {tok.decode(np.asarray(done[i]))!r}")
     st = engine.last_stats
     print(f"[serve] {st['tokens']} tokens on {st['slots']} slots in "
-          f"{st['seconds']:.2f}s ({st['tokens_per_sec']:.1f} tok/s, "
-          f"{st['decode_steps']} batched decode steps, "
-          f"{st['dispatches_per_step']:.0f} dispatch/step)")
+          f"{st['seconds']:.2f}s ({st['tokens_per_sec']:.1f} tok/s overall; "
+          f"prefill {st['prefill_seconds']:.2f}s / decode "
+          f"{st['decode_seconds']:.2f}s, ttft {st['ttft_ms'] or 0:.0f}ms, "
+          f"itl {st['itl_ms'] or 0:.1f}ms)")
+    print(f"[serve] {st['decode_steps']} batched decode steps, "
+          f"{st['dispatches_per_step']:.0f} dispatch/step, "
+          f"{st['prefill_compiles']} prefill compiles for "
+          f"buckets {st['chunk_buckets']}")
 
 
 if __name__ == "__main__":

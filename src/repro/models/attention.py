@@ -51,6 +51,16 @@ def _row_update(buf, val, pos):
     )(buf, val, pos)
 
 
+def _pack_kv(k_new, v_new):
+    """Quantize K/V to packed int4 + stacked (mu, z) scales — the ONE
+    place that fixes the cache's packed layout."""
+    kp, kmu, kz = kv_quantize(k_new, 4)
+    vp, vmu, vz = kv_quantize(v_new, 4)
+    ks = jnp.concatenate([kmu, kz], axis=-1)
+    vs = jnp.concatenate([vmu, vz], axis=-1)
+    return kp, vp, ks, vs
+
+
 def _store(cache: KVCache, k_new, v_new, pos, kv_bits: int) -> KVCache:
     """Insert [B, T, Hkv, Dh] at positions [pos, pos+T).
 
@@ -67,10 +77,7 @@ def _store(cache: KVCache, k_new, v_new, pos, kv_bits: int) -> KVCache:
             return jax.lax.dynamic_update_slice_in_dim(
                 buf, val.astype(buf.dtype), pos, axis=1)
     if kv_bits == 4:
-        kp, kmu, kz = kv_quantize(k_new, 4)
-        vp, vmu, vz = kv_quantize(v_new, 4)
-        ks = jnp.concatenate([kmu, kz], axis=-1)
-        vs = jnp.concatenate([vmu, vz], axis=-1)
+        kp, vp, ks, vs = _pack_kv(k_new, v_new)
         return KVCache(upd(cache.k, kp), upd(cache.v, vp),
                        upd(cache.k_scale, ks), upd(cache.v_scale, vs),
                        cache.length + k_new.shape[1])
@@ -172,6 +179,45 @@ def qkv_project(params: dict[str, Any], x: jnp.ndarray, n_heads: int,
     return q, k, v
 
 
+def _slot_store(cache: KVCache, k_new, v_new, slot, pos,
+                kv_bits: int) -> KVCache:
+    """Write chunk K/V [1, C, Hkv, Dh] into rows [pos, pos+C) of row
+    ``slot`` of a slot-indexed cache (leaves [slots, max_len, ...]).
+
+    ``cache.length`` is left untouched: serving validity masks derive
+    from the engine's per-slot position vector, never from stored
+    lengths (the shared tree has no meaningful single length).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def upd(buf, val):
+        start = (slot, pos) + (jnp.zeros((), jnp.int32),) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), start)
+
+    if kv_bits == 4:
+        kp, vp, ks, vs = _pack_kv(k_new, v_new)
+        return cache._replace(k=upd(cache.k, kp), v=upd(cache.v, vp),
+                              k_scale=upd(cache.k_scale, ks),
+                              v_scale=upd(cache.v_scale, vs))
+    return cache._replace(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
+
+
+def _slot_row(cache: KVCache, slot) -> KVCache:
+    """Slice one slot's row [1, max_len, ...] out of a slot-indexed
+    cache tree (leaves [slots, max_len, ...])."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def sl(buf):
+        start = (slot,) + (jnp.zeros((), jnp.int32),) * (buf.ndim - 1)
+        return jax.lax.dynamic_slice(buf, start, (1,) + buf.shape[1:])
+
+    return cache._replace(
+        k=sl(cache.k), v=sl(cache.v),
+        k_scale=sl(cache.k_scale) if cache.k_scale is not None else None,
+        v_scale=sl(cache.v_scale) if cache.v_scale is not None else None)
+
+
 def attention_block(params, x, *, n_heads, n_kv, head_dim, rope_theta,
                     causal=True, window=0, positions=None, q_chunk=1024):
     """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
@@ -189,6 +235,81 @@ def attention_block(params, x, *, n_heads, n_kv, head_dim, rope_theta,
     out = hint(out, "batch", None, "model", None)
     out = dot(out.reshape(b, s, n_heads * head_dim), params["wo"])
     return out, (k, v)
+
+
+def attention_prefill(params, x, *, n_heads, n_kv, head_dim, rope_theta,
+                      max_len, kv_bits, q_chunk=1024):
+    """Whole-prompt prefill that attends THROUGH the (possibly int4)
+    decode cache: K/V are quantized into a fresh [B, max_len, ...] cache
+    first and attention reads the dequantized values — exactly what any
+    later decode step (or a chunked re-run of the same positions) sees.
+
+    This makes prefill numerics self-consistent with serving: chunked
+    prefill (``attention_prefill_chunk``) over the same prompt is
+    bit-identical for ANY chunk split, because every per-token op
+    (projection, rope, per-(pos, head) KV quantization, per-token
+    activation quantization) is position-independent and every query row
+    attends the same max_len-wide dequantized cache under the same
+    absolute-position causal mask.  Returns (out, cache).
+    """
+    b, s, _ = x.shape
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    positions = jnp.arange(s)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    cache = init_kv_cache(b, max_len, n_kv, head_dim, kv_bits=kv_bits)
+    cache = _store(cache, k, v, 0, kv_bits)
+    # attend only the s written rows: the max_len-s masked tail columns
+    # contribute exact zeros to the softmax, so dropping them is
+    # bit-identical (asserted vs the chunked path, which attends the
+    # full row) while keeping prefill cost O(s^2), not O(s * max_len)
+    row = cache._replace(
+        k=cache.k[:, :s], v=cache.v[:, :s],
+        k_scale=cache.k_scale[:, :s] if cache.k_scale is not None else None,
+        v_scale=cache.v_scale[:, :s] if cache.v_scale is not None else None)
+    kc, vc = _load(row, kv_bits, x.dtype)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=0, q_chunk=q_chunk)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, s, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
+def attention_prefill_chunk(params, x, cache: KVCache, slot, pos, *,
+                            n_heads, n_kv, head_dim, rope_theta, kv_bits):
+    """One prefill chunk for ONE slot of a shared slot-indexed cache.
+
+    x [1, C, D] are the chunk's token embeddings at absolute positions
+    [pos, pos+C); ``cache`` leaves are [slots, max_len, ...].  K/V are
+    quantized and written into rows [pos, pos+C) of row ``slot`` FIRST,
+    then the chunk's queries attend the slot's full (dequantized) row
+    under the absolute-position causal mask — so in-chunk and
+    cross-chunk attention go through the identical quantize/dequantize
+    path and the result is bit-identical to ``attention_prefill`` over
+    the whole prompt.  Padding rows at the chunk tail are causally
+    masked for every valid query and later overwritten (by the next
+    chunk or the first decode write at that position) before any query
+    can attend them.  Returns (out [1, C, D], new_cache).
+    """
+    b, c, _ = x.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    positions = pos + jnp.arange(c)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    cache = _slot_store(cache, k, v, slot, pos, kv_bits)
+    kc, vc = _load(_slot_row(cache, slot), kv_bits, x.dtype)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=pos)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, c, n_heads * head_dim), params["wo"])
+    return out, cache
 
 
 def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,

@@ -252,6 +252,69 @@ class LanguageModel:
         logits = self._logits(params, x)[:, 0]
         return logits, {"main": caches, "tail": tail_caches}
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill needs every sub-layer to be stateless across
+        chunk boundaries given the cache: global attention qualifies;
+        sliding windows (ring buffer), SSM/RG-LRU recurrent states and
+        cross-attention need sequential prefill, and MoE routing drops
+        tokens by batch-dependent capacity (not position-independent).
+        The serving layer falls back to whole-prompt prefill otherwise.
+        """
+        return (all(k == "attention" for k in self.kinds)
+                and not self.cfg.encoder_layers
+                and self.cfg.ffn_kind != FFNKind.MOE)
+
+    def prefill_chunk(self, params, tokens, caches, slot, pos,
+                      last_idx=None):
+        """Run one fixed-size prompt chunk for ONE slot of a shared
+        slot-indexed cache tree (``init_caches`` layout), writing K/V
+        directly into rows [pos, pos+C) of the slot's cache row.
+
+        tokens [C] int32 (padded to the chunk bucket); slot/pos scalar
+        int32; ``last_idx`` indexes the chunk's last VALID token (C-1
+        when the chunk is full).  Returns (logits [1, V] at ``last_idx``,
+        new caches).  Bit-identical to whole-prompt ``prefill`` for any
+        chunk split (see ``attention_prefill``); padding rows are
+        causally masked and overwritten before they become attendable.
+        """
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens[None, :], axis=0)
+        ctx = DecodeCtx(pos=jnp.asarray(pos, jnp.int32),
+                        slot=jnp.asarray(slot, jnp.int32))
+
+        def scan_body(h, xs):
+            unit_params, cache = xs
+            new_caches = {}
+            for si, kind in enumerate(self.kinds):
+                h, c, _ = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h,
+                    mode="prefill_chunk", cache=cache[f"sub_{si}"], ctx=ctx,
+                    q_chunk=self.q_chunk, kv_bits=self.kv_bits)
+                new_caches[f"sub_{si}"] = c
+            return h, new_caches
+
+        x, new_main = self._scan(scan_body, x,
+                                 (params["blocks"], caches["main"]))
+        new_tail = None
+        if self.n_tail:
+            def tail_body(h, xs):
+                up, cache = xs
+                h, c, _ = apply_sublayer(
+                    cfg, self.kinds[0], up["sub_0"], h, mode="prefill_chunk",
+                    cache=cache["sub_0"], ctx=ctx, q_chunk=self.q_chunk,
+                    kv_bits=self.kv_bits)
+                return h, {"sub_0": c}
+            x, new_tail = self._scan(tail_body, x,
+                                     (params["tail"], caches["tail"]))
+        if last_idx is None:
+            last_idx = tokens.shape[0] - 1
+        xl = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_idx, jnp.int32),
+                                          1, axis=1)
+        xl = self._final_norm(params, xl)
+        logits = self._logits(params, xl)[:, 0]
+        return logits, {"main": new_main, "tail": new_tail}
+
     def decode_step(self, params, token, caches, pos):
         """One token. token [B] int32; pos int32 absolute position —
         scalar, or [B] for slot-parallel decode where every batch row

@@ -219,6 +219,9 @@ def init_stack(rng, cfg: ArchConfig, n_units: int, kinds: list[str], dtype):
 class DecodeCtx(NamedTuple):
     pos: jnp.ndarray          # absolute position: scalar int32, or [B]
                               # per-row positions (slot-parallel decode)
+    slot: jnp.ndarray | None = None   # cache row for mode="prefill_chunk"
+                                      # (scalar int32 into a shared
+                                      # slot-indexed cache tree)
 
 
 def _norm(cfg, x, g, b=None):
@@ -248,7 +251,17 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
                    cache=None, ctx: DecodeCtx | None = None,
                    enc_kv=None, q_chunk: int = 512,
                    max_len: int | None = None, kv_bits: int = 4):
-    """mode in {train, prefill, decode}. Returns (x, new_cache, aux)."""
+    """mode in {train, prefill, prefill_chunk, decode}.
+    Returns (x, new_cache, aux).
+
+    ``prefill_chunk`` (global attention only) runs a fixed-size chunk of
+    one slot's prompt at absolute positions [ctx.pos, ctx.pos+C) against
+    a shared slot-indexed cache, writing K/V directly into the slot's
+    row — no separate batch=1 cache.  Other sub-layer kinds (sliding
+    window, SSM/RG-LRU state, cross-attention) need sequential state
+    carried across chunks and fall back to whole-prompt prefill at the
+    serving layer (see ``LanguageModel.supports_chunked_prefill``).
+    """
     h = _norm(cfg, x, sub["norm1"], sub.get("norm1_b"))
     hd = cfg.resolved_head_dim if cfg.n_heads else 0
     new_cache = cache
@@ -264,13 +277,27 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
             mix, new_self = attn.attention_decode(
                 sub["mix"], h, self_cache, ctx.pos, kv_bits=kv_bits,
                 window=window, **akw)
+        elif mode == "prefill_chunk":
+            if kind != "attention":
+                raise NotImplementedError(
+                    f"prefill_chunk only supports global attention, "
+                    f"got {kind!r}")
+            mix, new_self = attn.attention_prefill_chunk(
+                sub["mix"], h, self_cache, ctx.slot, ctx.pos,
+                kv_bits=kv_bits, **akw)
+        elif mode == "prefill" and kind == "attention":
+            # serve-consistent prefill: attend through the quantized
+            # cache so whole-prompt and chunked prefill are bit-identical
+            mix, new_self = attn.attention_prefill(
+                sub["mix"], h, max_len=max_len or cfg.max_seq_len,
+                kv_bits=kv_bits, q_chunk=q_chunk, **akw)
         else:
             mix, kv = attn.attention_block(
                 sub["mix"], h, causal=True, window=window, q_chunk=q_chunk,
                 **akw)
             if mode == "prefill":
                 new_self = _fill_cache(cfg, kv, window, max_len, kv_bits)
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "prefill_chunk", "decode"):
             new_cache = ({"self": new_self, "enc": enc_kv}
                          if kind == "crossdec" else new_self)
     elif kind == "ssm":

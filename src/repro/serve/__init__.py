@@ -1,2 +1,5 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.kv_manager import KVManager
+from repro.serve.runner import ModelRunner
 from repro.serve.sampler import sample_token
+from repro.serve.scheduler import Scheduler

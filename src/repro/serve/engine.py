@@ -1,19 +1,25 @@
-"""Slot-parallel batched serving engine with a shared INT4 KV cache.
+"""Slot-parallel continuous-batching serving engine (façade).
 
-Static-batch continuous serving: a fixed number of slots; finished
-sequences release their slot to queued requests.  All slots live in ONE
-preallocated, slot-indexed cache tree (``model.init_caches`` — KV
-layers packed int4 via ``core/kvquant.py``, layout
-``[layers, slots, max_len, heads, ...]``), so every generation step is
-a single jitted ``decode_step`` dispatch over all slots with a per-slot
-position vector, instead of one dispatch per slot per step.
+The serving stack is three layers behind this stable API:
 
-Admission prefills the new request's prompt (batch=1) and writes the
-resulting cache row directly into the slot's region of the shared tree
-with ``lax.dynamic_update_slice``.  Inactive slots ride along in the
-batched step at a frozen position; their writes land on an already-
-decoded position and every read past a slot's position vector entry is
-masked inside attention, so they cannot pollute live slots.
+- ``serve/scheduler.py`` — request queue, admission (overflow
+  truncate/reject), per-slot lifecycle, Sarathi-style interleave of
+  prefill chunks with batched decode, streaming ``on_token`` callbacks,
+  TTFT/ITL/compile metrics;
+- ``serve/kv_manager.py``  — the shared slot-indexed INT4 cache tree
+  (``model.init_caches``, layout ``[layers, slots, max_len, ...]``),
+  slot alloc/free and per-slot position vectors;
+- ``serve/runner.py``     — the only layer that touches ``jax.jit``:
+  one decode compile, one prefill compile per chunk bucket.
+
+Admission streams the prompt as fixed-size, zero-padded chunks written
+DIRECTLY into the slot's rows of the shared cache
+(``model.prefill_chunk``) — no batch=1 side cache, no whole-tree copy,
+and prefill compilations bounded by the chunk-bucket count instead of
+one per distinct prompt length.  Each generation step remains a single
+jitted ``decode_step`` dispatch over all slots.  Models whose states
+cannot chunk (sliding-window / SSM / RG-LRU / cross-attention / MoE
+routing) fall back to whole-prompt prefill automatically.
 
 Weights may be W(1+1)A(1x4)-quantized params — the same engine serves
 both.  Designed for clarity + testability on CPU; the jitted inner fns
@@ -21,157 +27,44 @@ are the same ones the dry-run lowers at production shapes.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+from repro.serve.kv_manager import KVManager
+from repro.serve.runner import DEFAULT_CHUNK_BUCKETS, ModelRunner
+from repro.serve.scheduler import Request, Scheduler
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.serve.sampler import sample_token, sample_tokens_batched
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # [len] int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    out_tokens: list | None = None
-
-    def __post_init__(self):
-        self.out_tokens = []
-
-
-def _write_slot(shared, fresh, slot):
-    """Write a freshly prefilled batch=1 cache tree into row ``slot`` of
-    the shared slot-indexed cache via ``lax.dynamic_update_slice``.
-
-    Every state leaf is stacked ``[layers, batch, ...]``, so the slot
-    row is axis 1.  Per-layer scalar bookkeeping (``KVCache.length``,
-    stacked to ndim-1) is left untouched: decode validity masks derive
-    from the engine's position vector, never from stored lengths.
-    """
-    def upd(s, f):
-        if f.ndim < 2:
-            return s
-        start = (0, slot) + (0,) * (s.ndim - 2)
-        return jax.lax.dynamic_update_slice(s, f.astype(s.dtype), start)
-    return jax.tree.map(upd, shared, fresh)
+__all__ = ["Request", "ServeEngine"]
 
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None,
-                 seed: int = 0):
+                 seed: int = 0, chunk_buckets=DEFAULT_CHUNK_BUCKETS,
+                 overflow_policy: str = "truncate"):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        self.eos = eos_id
-        self.rng = jax.random.PRNGKey(seed)
-
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
-        self._prefill = jax.jit(
-            lambda p, t: model.prefill(p, t, max_len=max_len))
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
-        self._sample = jax.jit(sample_tokens_batched)
-
-        # observability: generation steps vs jitted decode dispatches —
-        # slot-parallel batching means these stay EQUAL at any slot count
-        self.decode_steps = 0
-        self.decode_dispatches = 0
-        self.last_stats: dict = {}
+        self.runner = ModelRunner(model, params, max_len=max_len,
+                                  chunk_buckets=chunk_buckets)
+        self.kv = KVManager(model, batch_slots, max_len)
+        self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
+                                   seed=seed, overflow_policy=overflow_policy)
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
         """Serve a list of requests with continuous slot reuse."""
-        queue = list(requests)
-        done: dict[int, list[int]] = {}
-        active: list[Request | None] = [None] * self.slots
+        return self.scheduler.run(requests)
 
-        caches = self.model.init_caches(self.slots, self.max_len, 0)
-        pos = np.zeros(self.slots, np.int32)        # per-slot abs position
-        next_tok = np.zeros(self.slots, np.int32)
-        temps = np.zeros(self.slots, np.float32)
-        self.rng, sub = jax.random.split(self.rng)
-        keys = jax.random.split(sub, self.slots)    # [slots, 2] per-slot rng
+    # ---------------- stable observability surface ----------------
 
-        steps0, disp0 = self.decode_steps, self.decode_dispatches
-        t0, n_tokens = time.perf_counter(), 0
+    @property
+    def decode_steps(self) -> int:
+        return self.scheduler.decode_steps
 
-        def admit(slot):
-            nonlocal caches, keys, n_tokens
-            if not queue:
-                return
-            req = queue.pop(0)
-            logits, fresh = self._prefill(
-                self.params, jnp.asarray(req.prompt)[None, :])
-            caches = self._write(caches, fresh,
-                                 jnp.asarray(slot, jnp.int32))
-            k_next, k_use = jax.random.split(keys[slot])
-            tok = int(sample_token(k_use, logits, req.temperature)[0])
-            keys = keys.at[slot].set(k_next)
-            active[slot] = req
-            pos[slot] = len(req.prompt)
-            next_tok[slot] = tok
-            temps[slot] = req.temperature
-            req.out_tokens.append(tok)
-            n_tokens += 1
+    @property
+    def decode_dispatches(self) -> int:
+        return self.runner.decode_dispatches
 
-        def sweep(s):
-            """Evict finished requests from slot ``s`` and admit
-            replacements until it holds an unfinished request or goes
-            idle (a fresh admission may finish instantly: max_new=1,
-            first-token eos, or a prompt at the cache ceiling)."""
-            while True:
-                req = active[s]
-                if req is None:
-                    if not queue:
-                        return
-                    admit(s)
-                    continue
-                finished = (len(req.out_tokens) >= req.max_new_tokens or
-                            (self.eos is not None and req.out_tokens and
-                             req.out_tokens[-1] == self.eos) or
-                            pos[s] + 1 >= self.max_len)
-                if not finished:
-                    return
-                done[req.rid] = req.out_tokens
-                active[s] = None
-
-        while True:
-            for s in range(self.slots):
-                sweep(s)
-            live = [s for s in range(self.slots) if active[s] is not None]
-            if not live:
-                break
-
-            # ONE jitted dispatch for all slots (donated shared cache)
-            logits, caches = self._decode(
-                self.params, jnp.asarray(next_tok), caches,
-                jnp.asarray(pos))
-            self.decode_dispatches += 1
-            self.decode_steps += 1
-            toks, keys = self._sample(keys, logits, jnp.asarray(temps))
-            toks = np.asarray(toks)
-            for s in live:
-                next_tok[s] = toks[s]
-                pos[s] += 1
-                active[s].out_tokens.append(int(toks[s]))
-                n_tokens += 1
-
-        dt = time.perf_counter() - t0
-        steps = self.decode_steps - steps0
-        dispatches = self.decode_dispatches - disp0
-        self.last_stats = {
-            "requests": len(requests),
-            "slots": self.slots,
-            "tokens": n_tokens,
-            "seconds": dt,
-            "tokens_per_sec": n_tokens / dt if dt > 0 else float("inf"),
-            "decode_steps": steps,
-            "dispatches_per_step": dispatches / steps if steps else 0.0,
-        }
-        return done
+    @property
+    def last_stats(self) -> dict:
+        return self.scheduler.last_stats

@@ -1,0 +1,89 @@
+"""KV manager: owns the shared slot-indexed INT4 cache tree.
+
+One preallocated cache tree (``model.init_caches``, leaves
+``[layers, slots, max_len, ...]``) holds every serving slot; this layer
+tracks which rows are free, hands slots to the scheduler, and keeps the
+per-slot absolute-position vector the jitted steps consume.  It holds
+NO jax-transformed functions — all jit lives in ``serve/runner.py`` —
+and no request state — lifecycle lives in ``serve/scheduler.py``.
+
+Position-vector contract (shared with `models/attention.py`): validity
+masks inside the jitted steps derive from ``pos`` alone, never from the
+``KVCache.length`` bookkeeping, so slot reuse needs no in-cache resets.
+A mid-prefill slot keeps ``pos`` at its chunk progress: a batched decode
+dispatch that rides over it writes garbage K/V at ``pos``, which the
+next prefill chunk (whose window starts at ``pos``) overwrites before
+any query can attend it.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def write_slot_row(shared, fresh, slot):
+    """Write a freshly prefilled batch=1 cache tree into row ``slot`` of
+    the shared slot-indexed cache via ``lax.dynamic_update_slice``
+    (fallback admission path for models without chunked-prefill support:
+    sliding-window / SSM / RG-LRU / cross-attention states).
+
+    Every state leaf is stacked ``[layers, batch, ...]``, so the slot
+    row is axis 1.  Per-layer scalar bookkeeping (``KVCache.length``,
+    stacked to ndim-1) is left untouched: decode validity masks derive
+    from the engine's position vector, never from stored lengths.
+    """
+    def upd(s, f):
+        if f.ndim < 2:
+            return s
+        start = (0, slot) + (0,) * (s.ndim - 2)
+        return jax.lax.dynamic_update_slice(s, f.astype(s.dtype), start)
+    return jax.tree.map(upd, shared, fresh)
+
+
+class KVManager:
+    """Slot allocator + position bookkeeping over one shared cache tree.
+
+    ``caches`` is replaced (never mutated) by the scheduler after each
+    jitted step returns its updated (donated) tree.
+    """
+
+    def __init__(self, model, slots: int, max_len: int):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.caches = None
+        self.pos = np.zeros(slots, np.int32)
+        self._free: list[int] = []
+        self.reset()
+
+    def reset(self):
+        """Fresh cache tree, all slots free, positions zeroed (one serve
+        run = one reset; stale rows from a prior run are unreachable
+        behind the position masks and overwritten on admission)."""
+        self.caches = self.model.init_caches(self.slots, self.max_len, 0)
+        self.pos[:] = 0
+        self._free = list(range(self.slots))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        """Claim the lowest free slot (FIFO admission order stays
+        deterministic), or None when the tree is full."""
+        if not self._free:
+            return None
+        self._free.sort()
+        slot = self._free.pop(0)
+        self.pos[slot] = 0
+        return slot
+
+    def free(self, slot: int):
+        """Release a slot.  Its cache rows are left as-is: the frozen
+        ``pos`` keeps them unreadable to the batched step and the next
+        occupant overwrites them row-by-row."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self._free.append(slot)

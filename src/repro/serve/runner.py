@@ -1,0 +1,139 @@
+"""Model runner: the ONLY serving layer that touches ``jax.jit``.
+
+Every jitted entry point is held in an explicit compile cache keyed by
+its bucketed input shape, so compilation counts are observable and
+bounded by construction:
+
+- ``decode``           one compile total ([slots] shapes are fixed);
+- ``prefill_chunk``    one compile per chunk bucket (prompts of ANY
+  length are fed as fixed-size, zero-padded chunks — no per-prompt-
+  length recompiles, unlike the whole-prompt path it replaces);
+- ``prefill_full``     fallback for models without chunked-prefill
+  support; jitted per prompt length (the recompile storm the chunk path
+  eliminates) and counted so callers can see it.
+
+Chunk bucketing: ``chunk_buckets`` is a small sorted set of chunk sizes.
+Each call consumes the smallest bucket that covers the remaining prompt
+(or the largest bucket when more remains), so short prompts avoid
+padding to the full chunk budget while long prompts stream at it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kv_manager import write_slot_row
+from repro.serve.sampler import sample_tokens_batched
+
+DEFAULT_CHUNK_BUCKETS = (8, 64)
+
+
+class ModelRunner:
+    def __init__(self, model, params, *, max_len: int,
+                 chunk_buckets=DEFAULT_CHUNK_BUCKETS):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        # clamp buckets to the cache: a chunk window [pos, pos+C) must fit
+        # inside max_len rows
+        buckets = sorted({min(int(b), max_len) for b in chunk_buckets
+                          if b > 0})
+        if not buckets:
+            raise ValueError(f"no usable chunk bucket in {chunk_buckets}")
+        self.chunk_buckets = tuple(buckets)
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._write = jax.jit(write_slot_row, donate_argnums=(0,))
+        self._sample = jax.jit(sample_tokens_batched)
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._chunk_fns: dict[int, object] = {}   # bucket C -> jitted
+        self._full_fns: dict[int, object] = {}    # prompt len -> jitted
+
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    # ---------------- compile-cache observability ----------------
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill compilations so far: one per chunk bucket
+        used (chunked path) + one per distinct prompt length (fallback
+        path).  For chunked-prefill models this is bounded by
+        ``len(chunk_buckets)`` regardless of traffic."""
+        return len(self._chunk_fns) + len(self._full_fns)
+
+    # ---------------- prefill ----------------
+
+    def bucket_for(self, remaining: int) -> int:
+        """Smallest bucket covering ``remaining``, else the largest."""
+        for b in self.chunk_buckets:
+            if b >= remaining:
+                return b
+        return self.chunk_buckets[-1]
+
+    def prefill_chunk(self, caches, prompt: np.ndarray, slot: int,
+                      fill: int):
+        """Run ONE chunk of ``prompt`` (already ``fill`` tokens in) into
+        cache row ``slot``.  Returns (logits [1, V] at the chunk's last
+        valid token, new caches, n_new tokens consumed).
+
+        When the padded window [start, start+C) would overrun the cache
+        (prompt tail near max_len with only large buckets left), the
+        window is shifted back to end at max_len and the overlapped
+        tokens are RE-RUN: recomputed rows quantize to the identical
+        packed bytes (position-independent math), so the rewrite is a
+        no-op and correctness is preserved without a per-tail recompile.
+        """
+        remaining = len(prompt) - fill
+        c = self.bucket_for(remaining)
+        start = min(fill, self.max_len - c)
+        m = min(len(prompt) - start, c)        # valid tokens in window
+        n_new = start + m - fill
+        buf = np.zeros(c, np.int32)
+        buf[:m] = prompt[start:start + m]
+        fn = self._chunk_fns.get(c)
+        if fn is None:
+            fn = self._chunk_fns[c] = jax.jit(self.model.prefill_chunk,
+                                              donate_argnums=(2,))
+        logits, caches = fn(self.params, jnp.asarray(buf), caches,
+                            jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(start, jnp.int32),
+                            jnp.asarray(m - 1, jnp.int32))
+        self.prefill_dispatches += 1
+        return logits, caches, n_new
+
+    def prefill_full(self, prompt: np.ndarray):
+        """Whole-prompt batch=1 prefill (models without chunked-prefill
+        support).  One compile PER DISTINCT PROMPT LENGTH — visible in
+        ``prefill_compiles``."""
+        s = len(prompt)
+        fn = self._full_fns.get(s)
+        if fn is None:
+            fn = self._full_fns[s] = jax.jit(
+                lambda p, t: self.model.prefill(p, t, max_len=self.max_len))
+        logits, fresh = fn(self.params, jnp.asarray(prompt)[None, :])
+        self.prefill_dispatches += 1
+        return logits, fresh
+
+    def write_slot(self, caches, fresh, slot: int):
+        """Copy a batch=1 prefill cache into row ``slot`` of the shared
+        tree (fallback path only)."""
+        return self._write(caches, fresh, jnp.asarray(slot, jnp.int32))
+
+    # ---------------- decode / sampling ----------------
+
+    def decode(self, tokens: np.ndarray, caches, pos: np.ndarray):
+        """ONE batched decode dispatch over all slots."""
+        logits, caches = self._decode(self.params, jnp.asarray(tokens),
+                                      caches, jnp.asarray(pos))
+        self.decode_dispatches += 1
+        return logits, caches
+
+    def sample(self, keys, logits, temps: np.ndarray):
+        return self._sample(keys, logits, jnp.asarray(temps))
+
+    def greedy(self, logits):
+        """Pure-argmax sampling — no PRNG keys touched or split."""
+        return self._argmax(logits)

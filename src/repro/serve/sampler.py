@@ -8,9 +8,16 @@ import jax.numpy as jnp
 def sample_token(rng, logits: jnp.ndarray, temperature: float = 0.0,
                  top_k: int = 0) -> jnp.ndarray:
     """logits [B, V] -> token ids [B].  ``temperature`` is a python
-    float shared across the batch (greedy when <= 0)."""
+    float shared across the batch (greedy when <= 0).
+
+    The argmax path never touches ``rng`` — pass ``rng=None`` for pure
+    greedy decode and skip the key split entirely (the serving
+    scheduler does; a split per admitted request is wasted work when
+    every slot runs temperature 0)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rng is None:
+        raise ValueError("temperature > 0 requires a PRNG key")
     logits = logits / temperature
     if top_k:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]

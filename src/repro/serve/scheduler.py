@@ -1,0 +1,264 @@
+"""Scheduler: request queue, admission policy, per-slot lifecycle.
+
+Continuous batching over a fixed set of slots, Sarathi-style: each
+engine iteration runs AT MOST ONE prefill chunk (for the oldest
+admitted, still-prefilling request) and then ONE batched decode
+dispatch over all slots — so live decode streams never stall for more
+than one chunk budget while a long prompt is being admitted, and every
+generation step stays a single jitted dispatch.
+
+Lifecycle: queued -> prefill -> decode -> done (or rejected at
+admission).  Admission is FIFO into the lowest free slot; prompts at or
+past the cache ceiling are truncated or rejected AT ADMISSION
+(``overflow_policy``) instead of being prefilled past max_len.
+
+All jitted execution goes through ``serve/runner.py``; cache/slot state
+lives in ``serve/kv_manager.py``; this layer is pure-python
+orchestration plus the serving metrics (TTFT / ITL / prefill vs decode
+seconds / compile counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.serve.sampler import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [len] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    on_token: Callable[[int], None] | None = None   # streaming callback
+    out_tokens: list | None = None
+    # lifecycle + per-request metrics (filled by the scheduler)
+    status: str = "queued"          # queued|prefill|decode|done|rejected
+    error: str | None = None
+    truncated: bool = False
+    t_first: float | None = None    # perf_counter at first/last token
+    t_last: float | None = None
+
+    def __post_init__(self):
+        self.out_tokens = []
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Set after run(): first-token latency from run start."""
+        return getattr(self, "_ttft_s", None)
+
+    @property
+    def itl_s(self) -> float | None:
+        """Mean inter-token latency (needs >= 2 tokens)."""
+        if self.t_first is None or len(self.out_tokens) < 2:
+            return None
+        return (self.t_last - self.t_first) / (len(self.out_tokens) - 1)
+
+
+class Scheduler:
+    def __init__(self, runner, kv, *, eos_id: int | None = None,
+                 seed: int = 0, overflow_policy: str = "truncate"):
+        if overflow_policy not in ("truncate", "reject"):
+            raise ValueError(f"overflow_policy must be 'truncate' or "
+                             f"'reject', got {overflow_policy!r}")
+        self.runner = runner
+        self.kv = kv
+        self.eos = eos_id
+        self.rng = jax.random.PRNGKey(seed)
+        self.overflow_policy = overflow_policy
+        self.chunked = runner.model.supports_chunked_prefill
+        # observability: generation steps vs jitted decode dispatches —
+        # slot-parallel batching means these stay EQUAL at any slot count
+        self.decode_steps = 0
+        self.last_stats: dict = {}
+
+    # ---------------- admission ----------------
+
+    def _validate(self, req: Request) -> bool:
+        """Admission check; truncates in place or rejects (returns False).
+        The cache holds max_len rows and the first decode write lands at
+        position len(prompt), so admissible prompts have
+        1 <= len(prompt) <= max_len - 1."""
+        req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        limit = self.kv.max_len - 1
+        if len(req.prompt) == 0:
+            req.status, req.error = "rejected", "empty prompt"
+            return False
+        if len(req.prompt) <= limit:
+            return True
+        if self.overflow_policy == "reject":
+            req.status = "rejected"
+            req.error = (f"prompt length {len(req.prompt)} >= max_len "
+                         f"{self.kv.max_len}")
+            return False
+        req.prompt = req.prompt[:limit]
+        req.truncated = True
+        return True
+
+    # ---------------- serve loop ----------------
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Serve a list of requests to completion with continuous slot
+        reuse.  Returns {rid: out_tokens} (rejected requests map to [])."""
+        runner, kv = self.runner, self.kv
+        kv.reset()
+        queue = list(requests)
+        done: dict[int, list[int]] = {}
+        slots = kv.slots
+        active: list[Request | None] = [None] * slots
+        fill = np.zeros(slots, np.int32)        # prompt tokens written
+        next_tok = np.zeros(slots, np.int32)
+        temps = np.zeros(slots, np.float32)
+        prefill_fifo: list[int] = []            # slots awaiting chunks
+
+        # greedy runs never touch the PRNG: keys exist only when some
+        # request actually samples (satellite: no key split per admitted
+        # request under pure argmax decode)
+        keys = None
+        if any(r.temperature > 0 for r in queue):
+            self.rng, sub = jax.random.split(self.rng)
+            keys = jax.random.split(sub, slots)
+
+        t0 = time.perf_counter()
+        disp0 = runner.decode_dispatches
+        pdisp0 = runner.prefill_dispatches
+        steps0 = self.decode_steps
+        prefill_s = decode_s = 0.0
+        n_tokens = n_first = interleaved = rejected = 0
+
+        def emit(req: Request, tok: int):
+            nonlocal n_tokens
+            req.out_tokens.append(int(tok))
+            now = time.perf_counter()
+            if req.t_first is None:
+                req.t_first = now
+                req._ttft_s = now - t0
+            req.t_last = now
+            n_tokens += 1
+            if req.on_token is not None:
+                req.on_token(int(tok))
+
+        def finished(s: int) -> bool:
+            req = active[s]
+            return (len(req.out_tokens) >= req.max_new_tokens
+                    or (self.eos is not None and req.out_tokens
+                        and req.out_tokens[-1] == self.eos)
+                    or int(kv.pos[s]) + 1 >= kv.max_len)
+
+        while True:
+            # 1. sweep: release finished streams
+            for s in range(slots):
+                req = active[s]
+                if req is not None and req.status == "decode" and finished(s):
+                    req.status = "done"
+                    done[req.rid] = req.out_tokens
+                    active[s] = None
+                    temps[s] = 0.0
+                    kv.free(s)
+            # 2. admit FIFO into free slots
+            while queue and kv.n_free:
+                req = queue.pop(0)
+                if not self._validate(req):
+                    done[req.rid] = req.out_tokens      # []
+                    rejected += 1
+                    continue
+                s = kv.alloc()
+                active[s] = req
+                req.status = "prefill"
+                fill[s] = 0
+                temps[s] = req.temperature
+                prefill_fifo.append(s)
+            if not prefill_fifo and all(a is None for a in active):
+                break   # queue drained (rejects only) and no live work
+            # 3. at most ONE prefill chunk per iteration (chunk budget)
+            did_prefill = False
+            if prefill_fifo:
+                s = prefill_fifo[0]
+                req = active[s]
+                tp = time.perf_counter()
+                if self.chunked:
+                    logits, kv.caches, n_new = runner.prefill_chunk(
+                        kv.caches, req.prompt, s, int(fill[s]))
+                    fill[s] += n_new
+                else:
+                    logits, fresh = runner.prefill_full(req.prompt)
+                    kv.caches = runner.write_slot(kv.caches, fresh, s)
+                    fill[s] = len(req.prompt)
+                kv.pos[s] = fill[s]
+                did_prefill = True
+                if fill[s] >= len(req.prompt):          # prompt complete
+                    prefill_fifo.pop(0)
+                    if req.temperature > 0:
+                        k_next, k_use = jax.random.split(keys[s])
+                        tok = int(sample_token(k_use, logits,
+                                               req.temperature)[0])
+                        keys = keys.at[s].set(k_next)
+                    else:
+                        tok = int(np.asarray(runner.greedy(logits))[0])
+                    req.status = "decode"
+                    next_tok[s] = tok
+                    emit(req, tok)
+                    n_first += 1
+                else:
+                    jax.block_until_ready(logits)   # honest chunk timing
+                prefill_s += time.perf_counter() - tp
+            # 4. ONE batched decode dispatch over ALL slots (idle and
+            #    mid-prefill rows ride along masked; see kv_manager doc)
+            live = [s for s in range(slots)
+                    if active[s] is not None and active[s].status == "decode"
+                    and not finished(s)]
+            if live:
+                td = time.perf_counter()
+                logits, kv.caches = runner.decode(next_tok, kv.caches, kv.pos)
+                self.decode_steps += 1
+                if keys is not None and np.any(temps > 0):
+                    toks, keys = runner.sample(keys, logits, temps)
+                else:
+                    toks = runner.greedy(logits)
+                toks = np.asarray(toks)
+                for s in live:
+                    next_tok[s] = toks[s]
+                    kv.pos[s] += 1
+                    emit(active[s], toks[s])
+                decode_s += time.perf_counter() - td
+                if did_prefill:
+                    interleaved += 1
+
+        dt = time.perf_counter() - t0
+        steps = self.decode_steps - steps0
+        dispatches = runner.decode_dispatches - disp0
+        ttfts = [r._ttft_s for r in requests if r.t_first is not None]
+        itls = [r.itl_s for r in requests if r.itl_s is not None]
+        self.last_stats = {
+            "requests": len(requests),
+            "rejected": rejected,
+            "slots": slots,
+            "tokens": n_tokens,
+            "seconds": dt,
+            "tokens_per_sec": n_tokens / dt if dt > 0 else float("inf"),
+            # prefill/decode time split (no longer conflated)
+            "prefill_seconds": prefill_s,
+            "decode_seconds": decode_s,
+            "decode_tokens_per_sec": ((n_tokens - n_first) / decode_s
+                                      if decode_s > 0 else float("inf")),
+            "ttft_ms": float(np.mean(ttfts) * 1e3) if ttfts else None,
+            "itl_ms": float(np.mean(itls) * 1e3) if itls else None,
+            "decode_steps": steps,
+            "dispatches_per_step": dispatches / steps if steps else 0.0,
+            "prefill_dispatches": runner.prefill_dispatches - pdisp0,
+            # CUMULATIVE size of the runner's prefill compile cache
+            # (unlike the per-run dispatch delta above): the bounded-by-
+            # buckets invariant is about the cache's lifetime growth
+            "prefill_compiles": runner.prefill_compiles,
+            "chunk_buckets": list(runner.chunk_buckets),
+            "chunked_prefill": self.chunked,
+            # iterations where a decode dispatch ran in the same step as
+            # a prefill chunk: live streams kept flowing during admission
+            "interleaved_steps": interleaved,
+        }
+        return done

@@ -43,14 +43,15 @@ def _prompts(n, vocab=128):
 
 
 def _count_dispatches(engine):
-    """Wrap the jitted decode so every dispatch is observable."""
-    orig, calls = engine._decode, []
+    """Wrap the runner's jitted decode so every dispatch is observable
+    (the runner is the only serving layer that touches jit)."""
+    orig, calls = engine.runner._decode, []
 
     def counting(*args, **kw):
         calls.append(1)
         return orig(*args, **kw)
 
-    engine._decode = counting
+    engine.runner._decode = counting
     return calls
 
 

@@ -1,0 +1,259 @@
+"""Chunked, bucketed prefill in the scheduler/kv-manager/runner stack:
+bit-identical parity with whole-prompt prefill across chunk sizes,
+bounded prefill compilations, decode/prefill interleaving, admission
+overflow policies, streaming callbacks, and the metrics split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_serve_batched import reference_greedy
+
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = tiny_variant(get_arch("llama1-7b")).replace(
+        d_model=96, d_ff=192, n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, vocab=128, stride=7):
+    return (np.arange(n) * stride % vocab).astype(np.int32)
+
+
+def _events(engine):
+    """Instrument the runner: record ('chunk', slot) / ('decode',) in
+    dispatch order."""
+    log = []
+    orig_chunk, orig_decode = engine.runner.prefill_chunk, engine.runner._decode
+
+    def chunk(caches, prompt, slot, fill):
+        log.append(("chunk", slot))
+        return orig_chunk(caches, prompt, slot, fill)
+
+    def decode(*a, **kw):
+        log.append(("decode",))
+        return orig_decode(*a, **kw)
+
+    engine.runner.prefill_chunk = chunk
+    engine.runner._decode = decode
+    return log
+
+
+class TestChunkedPrefillParity:
+    def test_logits_bit_identical_to_whole_prefill(self, tiny_lm):
+        """model.prefill_chunk over ANY chunk split reproduces whole-
+        prompt model.prefill logits AND packed cache rows bit-exactly
+        (both attend through the same quantized cache)."""
+        model, params = tiny_lm
+        max_len, L = 64, 13
+        prompt = _prompt(L)
+        logits_w, caches_w = jax.jit(
+            lambda p, t: model.prefill(p, t, max_len=max_len))(
+                params, jnp.asarray(prompt)[None])
+        for C in (1, 8, L, 16):                 # 16 = prompt_len + pad
+            caches = model.init_caches(3, max_len, 0)
+            fn = jax.jit(model.prefill_chunk)
+            pos = 0
+            while pos < L:
+                take = min(C, L - pos)
+                buf = np.zeros(C, np.int32)
+                buf[:take] = prompt[pos:pos + take]
+                logits_c, caches = fn(
+                    params, jnp.asarray(buf), caches,
+                    jnp.asarray(1, jnp.int32), jnp.asarray(pos, jnp.int32),
+                    jnp.asarray(take - 1, jnp.int32))
+                pos += take
+            assert np.array_equal(np.asarray(logits_c),
+                                  np.asarray(logits_w)), f"C={C}"
+            for sub in ("k", "v", "k_scale", "v_scale"):
+                got = getattr(caches["main"]["sub_0"], sub)
+                want = getattr(caches_w["main"]["sub_0"], sub)
+                assert np.array_equal(np.asarray(got[:, 1, :L]),
+                                      np.asarray(want[:, 0, :L])), \
+                    f"C={C} cache.{sub}"
+
+    @pytest.mark.parametrize("buckets", [(1,), (8,), (13,), (16,), (8, 64)])
+    def test_streams_bit_identical_any_chunking(self, tiny_lm, buckets):
+        """Greedy token streams from the chunked engine match the whole-
+        prompt reference decode EXACTLY for ragged prompt lengths, at
+        every chunk size: 1, 8, prompt_len (13), prompt_len+pad (16),
+        and the bucketed default."""
+        model, params = tiny_lm
+        lengths = [3, 9, 13, 17, 33, 47]
+        max_new = [6, 3, 9, 5, 7, 4]
+        prompts = [_prompt(n) for n in lengths]
+        refs = {i: reference_greedy(model, params, p, m, 64)
+                for i, (p, m) in enumerate(zip(prompts, max_new))}
+        for slots in (1, 3):
+            engine = ServeEngine(model, params, batch_slots=slots,
+                                 max_len=64, chunk_buckets=buckets)
+            done = engine.generate(
+                [Request(rid=i, prompt=p, max_new_tokens=m)
+                 for i, (p, m) in enumerate(zip(prompts, max_new))])
+            assert done == refs, f"buckets={buckets} slots={slots}"
+
+    def test_overlap_rerun_at_cache_ceiling(self, tiny_lm):
+        """A prompt tail near max_len whose padded chunk window would
+        overrun the cache is re-run with a shifted window — streams stay
+        exact (rewrites of recomputed rows are bit-identical no-ops)."""
+        model, params = tiny_lm
+        max_len, L = 60, 59                      # fill=48, c=16 -> shift
+        prompt = _prompt(L)
+        ref = reference_greedy(model, params, prompt, 8, max_len)
+        engine = ServeEngine(model, params, batch_slots=2, max_len=max_len,
+                             chunk_buckets=(16,))
+        done = engine.generate([Request(rid=0, prompt=prompt,
+                                        max_new_tokens=8)])
+        assert done[0] == ref
+
+
+class TestCompileBounds:
+    def test_prefill_compiles_bounded_by_buckets(self, tiny_lm):
+        """Many distinct prompt lengths, ONE compile per chunk bucket —
+        no per-prompt-length recompiles (the PR-1 recompile storm)."""
+        model, params = tiny_lm
+        lengths = [3, 5, 9, 11, 20, 33, 41, 47]
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64,
+                             chunk_buckets=(8, 64))
+        engine.generate([Request(rid=i, prompt=_prompt(n), max_new_tokens=2)
+                         for i, n in enumerate(lengths)])
+        assert engine.runner.prefill_compiles <= 2
+        assert engine.last_stats["prefill_compiles"] <= 2
+        assert engine.last_stats["dispatches_per_step"] == 1.0
+        # and the buckets actually both got used for this traffic
+        assert sorted(engine.runner._chunk_fns) == [8, 64]
+
+    def test_fallback_models_compile_per_length(self):
+        """Models whose states cannot chunk (SSM here) fall back to
+        whole-prompt prefill — correct streams, compile count visible."""
+        cfg = tiny_variant(get_arch("mamba2-2.7b"), n_layers=2)
+        model = build_model(cfg)
+        assert not model.supports_chunked_prefill
+        params = model.init(jax.random.PRNGKey(0))
+        prompts = [_prompt(n, vocab=cfg.vocab_size) for n in (5, 9)]
+        refs = {i: reference_greedy(model, params, p, 4, 64)
+                for i, p in enumerate(prompts)}
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64)
+        done = engine.generate([Request(rid=i, prompt=p, max_new_tokens=4)
+                                for i, p in enumerate(prompts)])
+        assert done == refs
+        assert not engine.last_stats["chunked_prefill"]
+        assert engine.runner.prefill_compiles == 2   # one per length
+
+
+class TestPrefillDecodeInterleave:
+    def test_decode_continues_during_long_prefill(self, tiny_lm):
+        """Sarathi-style admission: while a long prompt is chunk-
+        prefilled, the already-live stream keeps taking decode steps
+        (never stalls more than one chunk budget) — and both streams
+        remain bit-identical to the reference."""
+        model, params = tiny_lm
+        short, long = _prompt(3), _prompt(40, stride=11)
+        refs = {0: reference_greedy(model, params, short, 20, 64),
+                1: reference_greedy(model, params, long, 5, 64)}
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64,
+                             chunk_buckets=(4,))
+        log = _events(engine)
+        done = engine.generate(
+            [Request(rid=0, prompt=short, max_new_tokens=20),
+             Request(rid=1, prompt=long, max_new_tokens=5)])
+        assert done == refs
+        # the long prompt needs 10 chunks; decode dispatches must land
+        # BETWEEN them, not after them
+        chunk_idx = [i for i, e in enumerate(log) if e == ("chunk", 1)]
+        assert len(chunk_idx) == 10
+        decode_between = sum(1 for i, e in enumerate(log)
+                             if e == ("decode",)
+                             and chunk_idx[0] < i < chunk_idx[-1])
+        assert decode_between >= len(chunk_idx) - 2
+        assert engine.last_stats["interleaved_steps"] >= decode_between
+
+
+class TestAdmissionOverflow:
+    def test_truncate_policy(self, tiny_lm):
+        """Over-long prompts are truncated AT ADMISSION to max_len-1 —
+        never prefilled past the cache ceiling — and the stream equals
+        the reference on the truncated prompt."""
+        model, params = tiny_lm
+        max_len = 32
+        reqs = [Request(rid=0, prompt=_prompt(max_len + 5),
+                        max_new_tokens=8),
+                Request(rid=1, prompt=_prompt(5), max_new_tokens=4)]
+        engine = ServeEngine(model, params, batch_slots=2, max_len=max_len)
+        done = engine.generate(reqs)
+        assert reqs[0].truncated and len(reqs[0].prompt) == max_len - 1
+        ref = reference_greedy(model, params, _prompt(max_len - 1), 8,
+                               max_len)
+        assert done[0] == ref            # 1 token: evicted at the ceiling
+        assert len(done[0]) == 1
+        assert len(done[1]) == 4 and not reqs[1].truncated
+
+    def test_reject_policy(self, tiny_lm):
+        model, params = tiny_lm
+        reqs = [Request(rid=0, prompt=_prompt(40), max_new_tokens=8),
+                Request(rid=1, prompt=_prompt(5), max_new_tokens=4)]
+        engine = ServeEngine(model, params, batch_slots=2, max_len=32,
+                             overflow_policy="reject")
+        done = engine.generate(reqs)
+        assert done[0] == [] and reqs[0].status == "rejected"
+        assert "max_len" in reqs[0].error
+        assert engine.last_stats["rejected"] == 1
+        assert len(done[1]) == 4 and reqs[1].status == "done"
+
+    def test_empty_prompt_rejected(self, tiny_lm):
+        model, params = tiny_lm
+        engine = ServeEngine(model, params, batch_slots=1, max_len=32)
+        done = engine.generate(
+            [Request(rid=0, prompt=np.zeros(0, np.int32))])
+        assert done[0] == []
+        assert engine.scheduler.last_stats["rejected"] == 1
+
+
+class TestStreamingAndMetrics:
+    def test_on_token_streams_in_order(self, tiny_lm):
+        model, params = tiny_lm
+        streamed = {0: [], 1: []}
+        reqs = [Request(rid=i, prompt=_prompt(4 + 3 * i), max_new_tokens=5,
+                        on_token=streamed[i].append) for i in range(2)]
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64)
+        done = engine.generate(reqs)
+        assert streamed == done
+
+    def test_stats_split_prefill_decode(self, tiny_lm):
+        model, params = tiny_lm
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64)
+        engine.generate([Request(rid=i, prompt=_prompt(9 + i),
+                                 max_new_tokens=6) for i in range(3)])
+        st = engine.last_stats
+        assert st["prefill_seconds"] > 0 and st["decode_seconds"] > 0
+        assert st["prefill_seconds"] + st["decode_seconds"] <= st["seconds"]
+        assert st["ttft_ms"] > 0
+        assert st["itl_ms"] > 0
+        assert st["decode_tokens_per_sec"] > 0
+        assert st["dispatches_per_step"] == 1.0
+
+    def test_pure_greedy_never_touches_rng(self, tiny_lm):
+        """Argmax decode burns no PRNG key splits (satellite): the
+        scheduler rng is untouched by an all-greedy run, and advanced by
+        a stochastic one."""
+        model, params = tiny_lm
+        engine = ServeEngine(model, params, batch_slots=2, max_len=64)
+        rng0 = np.asarray(engine.scheduler.rng).copy()
+        engine.generate([Request(rid=0, prompt=_prompt(5),
+                                 max_new_tokens=4)])
+        assert np.array_equal(np.asarray(engine.scheduler.rng), rng0)
+        engine.generate([Request(rid=0, prompt=_prompt(5), max_new_tokens=4,
+                                 temperature=0.8)])
+        assert not np.array_equal(np.asarray(engine.scheduler.rng), rng0)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

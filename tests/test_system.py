@@ -97,6 +97,23 @@ class TestServingEngine:
         assert set(done) == {0, 1, 2, 3, 4}
         assert all(len(v) == 6 for v in done.values())
 
+    def test_chunked_prefill_parity_quantized(self, tiny_lm, quantized_lm):
+        """Chunked prefill stays bit-identical to the whole-prompt
+        reference under W(1+1)A(1x4) weights too: the activation 1x4
+        fake-quant is per-token, so chunk boundaries cannot move it."""
+        from test_serve_batched import reference_greedy
+
+        from repro.serve.engine import Request, ServeEngine
+        model, params, toks = tiny_lm
+        prompt = np.arange(11, dtype=np.int32)
+        ref = reference_greedy(model, quantized_lm, prompt, 6, 64)
+        for buckets in ((1,), (4,), (16,)):
+            engine = ServeEngine(model, quantized_lm, batch_slots=2,
+                                 max_len=64, chunk_buckets=buckets)
+            done = engine.generate([Request(rid=0, prompt=prompt,
+                                            max_new_tokens=6)])
+            assert done[0] == ref, f"buckets={buckets}"
+
     def test_greedy_generation_deterministic(self, tiny_lm, quantized_lm):
         from repro.serve.engine import Request, ServeEngine
         model, params, toks = tiny_lm
