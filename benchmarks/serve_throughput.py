@@ -1,26 +1,37 @@
 """Serving throughput of the continuous-batching engine
-(scheduler / kv-manager / runner split, chunked bucketed prefill).
+(scheduler / kv-manager / runner split, chunked bucketed prefill),
+measured for BOTH execution backends side by side:
+
+- ``reference``  — quantize-then-matmul XLA execution;
+- ``quantized``  — the W(1+1)A(1x4) Pallas kernels own the hot path
+  (popcount GEMV decode, dequant-in-VMEM GEMM prefill chunks, INT4
+  flash-decode attention).
 
 Measures end-to-end tokens/sec, TTFT/ITL, the prefill/decode time
 split, and jitted-dispatch/compile counts for the shared-INT4-KV-cache
-engine at 1/4/8 slots, fp vs W(1+1)A(1x4) quantized params, on a small
-dense LM.  Headline invariants:
+engine at 1/4/8 slots on a small dense LM.  Headline invariants:
 
 - ONE ``decode_step`` dispatch per generation step at any slot count
-  (``dispatches/step``);
+  (``dispatches/step``), on either backend;
 - prefill compilations bounded by the chunk-bucket count — prompts of
   ANY length stream through fixed-size padded chunks, so there is no
   per-prompt-length recompile storm;
 - decode dispatches keep landing while a long prompt is being
-  chunk-prefilled (``interleaved`` > 0 under mixed traffic).
+  chunk-prefilled (``interleaved`` > 0 under mixed traffic);
+- greedy token streams are IDENTICAL across backends (f32 compute).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick|--tiny]
 
 ``--tiny`` is the CI serve-smoke lane: a seconds-scale run that ASSERTS
-the invariants above and exits non-zero on violation.
+the invariants above for both backends, then gates
+``decode_tokens_per_sec`` against the committed ``BENCH_serve.json``
+baseline (>20% regression fails; the delta is always printed).  After a
+legitimate perf change, refresh the baseline with
+``--tiny --update-baseline`` and commit the file (see docs/ci.md).
 
 Also writes the full records to ``experiments/serve/throughput.json``
-(the BENCH json sidecar next to the CSV rows ``run.py`` collects).
+(the BENCH json sidecar next to the CSV rows ``run.py`` collects;
+uploaded as a build artifact by the serve-smoke CI lane).
 """
 from __future__ import annotations
 
@@ -36,8 +47,10 @@ from repro.core.quantize_model import quantize_model_sequential
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServeEngine
 
-OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                        "serve", "throughput.json")
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_PATH = os.path.join(_ROOT, "experiments", "serve", "throughput.json")
+BASELINE_PATH = os.path.join(_ROOT, "BENCH_serve.json")
+BASELINE_TOLERANCE = 0.20       # fail the gate below (1 - tol) * baseline
 
 
 def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100):
@@ -54,8 +67,10 @@ def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100):
     return reqs
 
 
-def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len):
-    engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len)
+def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len,
+             backend="reference"):
+    engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len,
+                         backend=backend)
     # warmup compiles outside the timed window: decode (1), one prefill
     # per chunk bucket (bounded — NOT one per distinct prompt length)
     engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
@@ -66,7 +81,7 @@ def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len):
 
 
 def _fmt_row(label, slots, st):
-    return (f"  {label:<9}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
+    return (f"  {label:<10}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
             f"  {st['ttft_ms'] or 0:<8.0f}  {st['itl_ms'] or 0:<7.0f}"
             f"  {st['decode_steps']:<5}  "
             f"{st['dispatches_per_step']:<9.0f}  "
@@ -88,14 +103,18 @@ def run(quick: bool = False):
     max_new = 8 if quick else 16
 
     rows, records = [], []
-    print("  variant    slots  tok/s    ttft_ms   itl_ms   steps"
+    print("  variant     slots  tok/s    ttft_ms   itl_ms   steps"
           "  disp/step  prefill_compiles  interleaved")
-    for label, p in (("fp", params), ("quant", qparams)):
+    # both execution backends over the same quantized weights, plus the
+    # fp-params reference as the unquantized anchor
+    for label, p, backend in (("fp", params, "reference"),
+                              ("quant-ref", qparams, "reference"),
+                              ("quant-kern", qparams, "quantized")):
         for slots in slot_counts:
             st = _measure(model, p, cfg.vocab_size, slots=slots,
                           n_requests=n_requests, max_new=max_new,
-                          max_len=128)
-            rec = {"variant": label, **st,
+                          max_len=128, backend=backend)
+            rec = {"variant": label, "backend": backend, **st,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
             records.append(rec)
             print(_fmt_row(label, slots, st))
@@ -111,31 +130,124 @@ def run(quick: bool = False):
     return rows
 
 
-def tiny_smoke() -> dict:
-    """CI serve-smoke lane: seconds-scale fp-only run asserting the
-    serving invariants (see module docstring)."""
-    cfg = bench_arch(d_model=64, n_layers=2).replace(max_seq_len=128)
+def tiny_smoke(baseline_path: str = BASELINE_PATH,
+               update_baseline: bool = False) -> dict:
+    """CI serve-smoke lane: seconds-scale run of BOTH backends over the
+    same quantized weights, asserting the serving invariants (module
+    docstring), cross-backend greedy-stream parity, and the
+    ``BENCH_serve.json`` perf gate."""
+    cfg = bench_arch(d_model=64, n_layers=2).replace(max_seq_len=128,
+                                                     dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, batch_slots=4, max_len=128,
-                         chunk_buckets=(8, 32))
-    # short prompts go live first, a long prompt admits mid-decode
-    done = engine.generate(_requests(8, cfg.vocab_size, 12, seed=0,
-                                     long_every=4, long_len=100))
-    st = dict(engine.last_stats)
-    assert len(done) == 8 and all(len(v) > 0 for v in done.values())
-    assert st["dispatches_per_step"] == 1.0, st
-    assert st["prefill_compiles"] <= len(engine.runner.chunk_buckets), st
-    assert st["interleaved_steps"] > 0, st   # decode flowed during admission
-    print(f"  serve-smoke OK: {st['tokens']} tokens, "
-          f"{st['dispatches_per_step']:.0f} dispatch/step, "
-          f"{st['prefill_compiles']} prefill compiles "
-          f"(<= {len(engine.runner.chunk_buckets)} buckets), "
-          f"{st['interleaved_steps']} interleaved prefill+decode steps, "
-          f"ttft {st['ttft_ms']:.0f}ms itl {st['itl_ms']:.1f}ms")
-    _write([{"variant": "tiny-smoke", **st,
-             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}])
-    return st
+    calib = jax.numpy.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 256)))
+    qparams = quantize_model_sequential(
+        model, params, calib, default_qcfg(em_iters=2, calib_tokens=512))
+
+    records, streams = [], {}
+    for backend in ("reference", "quantized"):
+        engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
+                             chunk_buckets=(8, 32), backend=backend)
+        # warmup so decode_tokens_per_sec measures steady state, not jit
+        engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
+                                  long_every=3, long_len=100))
+        # 8 requests x 32 new tokens: a decode window long enough that
+        # the perf gate measures steady state, not timer noise
+        t0 = time.perf_counter()
+        done = engine.generate(_requests(8, cfg.vocab_size, 32, seed=0,
+                                         long_every=4, long_len=100))
+        dt = time.perf_counter() - t0
+        st = dict(engine.last_stats)
+        assert len(done) == 8 and all(len(v) > 0 for v in done.values())
+        assert st["dispatches_per_step"] == 1.0, st
+        assert st["prefill_compiles"] <= len(engine.runner.chunk_buckets), st
+        assert st["interleaved_steps"] > 0, st  # decode flowed during admission
+        streams[backend] = done
+        records.append({"variant": f"tiny-smoke/{backend}",
+                        "backend": backend, **st,
+                        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")})
+        extra = ""
+        if engine.packed_stats is not None:
+            ps = engine.packed_stats
+            extra = (f", {ps['packed_linears']} packed linears "
+                     f"({ps['packed_bytes'] / 2**10:.0f} KiB)")
+        print(f"  serve-smoke[{backend}] OK: {st['tokens']} tokens in "
+              f"{dt:.1f}s, {st['decode_tokens_per_sec']:.1f} decode tok/s, "
+              f"{st['dispatches_per_step']:.0f} dispatch/step, "
+              f"{st['prefill_compiles']} prefill compiles "
+              f"(<= {len(engine.runner.chunk_buckets)} buckets), "
+              f"{st['interleaved_steps']} interleaved steps{extra}")
+    assert streams["reference"] == streams["quantized"], \
+        "greedy streams diverged across execution backends"
+    print("  serve-smoke parity OK: greedy streams identical across backends")
+    ratio = (records[1]["decode_tokens_per_sec"]
+             / records[0]["decode_tokens_per_sec"])
+    print(f"  backend ratio: quantized/reference = {ratio:.2f}x decode tok/s "
+          "(machine-independent trend line)")
+    _write(records)
+    _gate_baseline(records, baseline_path, update=update_baseline)
+    return records[-1]
+
+
+def _gate_baseline(records, path: str, *, update: bool = False):
+    """Compare per-backend ``decode_tokens_per_sec`` against the
+    committed baseline; >tolerance regression fails, delta always
+    printed.  ``update=True`` rewrites the baseline instead (commit the
+    result after a legitimate perf change — docs/ci.md)."""
+    measured = {r["backend"]: float(r["decode_tokens_per_sec"])
+                for r in records if r.get("backend")}
+    ratio = measured["quantized"] / measured["reference"]
+    if update:
+        json.dump({
+            "bench": "serve_throughput --tiny",
+            "tolerance": BASELINE_TOLERANCE,
+            "decode_tokens_per_sec": {k: round(v, 1)
+                                      for k, v in measured.items()},
+            # machine-independent: survives runner-hardware changes that
+            # shift both absolute numbers together
+            "quantized_to_reference_ratio": round(ratio, 3),
+            "updated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "update_cmd": ("PYTHONPATH=src python -m "
+                           "benchmarks.serve_throughput --tiny "
+                           "--update-baseline"),
+        }, open(path, "w"), indent=1)
+        print(f"  wrote baseline {os.path.relpath(path)}: "
+              + ", ".join(f"{k}={v:.1f}" for k, v in measured.items()))
+        return
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"perf gate: baseline {os.path.relpath(path)} missing — "
+            "create it with --tiny --update-baseline and commit it")
+    base = json.load(open(path))
+    tol = float(base.get("tolerance", BASELINE_TOLERANCE))
+    failures = []
+    for backend, want in base["decode_tokens_per_sec"].items():
+        got = measured.get(backend)
+        if got is None:
+            failures.append(f"{backend}: baselined but not measured")
+            continue
+        delta = (got - want) / want
+        verdict = "OK" if got >= want * (1.0 - tol) else "REGRESSION"
+        print(f"  perf gate[{backend}]: {got:.1f} vs baseline {want:.1f} "
+              f"decode tok/s ({delta:+.1%}, tolerance -{tol:.0%}) {verdict}")
+        if verdict != "OK":
+            failures.append(
+                f"{backend}: {got:.1f} < {(1 - tol) * want:.1f} "
+                f"(baseline {want:.1f} - {tol:.0%})")
+    want_ratio = base.get("quantized_to_reference_ratio")
+    if want_ratio:
+        delta = (ratio - want_ratio) / want_ratio
+        verdict = "OK" if ratio >= want_ratio * (1.0 - tol) else "REGRESSION"
+        print(f"  perf gate[ratio]: quantized/reference {ratio:.3f} vs "
+              f"baseline {want_ratio:.3f} ({delta:+.1%}, tolerance "
+              f"-{tol:.0%}) {verdict}  [machine-independent]")
+        if verdict != "OK":
+            failures.append(
+                f"quantized/reference ratio {ratio:.3f} < "
+                f"{(1 - tol) * want_ratio:.3f}")
+    if failures:
+        raise SystemExit("perf gate FAILED: " + "; ".join(failures))
 
 
 def _write(records):
@@ -150,9 +262,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: assert serving invariants, fast")
+                    help="CI smoke: assert serving invariants + backend "
+                         "parity + perf gate, fast")
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="perf-gate baseline json (default BENCH_serve.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                         "gating against it (commit the result)")
     args = ap.parse_args()
     if args.tiny:
-        tiny_smoke()
+        tiny_smoke(baseline_path=args.baseline,
+                   update_baseline=args.update_baseline)
     else:
         run(quick=args.quick)

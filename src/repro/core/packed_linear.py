@@ -1,0 +1,308 @@
+"""Kernel-native W(1+1) weight containers for the quantized serving
+backend.
+
+``QuantizedLinear`` (core/gptq.py) is the *storage* artifact: packed
+sign bits + fine-group bitmap laid out flat ``[C_out, C_nrm//32]``.
+The Pallas kernels want the group-blocked layout
+``[C_out, G, group_size//32]`` (one VMEM tile row per quant group) plus
+the ``(lo0, d0, lo1, d1)`` center-delta form.  ``PackedLinear`` is that
+kernel-native artifact, produced ONCE at serving-engine construction by
+``pack_model_params`` so the hot loop never reshapes or re-derives
+scales.
+
+Execution dispatch: ``dot(x, w)`` (core/quant_container.py) routes a
+``PackedLinear`` through ``packed_dot``, which picks the kernel by the
+active *serving kernel mode* — a trace-time context the model runner
+enters around its jitted functions:
+
+- ``decode``   → fused ``act_quant`` bit-plane pack + popcount GEMV
+                 (``kernels/bwa_matvec``): the paper's binary inner loop;
+- ``prefill``  → 1x4 fake-quant + dequant-in-VMEM GEMM
+                 (``kernels/bwa_matmul``): 2-bit weights stream to the MXU;
+- no context   → bit-identical to the ``QuantizedLinear`` reference path
+                 (``quantized_dot`` on the unpacked container), so packed
+                 params behave like quantized params anywhere outside
+                 serving.
+
+Coverage / fallback matrix (see ``pack_model_params``): only global-
+attention sub-layers (QKV/O projections) and their dense FFNs are
+packed; MoE expert stacks, SSM / RG-LRU mixers, sliding-window and
+cross-attention sub-layers keep their ``QuantizedLinear`` leaves and run
+the reference path — the quantized backend degrades per-sublayer, never
+per-model.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gptq import QuantizedLinear
+
+# ---------------------------------------------------------------------------
+# Serving kernel mode (trace-time context)
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@dataclass(frozen=True)
+class KernelMode:
+    """Active serving execution mode, captured at jit-trace time."""
+    mode: str                 # "decode" | "prefill"
+    interpret: bool = True    # Pallas interpret mode (True on CPU)
+
+
+@contextlib.contextmanager
+def kernel_serving(mode: str, *, interpret: bool = True):
+    """Enter serving kernel mode around a jit trace.  Every ``dot`` on a
+    ``PackedLinear`` (and the decode attention) traced inside dispatches
+    to the Pallas kernel for ``mode``."""
+    if mode not in ("decode", "prefill"):
+        raise ValueError(f"kernel mode must be 'decode' or 'prefill', "
+                         f"got {mode!r}")
+    prev = getattr(_CTX, "km", None)
+    _CTX.km = KernelMode(mode, interpret)
+    try:
+        yield
+    finally:
+        _CTX.km = prev
+
+
+def current_kernel_mode() -> KernelMode | None:
+    return getattr(_CTX, "km", None)
+
+
+# ---------------------------------------------------------------------------
+# Container
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "qp", "mp", "centers", "w8", "w8_scale",
+        "perm", "act_gamma", "row_sum", "bias",
+    ),
+    meta_fields=("group_size", "c_in", "c_out", "n_outlier"),
+)
+@dataclass
+class PackedLinear:
+    """Kernel-native W(1+1)A(1x4) artifact for one FC layer.
+
+    Identical information content to ``QuantizedLinear`` (pack/unpack is
+    lossless) with the bit-planes pre-blocked to the kernels' group
+    layout.  Fields may carry leading stack dims (scan-over-layers);
+    ``packed_dot`` consumes the unstacked per-layer view.
+    """
+
+    qp: jnp.ndarray          # uint32 [.., C_out, G, B/32]  sign planes
+    mp: jnp.ndarray          # uint32 [.., C_out, G, B/32]  group-select bits
+    centers: jnp.ndarray     # f32   [.., C_out, G, 4]     sorted dequant values
+    w8: jnp.ndarray          # int8  [.., C_out, K]        outlier weights
+    w8_scale: jnp.ndarray    # f32   [.., C_out, 1]
+    perm: jnp.ndarray        # int32 [.., C_in]
+    act_gamma: jnp.ndarray   # f32   [.., 4]  plane-balancing multipliers
+    row_sum: jnp.ndarray     # f32   [.., C_out]
+    bias: jnp.ndarray | None
+    group_size: int = 128
+    c_in: int = 0
+    c_out: int = 0
+    n_outlier: int = 0
+
+    @property
+    def c_norm(self) -> int:
+        return self.c_in - self.n_outlier
+
+    def packed_bytes(self) -> int:
+        """Same accounting convention as ``QuantizedLinear.packed_bytes``
+        (the layout change is free: bits are bits)."""
+        n = self.qp.size * 4 + self.mp.size * 4
+        n += self.centers.size * 2
+        n += self.w8.size + self.w8_scale.size * 2
+        n += self.perm.size * 4
+        n += 4 * 4 + self.row_sum.size * 2
+        if self.bias is not None:
+            n += self.bias.size * 2
+        return int(n)
+
+
+def pack_linear(q: QuantizedLinear) -> PackedLinear:
+    """Re-block a ``QuantizedLinear`` into the kernel-native group layout.
+    Pure layout change (reshapes) — lossless, and cheap enough to run
+    once per layer at engine construction.  Accepts stacked leading dims
+    (scan-over-layers trees)."""
+    g = q.c_norm // q.group_size
+    wg = q.group_size // 32
+    return PackedLinear(
+        qp=q.q_packed.reshape(*q.q_packed.shape[:-1], g, wg),
+        mp=q.m_packed.reshape(*q.m_packed.shape[:-1], g, wg),
+        centers=q.centers, w8=q.w8, w8_scale=q.w8_scale, perm=q.perm,
+        act_gamma=q.act_gamma, row_sum=q.row_sum, bias=q.bias,
+        group_size=q.group_size, c_in=q.c_in, c_out=q.c_out,
+        n_outlier=q.n_outlier)
+
+
+def unpack_linear(p: PackedLinear) -> QuantizedLinear:
+    """Exact inverse of ``pack_linear`` (bit-for-bit round trip)."""
+    words = p.c_norm // 32
+    return QuantizedLinear(
+        q_packed=p.qp.reshape(*p.qp.shape[:-2], words),
+        m_packed=p.mp.reshape(*p.mp.shape[:-2], words),
+        centers=p.centers, w8=p.w8, w8_scale=p.w8_scale, perm=p.perm,
+        act_gamma=p.act_gamma, row_sum=p.row_sum, bias=p.bias,
+        group_size=p.group_size, c_in=p.c_in, c_out=p.c_out,
+        n_outlier=p.n_outlier)
+
+
+# ---------------------------------------------------------------------------
+# Dispatching linear application
+# ---------------------------------------------------------------------------
+
+def _matvec_path(xf: jnp.ndarray, p: PackedLinear, interpret: bool):
+    """Decode hot loop: fused act_quant bit-plane pack + popcount GEMV.
+
+    Activation quantization (RTN-INT4 → 4x packed INT1 planes with the
+    error-aware gamma-smoothed plane scales) runs in the ``act_quant``
+    Pallas kernel; the binary contraction in ``bwa_matvec``; per-token
+    (mu, z) and the shift plane land in the epilogue (Eq. 5-7).
+    """
+    from repro.kernels.act_quant.ops import act_quant_pack
+    from repro.kernels.bwa_matvec.ops import (
+        bwa_matvec_planes,
+        centers_to_cd,
+        int8_outlier_correction,
+        plane_weights,
+    )
+
+    B = p.group_size
+    g = p.c_norm // B
+    xp = jnp.take(xf, p.perm, axis=-1)
+    xn, xo = xp[..., : p.c_norm], xp[..., p.c_norm:]
+
+    planes, mu, z = act_quant_pack(xn.astype(jnp.float32),
+                                   n_planes=4, interpret=interpret)
+    planes = planes.reshape(planes.shape[0], 4, g, B // 32)
+    cd = centers_to_cd(p.centers)
+    pw = plane_weights(p.act_gamma)
+
+    acc = bwa_matvec_planes(p.qp, p.mp, cd, planes, pw, interpret=interpret)
+    y = mu * acc - (mu * z) * p.row_sum
+
+    if p.n_outlier:
+        y = y + int8_outlier_correction(xo, p.w8, p.w8_scale)
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
+def _matmul_path(xf: jnp.ndarray, p: PackedLinear, interpret: bool):
+    """Prefill chunks: 1x4 fake-quant activations + dequant-in-VMEM GEMM
+    streaming the 2-bit weights — delegated to the ``QuantizedLinear``
+    prefill GEMM entry on the unpacked (reshape-only) view so the
+    epilogue math exists in exactly one place."""
+    from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
+    return bwa_matmul_dequant(unpack_linear(p), xf, interpret=interpret)
+
+
+def packed_dot(x: jnp.ndarray, p: PackedLinear) -> jnp.ndarray:
+    """y = BWA_linear(x) through the Pallas kernel selected by the
+    active serving kernel mode (module docstring).  Outside any mode the
+    result is bit-identical to ``quantized_dot`` on the unpacked
+    container."""
+    km = current_kernel_mode()
+    if km is None:
+        from repro.core.quant_container import quantized_dot
+        return quantized_dot(x, unpack_linear(p))
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if km.mode == "decode":
+        y = _matvec_path(xf, p, km.interpret)
+    else:
+        y = _matmul_path(xf, p, km.interpret)
+    return y.reshape(*lead, p.c_out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model packing (serving-engine construction)
+# ---------------------------------------------------------------------------
+
+# kernel-covered 2-D leaves inside a global-attention sub-layer
+_ATTN_PACK = ("wq", "wk", "wv", "wo")
+_FFN_PACK = ("w_gate", "w_up", "w_down", "w1", "w2")
+
+
+def _copy_tree(node):
+    if isinstance(node, dict):
+        return {k: _copy_tree(v) for k, v in node.items()}
+    return node
+
+
+def _count_quantized(tree) -> int:
+    n = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, QuantizedLinear)):
+        if isinstance(leaf, QuantizedLinear):
+            n += 1
+    return n
+
+
+def _pack_sub(sub: dict, kind: str, ffn_kind, stats: dict):
+    """Pack one sub-layer's covered leaves in place (on a copied tree)."""
+    from repro.config.model_config import FFNKind
+    from repro.models.transformer import KERNEL_COVERED_KINDS
+
+    if kind not in KERNEL_COVERED_KINDS:
+        return          # local / ssm / rglru / crossdec: reference fallback
+    mix = sub.get("mix")
+    if isinstance(mix, dict):
+        for name in _ATTN_PACK:
+            w = mix.get(name)
+            if isinstance(w, QuantizedLinear):
+                pl = pack_linear(w)
+                mix[name] = pl
+                stats["packed_linears"] += 1
+                stats["packed_bytes"] += pl.packed_bytes()
+    ffn = sub.get("ffn")
+    if isinstance(ffn, dict) and ffn_kind in (FFNKind.SWIGLU, FFNKind.GELU):
+        for name in _FFN_PACK:
+            w = ffn.get(name)
+            if isinstance(w, QuantizedLinear):
+                pl = pack_linear(w)
+                ffn[name] = pl
+                stats["packed_linears"] += 1
+                stats["packed_bytes"] += pl.packed_bytes()
+
+
+def pack_model_params(model, params: dict) -> tuple[dict, dict]:
+    """One-time weight packing for the quantized serving backend.
+
+    Returns ``(packed_params, stats)``: a new param tree where every
+    kernel-covered ``QuantizedLinear`` (QKV/O + dense FFN of global-
+    attention sub-layers, main stack and tail) is replaced by its
+    ``PackedLinear``, everything else shared by reference.  ``stats``
+    records the coverage split and packed byte count so the serving
+    layer can report memory use honestly.
+    """
+    stats = {
+        "packed_linears": 0,
+        "packed_bytes": 0,
+        "quantized_linears_total": _count_quantized(params),
+    }
+    new_params = _copy_tree(params)
+    for stack_name, kinds in (("blocks", model.kinds),
+                              ("tail", model.kinds[:1] if model.n_tail
+                               else [])):
+        stack = new_params.get(stack_name)
+        if not isinstance(stack, dict):
+            continue
+        for si, kind in enumerate(kinds):
+            sub = stack.get(f"sub_{si}")
+            if isinstance(sub, dict):
+                _pack_sub(sub, kind, model.cfg.ffn_kind, stats)
+    stats["reference_linears"] = (stats["quantized_linears_total"]
+                                  - stats["packed_linears"])
+    return new_params, stats

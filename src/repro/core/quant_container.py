@@ -119,10 +119,14 @@ def quantized_dot(x: jnp.ndarray, q: QuantizedLinear) -> jnp.ndarray:
 
 
 def dot(x: jnp.ndarray, w) -> jnp.ndarray:
-    """Dispatching matmul: dense array, QuantizedLinear, or a baseline
-    FakeQuantLinear (see repro.quant.baselines)."""
+    """Dispatching matmul: dense array, QuantizedLinear, a kernel-native
+    PackedLinear (serving backend; see repro.core.packed_linear), or a
+    baseline FakeQuantLinear (see repro.quant.baselines)."""
     if isinstance(w, QuantizedLinear):
         return quantized_dot(x, w)
+    if type(w).__name__ == "PackedLinear":
+        from repro.core.packed_linear import packed_dot
+        return packed_dot(x, w)
     if type(w).__name__ == "FakeQuantLinear":
         from repro.quant.baselines import fq_dot
         return fq_dot(x, w)

@@ -11,7 +11,7 @@
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper), ref.py (pure-jnp oracle).
 """
-from repro.kernels.bwa_matvec.ops import bwa_matvec
+from repro.kernels.bwa_matvec.ops import bwa_matvec, bwa_matvec_planes
 from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
 from repro.kernels.act_quant.ops import act_quant_pack
-from repro.kernels.kv4_attention.ops import kv4_decode_attention
+from repro.kernels.kv4_attention.ops import kv4_chunk_for, kv4_decode_attention

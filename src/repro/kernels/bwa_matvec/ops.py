@@ -26,6 +26,51 @@ def pack_planes(planes: jnp.ndarray, g: int, b: int) -> jnp.ndarray:
     return pack_bits_u32(planes.reshape(t, a, g, b))
 
 
+def plane_weights(act_gamma: jnp.ndarray) -> jnp.ndarray:
+    """Per-plane accumulator weights: binary place value x the
+    error-aware gamma-smoothed plane scale (Eq. 5-7)."""
+    return (2.0 ** jnp.arange(4, dtype=jnp.float32)) * act_gamma
+
+
+def int8_outlier_correction(xo, w8, w8_scale) -> jnp.ndarray:
+    """Outlier-channel contribution [T, C_out]: RTN-INT8 activations
+    against the INT8 outlier weights as a centered integer contraction
+    with the zero-point/row-sum correction.  The ONE implementation of
+    the decode outlier epilogue — shared by ``bwa_matvec``
+    (QuantizedLinear entry) and ``packed_dot`` (PackedLinear serving
+    path)."""
+    x8, mu8, z8 = rtn_quantize(xo.astype(jnp.float32), 8)
+    x8c = (x8 - 128).astype(jnp.int8)
+    iacc = jnp.einsum("tc,jc->tj", x8c, w8,
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    w8_rowsum = jnp.sum(w8.astype(jnp.int32), axis=1).astype(jnp.float32)
+    return (mu8 * iacc - (mu8 * (z8 - 128.0)) * w8_rowsum) * w8_scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
+def bwa_matvec_planes(qp, mp, cd, planes, pw, *, block_out: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Batched-slot kernel entry: acc [T, C_out] from pre-packed weights
+    and pre-packed activation bit-planes (the serving decode hot path —
+    T = live serving slots).
+
+    Ragged shapes follow the zero-pad+slice convention: any T works (the
+    grid iterates tokens), and C_out not divisible by the tile is padded
+    with zero weight rows (cd == 0 ⇒ exact zero contribution) and
+    sliced after.
+    """
+    c_out = qp.shape[0]
+    bo = min(block_out, c_out)
+    pad = (-c_out) % bo
+    if pad:
+        qp = jnp.pad(qp, ((0, pad), (0, 0), (0, 0)))
+        mp = jnp.pad(mp, ((0, pad), (0, 0), (0, 0)))
+        cd = jnp.pad(cd, ((0, pad), (0, 0), (0, 0)))
+    acc = bwa_matvec_kernel(qp, mp, cd, planes, pw, block_out=bo,
+                            interpret=interpret)
+    return acc[:, :c_out] if pad else acc
+
+
 @functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
 def bwa_matvec(q: QuantizedLinear, x: jnp.ndarray, *, block_out: int = 256,
                interpret: bool = True) -> jnp.ndarray:
@@ -45,7 +90,7 @@ def bwa_matvec(q: QuantizedLinear, x: jnp.ndarray, *, block_out: int = 256,
     qp = q.q_packed.reshape(q.c_out, g, B // 32)
     mp = q.m_packed.reshape(q.c_out, g, B // 32)
     cd = centers_to_cd(q.centers)
-    pw = (2.0 ** jnp.arange(4, dtype=jnp.float32)) * q.act_gamma
+    pw = plane_weights(q.act_gamma)
 
     acc = bwa_matvec_kernel(qp, mp, cd, planes_packed, pw,
                             block_out=min(block_out, q.c_out),
@@ -53,12 +98,7 @@ def bwa_matvec(q: QuantizedLinear, x: jnp.ndarray, *, block_out: int = 256,
     y = mu * acc - (mu * z) * q.row_sum
 
     if q.n_outlier:
-        x8, mu8, z8 = rtn_quantize(xo.astype(jnp.float32), 8)
-        x8c = (x8 - 128).astype(jnp.int8)
-        iacc = jnp.einsum("tc,jc->tj", x8c, q.w8,
-                          preferred_element_type=jnp.int32).astype(jnp.float32)
-        w8_rowsum = jnp.sum(q.w8.astype(jnp.int32), axis=1).astype(jnp.float32)
-        y = y + (mu8 * iacc - (mu8 * (z8 - 128.0)) * w8_rowsum) * q.w8_scale[:, 0]
+        y = y + int8_outlier_correction(xo, q.w8, q.w8_scale)
     if q.bias is not None:
         y = y + q.bias
     return y

@@ -46,7 +46,7 @@ def _kernel(len_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0)]   # per-batch-row (= serving slot)
     q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
     k = _unpack_dequant(kp_ref[0, 0], ks_ref[0, 0], d)  # [Sc, D]
     v = _unpack_dequant(vp_ref[0, 0], vs_ref[0, 0], d)
@@ -75,7 +75,10 @@ def kv4_decode_attention_kernel(q, k_packed, k_scales, v_packed, v_scales,
                                 kv_len, *, s_chunk: int = 512,
                                 interpret: bool = True):
     """q [B, H, D]; packed caches [B, S, Hkv, D/2]; scales [B, S, Hkv, 2];
-    kv_len scalar int32.  Returns [B, H, D] f32."""
+    kv_len int32 — scalar (all rows at the same fill) or [B] per-row
+    valid lengths (slot-parallel batched decode: each batch row of a
+    shared slot-indexed cache sits at its own position).
+    Returns [B, H, D] f32."""
     b, h, d = q.shape
     s_max, hkv = k_packed.shape[1], k_packed.shape[2]
     g = h // hkv
@@ -90,7 +93,7 @@ def kv4_decode_attention_kernel(q, k_packed, k_scales, v_packed, v_scales,
     ks = k_scales.transpose(0, 2, 1, 3)
     vp = v_packed.transpose(0, 2, 1, 3)
     vs = v_scales.transpose(0, 2, 1, 3)
-    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (1,))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
 
     out = pl.pallas_call(
         functools.partial(_kernel, d=d, s_chunk=sc, n_chunks=n_chunks,

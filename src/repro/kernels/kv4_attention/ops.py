@@ -11,7 +11,23 @@ from repro.kernels.kv4_attention.kernel import kv4_decode_attention_kernel
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
 def kv4_decode_attention(q, cache, kv_len, *, s_chunk: int = 512,
                          interpret: bool = True):
-    """q [B, H, D]; cache: repro.models.attention.KVCache (int4 layout)."""
+    """q [B, H, D]; cache: repro.models.attention.KVCache (int4 layout).
+
+    Batched-slot entry: ``kv_len`` may be a scalar or a [B] vector of
+    per-row valid lengths, so a shared slot-indexed serving cache (each
+    row at its own decode position) is consumed directly — no dequant
+    materialization, no per-slot slicing."""
     return kv4_decode_attention_kernel(
         q, cache.k, cache.k_scale, cache.v, cache.v_scale, kv_len,
         s_chunk=s_chunk, interpret=interpret)
+
+
+def kv4_chunk_for(s_max: int, cap: int = 512) -> int:
+    """Largest kv-chunk <= ``cap`` dividing ``s_max`` (the kernel grid
+    needs an exact split).  Returns 0 when only a degenerate chunk
+    exists (pathological prime cache lengths) — callers fall back to the
+    reference attend path."""
+    sc = min(cap, s_max)
+    while sc > 1 and s_max % sc:
+        sc -= 1
+    return sc if (sc == s_max or sc >= 8) else 0

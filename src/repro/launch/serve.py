@@ -1,7 +1,8 @@
 """Serving launcher: batched generation with the quantized engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama1-7b --tiny \
-        [--no-quant] [--slots 4] [--max-new 32] --prompt "def main(" ...
+        [--no-quant] [--backend quantized] [--slots 4] [--max-new 32] \
+        --prompt "def main(" ...
 """
 from __future__ import annotations
 
@@ -16,6 +17,12 @@ def main():
     ap.add_argument("--arch", default="llama1-7b")
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "quantized"),
+                    help="serving execution backend: reference "
+                         "(quantize-then-matmul XLA) or quantized "
+                         "(W(1+1)A(1x4) Pallas kernels; needs quantized "
+                         "params, i.e. not --no-quant)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--prompt", action="append", default=None)
@@ -50,7 +57,14 @@ def main():
                     prompt=np.asarray(tok.encode(p), np.int32) % cfg.vocab_size,
                     max_new_tokens=args.max_new)
             for i, p in enumerate(prompts)]
-    engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512)
+    engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512,
+                         backend=args.backend)
+    if engine.packed_stats is not None:
+        ps = engine.packed_stats
+        print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
+              f"packed to kernel-native W(1+1) "
+              f"({ps['packed_bytes'] / 2**20:.2f} MiB), "
+              f"{ps['reference_linears']} on the reference fallback")
     done = engine.generate(reqs)
     for i, p in enumerate(prompts):
         print(f"{p!r} -> {tok.decode(np.asarray(done[i]))!r}")

@@ -313,7 +313,8 @@ def attention_prefill_chunk(params, x, cache: KVCache, slot, pos, *,
 
 
 def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
-                     head_dim, rope_theta, kv_bits, window=0):
+                     head_dim, rope_theta, kv_bits, window=0,
+                     kernel_ok: bool = True):
     """Single-token decode with (possibly int4) KV cache.
 
     x [B, 1, D]; pos int32 absolute position — a scalar (all rows at the
@@ -325,7 +326,20 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
     Validity masks are derived from ``pos`` alone (never from
     ``cache.length``), so a shared multi-slot cache needs no per-slot
     length bookkeeping inside the jitted step.
+
+    Under the serving kernel mode (quantized backend; see
+    ``repro.core.packed_linear.kernel_serving``) the global-attention
+    INT4 path reads the packed cache DIRECTLY through the flash-decode
+    Pallas kernel (``kv4_decode_attention``) with per-row valid lengths
+    ``pos + 1`` — no full-cache dequantization, no GQA head
+    materialization.  Sliding-window ring buffers, fp caches, odd head
+    dims, degenerate cache lengths, and sub-layers whose kind is not
+    kernel-covered (``kernel_ok=False``, e.g. crossdec self-attention —
+    the trace-time mode is global, so the caller must gate by kind)
+    keep the reference attend path.
     """
+    from repro.core.packed_linear import current_kernel_mode
+
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     pos_v = pos if pos.ndim else jnp.full((b,), pos, jnp.int32)   # [B]
@@ -333,6 +347,20 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
     if rope_theta:
         q = apply_rope(q, pos_v[:, None], rope_theta)
         k = apply_rope(k, pos_v[:, None], rope_theta)
+    km = current_kernel_mode()
+    if (kernel_ok and km is not None and km.mode == "decode" and not window
+            and kv_bits == 4 and head_dim % 2 == 0):
+        from repro.kernels.kv4_attention.ops import (
+            kv4_chunk_for,
+            kv4_decode_attention,
+        )
+        sc = kv4_chunk_for(cache.k.shape[1])
+        if sc:
+            cache = _store(cache, k, v, pos, kv_bits)
+            out = kv4_decode_attention(q[:, 0], cache, pos_v + 1,
+                                       s_chunk=sc, interpret=km.interpret)
+            out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+            return dot(out, params["wo"]), cache
     if window:
         w = cache.k.shape[1]
         cache = _store(cache, k, v, pos % w, kv_bits)._replace(

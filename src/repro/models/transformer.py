@@ -36,6 +36,15 @@ from repro.models.layers import (
 # Structure derivation
 # --------------------------------------------------------------------------
 
+# Sub-layer kinds the quantized serving backend can route through the
+# W(1+1)A(1x4) Pallas kernels (packed-weight linears + INT4 flash-decode
+# attention).  Sliding-window ("local") rings, SSM / RG-LRU recurrences
+# and whisper cross-attention decode through the reference quantized
+# path; MoE expert stacks likewise stay reference even inside a covered
+# attention sub-layer (see repro.core.packed_linear.pack_model_params).
+KERNEL_COVERED_KINDS = frozenset({"attention"})
+
+
 def sublayer_kinds(cfg: ArchConfig) -> list[str]:
     """Kinds of the sub-layers inside one scan unit."""
     if cfg.block_kind == BlockKind.RGLRU:
@@ -276,7 +285,8 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
         if mode == "decode":
             mix, new_self = attn.attention_decode(
                 sub["mix"], h, self_cache, ctx.pos, kv_bits=kv_bits,
-                window=window, **akw)
+                window=window,
+                kernel_ok=kind in KERNEL_COVERED_KINDS, **akw)
         elif mode == "prefill_chunk":
             if kind != "attention":
                 raise NotImplementedError(

@@ -22,8 +22,14 @@ cannot chunk (sliding-window / SSM / RG-LRU / cross-attention / MoE
 routing) fall back to whole-prompt prefill automatically.
 
 Weights may be W(1+1)A(1x4)-quantized params — the same engine serves
-both.  Designed for clarity + testability on CPU; the jitted inner fns
-are the same ones the dry-run lowers at production shapes.
+both.  Quantized params additionally unlock ``backend="quantized"``:
+weights are packed once at construction into the kernel-native W(1+1)
+layout and the hot path runs the Pallas kernels (popcount GEMV decode,
+dequant-in-VMEM GEMM prefill chunks, INT4 flash-decode attention) with
+automatic per-sublayer reference fallback — greedy token streams stay
+identical to ``backend="reference"``.  Designed for clarity +
+testability on CPU; the jitted inner fns are the same ones the dry-run
+lowers at production shapes.
 """
 from __future__ import annotations
 
@@ -38,15 +44,21 @@ class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, eos_id: int | None = None,
                  seed: int = 0, chunk_buckets=DEFAULT_CHUNK_BUCKETS,
-                 overflow_policy: str = "truncate"):
+                 overflow_policy: str = "truncate",
+                 backend: str = "reference", kernel_interpret: bool = True):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.model = model
-        self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.runner = ModelRunner(model, params, max_len=max_len,
-                                  chunk_buckets=chunk_buckets)
+                                  chunk_buckets=chunk_buckets,
+                                  backend=backend,
+                                  kernel_interpret=kernel_interpret)
+        # the runner's tree, not the constructor arg: on the quantized
+        # backend the runner packs covered linears, and pinning the
+        # original here would keep BOTH weight copies resident
+        self.params = self.runner.params
         self.kv = KVManager(model, batch_slots, max_len)
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
                                    seed=seed, overflow_policy=overflow_policy)
@@ -56,6 +68,17 @@ class ServeEngine:
         return self.scheduler.run(requests)
 
     # ---------------- stable observability surface ----------------
+
+    @property
+    def backend(self) -> str:
+        return self.runner.backend
+
+    @property
+    def packed_stats(self) -> dict | None:
+        """Packed-weight coverage + memory split for the quantized
+        backend (None on reference): packed_linears / reference_linears
+        / packed_bytes / quantized_linears_total."""
+        return self.runner.pack_stats
 
     @property
     def decode_steps(self) -> int:

@@ -16,6 +16,21 @@ Chunk bucketing: ``chunk_buckets`` is a small sorted set of chunk sizes.
 Each call consumes the smallest bucket that covers the remaining prompt
 (or the largest bucket when more remains), so short prompts avoid
 padding to the full chunk budget while long prompts stream at it.
+
+Execution backends (``backend=``):
+
+- ``reference``  — quantize-then-matmul XLA execution: QuantizedLinear
+  leaves run ``quantized_dot``, attention dequantizes the INT4 cache.
+- ``quantized``  — the W(1+1)A(1x4) Pallas kernels own the hot path:
+  weights are packed ONCE at construction into the kernel-native layout
+  (``pack_model_params``), the jitted decode/prefill functions are
+  traced inside ``kernel_serving`` so every covered linear runs the
+  popcount GEMV (decode) / dequant-in-VMEM GEMM (prefill chunks) and
+  decode attention streams the packed INT4 cache (``kv4_attention``).
+  Uncovered sub-layer kinds fall back to reference automatically.
+
+Both backends share the compile-cache contract: 1 decode compile +
+1 prefill compile per chunk bucket, per runner.
 """
 from __future__ import annotations
 
@@ -23,16 +38,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packed_linear import kernel_serving, pack_model_params
 from repro.serve.kv_manager import write_slot_row
 from repro.serve.sampler import sample_tokens_batched
 
 DEFAULT_CHUNK_BUCKETS = (8, 64)
+BACKENDS = ("reference", "quantized")
 
 
 class ModelRunner:
     def __init__(self, model, params, *, max_len: int,
-                 chunk_buckets=DEFAULT_CHUNK_BUCKETS):
+                 chunk_buckets=DEFAULT_CHUNK_BUCKETS,
+                 backend: str = "reference", kernel_interpret: bool = True):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
         self.model = model
+        self.backend = backend
+        self.kernel_interpret = kernel_interpret
+        self.pack_stats = None
+        if backend == "quantized":
+            params, stats = pack_model_params(model, params)
+            if stats["quantized_linears_total"] == 0:
+                raise ValueError(
+                    "backend='quantized' needs W(1+1)A(1x4)-quantized "
+                    "params (run quantize_model_sequential first); got a "
+                    "pure-fp tree")
+            self.pack_stats = stats
         self.params = params
         self.max_len = max_len
         # clamp buckets to the cache: a chunk window [pos, pos+C) must fit
@@ -43,7 +75,8 @@ class ModelRunner:
             raise ValueError(f"no usable chunk bucket in {chunk_buckets}")
         self.chunk_buckets = tuple(buckets)
 
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._decode = jax.jit(self._traced(model.decode_step, "decode"),
+                               donate_argnums=(2,))
         self._write = jax.jit(write_slot_row, donate_argnums=(0,))
         self._sample = jax.jit(sample_tokens_batched)
         self._argmax = jax.jit(
@@ -53,6 +86,20 @@ class ModelRunner:
 
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+
+    def _traced(self, fn, mode: str):
+        """Backend shim: on the quantized backend the function is traced
+        inside the serving kernel mode, baking the Pallas-kernel routing
+        into the jitted computation; the reference backend traces it
+        bare.  Pure trace-time — the per-call overhead is one context
+        check."""
+        if self.backend != "quantized":
+            return fn
+
+        def traced(*args):
+            with kernel_serving(mode, interpret=self.kernel_interpret):
+                return fn(*args)
+        return traced
 
     # ---------------- compile-cache observability ----------------
 
@@ -95,8 +142,9 @@ class ModelRunner:
         buf[:m] = prompt[start:start + m]
         fn = self._chunk_fns.get(c)
         if fn is None:
-            fn = self._chunk_fns[c] = jax.jit(self.model.prefill_chunk,
-                                              donate_argnums=(2,))
+            fn = self._chunk_fns[c] = jax.jit(
+                self._traced(self.model.prefill_chunk, "prefill"),
+                donate_argnums=(2,))
         logits, caches = fn(self.params, jnp.asarray(buf), caches,
                             jnp.asarray(slot, jnp.int32),
                             jnp.asarray(start, jnp.int32),
@@ -111,8 +159,9 @@ class ModelRunner:
         s = len(prompt)
         fn = self._full_fns.get(s)
         if fn is None:
-            fn = self._full_fns[s] = jax.jit(
-                lambda p, t: self.model.prefill(p, t, max_len=self.max_len))
+            fn = self._full_fns[s] = jax.jit(self._traced(
+                lambda p, t: self.model.prefill(p, t, max_len=self.max_len),
+                "prefill"))
         logits, fresh = fn(self.params, jnp.asarray(prompt)[None, :])
         self.prefill_dispatches += 1
         return logits, fresh

@@ -1,0 +1,261 @@
+"""Kernel-native PackedLinear container: lossless pack/unpack round
+trips (every linear shape the tiny configs produce + random shapes),
+bit-identical reference behaviour outside serving kernel mode, and
+kernel-path agreement with ``quantized_dot`` inside it."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.bwa_linear import dequantize_weight
+from repro.core.gptq import QuantizedLinear, quantize_linear
+from repro.core.packed_linear import (
+    PackedLinear,
+    current_kernel_mode,
+    kernel_serving,
+    pack_linear,
+    pack_model_params,
+    packed_dot,
+    unpack_linear,
+)
+from repro.core.quant_container import dot, quantized_dot
+from repro.core.quantize_model import QUANT_LEAF_NAMES
+from repro.models.model import build_model
+
+try:        # hypothesis is dev-only; everything else here runs without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def random_qlinear(rng: np.random.Generator, c_in: int, c_out: int, *,
+                   group: int = 32, n_outlier: int = 0,
+                   bias: bool = False) -> QuantizedLinear:
+    """A structurally valid QuantizedLinear with random field contents
+    (no calibration run needed — pack/unpack is a pure layout
+    property).  ``row_sum`` is made consistent with the packed bits so
+    the dot paths agree too."""
+    c_norm = c_in - n_outlier
+    assert c_norm % group == 0 and group % 32 == 0
+    g = c_norm // group
+    q = QuantizedLinear(
+        q_packed=jnp.asarray(rng.integers(0, 2**32, (c_out, c_norm // 32),
+                                          dtype=np.uint32)),
+        m_packed=jnp.asarray(rng.integers(0, 2**32, (c_out, c_norm // 32),
+                                          dtype=np.uint32)),
+        centers=jnp.asarray(np.sort(
+            rng.normal(size=(c_out, g, 4)).astype(np.float32) * 0.1,
+            axis=-1)),
+        w8=jnp.asarray(rng.integers(-127, 128, (c_out, n_outlier),
+                                    dtype=np.int8)),
+        w8_scale=jnp.asarray(
+            np.abs(rng.normal(size=(c_out, 1))).astype(np.float32) + 1e-3),
+        perm=jnp.asarray(rng.permutation(c_in).astype(np.int32)),
+        act_gamma=jnp.asarray(
+            1.0 + 0.02 * rng.normal(size=4).astype(np.float32)),
+        row_sum=jnp.zeros((c_out,), jnp.float32),
+        bias=(jnp.asarray(rng.normal(size=c_out).astype(np.float32))
+              if bias else None),
+        group_size=group, c_in=c_in, c_out=c_out, n_outlier=n_outlier)
+    w_hat = dequantize_weight(q)
+    return dataclasses.replace(
+        q, row_sum=jnp.sum(w_hat[:, :c_norm], axis=1))
+
+
+def tiny_linear_shapes() -> list[tuple[int, int]]:
+    """Every 2-D quantizable linear shape a configs/tiny.py dense
+    variant instantiates (the shapes the serving backend packs)."""
+    cfg = tiny_variant(get_arch("llama1-7b"))
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shapes = set()
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", ""))
+        if name in QUANT_LEAF_NAMES and leaf.ndim == 3:  # [units, in, out]
+            shapes.add((int(leaf.shape[1]), int(leaf.shape[2])))
+    assert shapes, "tiny config produced no quantizable linears"
+    return sorted(shapes)
+
+
+def assert_qlinear_equal(a: QuantizedLinear, b: QuantizedLinear):
+    assert (a.group_size, a.c_in, a.c_out, a.n_outlier) == \
+        (b.group_size, b.c_in, b.c_out, b.n_outlier)
+    for f in ("q_packed", "m_packed", "centers", "w8", "w8_scale", "perm",
+              "act_gamma", "row_sum"):
+        ga, gb = getattr(a, f), getattr(b, f)
+        assert ga.dtype == gb.dtype and ga.shape == gb.shape, f
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb),
+                                      err_msg=f)
+    assert (a.bias is None) == (b.bias is None)
+    if a.bias is not None:
+        np.testing.assert_array_equal(np.asarray(a.bias), np.asarray(b.bias))
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("c_in,c_out", tiny_linear_shapes())
+    def test_tiny_config_shapes_lossless(self, rng, c_in, c_out):
+        q = random_qlinear(rng, c_in, c_out, group=32,
+                           n_outlier=(32 if c_in > 32 else 0))
+        assert_qlinear_equal(unpack_linear(pack_linear(q)), q)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=25, deadline=None)
+        @given(data=st.data())
+        def test_random_shapes_lossless(self, data):
+            group = data.draw(st.sampled_from([32, 64]), label="group")
+            g = data.draw(st.integers(1, 6), label="groups")
+            n_out = data.draw(st.sampled_from([0, group]), label="outliers")
+            c_out = data.draw(st.integers(1, 130), label="c_out")
+            bias = data.draw(st.booleans(), label="bias")
+            rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+            q = random_qlinear(rng, g * group + n_out, c_out, group=group,
+                               n_outlier=n_out, bias=bias)
+            p = pack_linear(q)
+            assert p.qp.shape == (c_out, g, group // 32)
+            assert_qlinear_equal(unpack_linear(p), q)
+    else:
+        @pytest.mark.parametrize("seed", range(8))
+        def test_random_shapes_lossless(self, seed):
+            """Seeded stand-in sweep when hypothesis isn't installed."""
+            r = np.random.default_rng(seed)
+            group = int(r.choice([32, 64]))
+            n_out = int(r.choice([0, group]))
+            q = random_qlinear(r, int(r.integers(1, 7)) * group + n_out,
+                               int(r.integers(1, 131)), group=group,
+                               n_outlier=n_out, bias=bool(r.integers(2)))
+            assert_qlinear_equal(unpack_linear(pack_linear(q)), q)
+
+    def test_stacked_layer_dims_lossless(self, rng):
+        """Scan-over-layers trees pack with their leading stack dim."""
+        qs = [random_qlinear(rng, 64, 48, n_outlier=32) for _ in range(3)]
+        from repro.core.quantize_model import _stack_qlinears
+        stacked = _stack_qlinears(qs)
+        p = pack_linear(stacked)
+        assert p.qp.shape == (3, 48, 1, 1)
+        assert_qlinear_equal(unpack_linear(p), stacked)
+
+    def test_packed_bytes_matches_storage_accounting(self, rng):
+        q = random_qlinear(rng, 96, 64, n_outlier=32, bias=True)
+        assert pack_linear(q).packed_bytes() == q.packed_bytes()
+
+
+class TestPackedDot:
+    def _pair(self, rng, *, c_in=96, c_out=80, n_outlier=32, bias=True):
+        q = random_qlinear(rng, c_in, c_out, n_outlier=n_outlier, bias=bias)
+        return q, pack_linear(q)
+
+    def test_no_mode_bit_identical_to_reference(self, rng):
+        q, p = self._pair(rng)
+        x = jnp.asarray(rng.normal(size=(5, 96)).astype(np.float32))
+        assert current_kernel_mode() is None
+        np.testing.assert_array_equal(np.asarray(dot(x, p)),
+                                      np.asarray(quantized_dot(x, q)))
+
+    @pytest.mark.parametrize("mode", ["decode", "prefill"])
+    def test_kernel_modes_match_reference(self, rng, mode):
+        q, p = self._pair(rng)
+        x = jnp.asarray(rng.normal(size=(4, 96)).astype(np.float32))
+        want = quantized_dot(x, q)
+        with kernel_serving(mode):
+            got = jax.jit(packed_dot)(x, p)
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("mode", ["decode", "prefill"])
+    def test_ragged_shapes_and_lead_dims(self, rng, mode):
+        """Odd T / C_out and [B, 1, C] activations ride the zero-pad+
+        slice convention."""
+        q, p = self._pair(rng, c_out=72, n_outlier=0, bias=False)
+        x = jnp.asarray(rng.normal(size=(3, 1, 96)).astype(np.float32))
+        want = quantized_dot(x, q)
+        with kernel_serving(mode):
+            got = jax.jit(packed_dot)(x, p)
+        assert got.shape == want.shape == (3, 1, 72)
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_mode_context_restores(self):
+        with kernel_serving("prefill"):
+            assert current_kernel_mode().mode == "prefill"
+            with kernel_serving("decode", interpret=False):
+                km = current_kernel_mode()
+                assert (km.mode, km.interpret) == ("decode", False)
+            assert current_kernel_mode().mode == "prefill"
+        assert current_kernel_mode() is None
+        with pytest.raises(ValueError):
+            with kernel_serving("train"):
+                pass
+
+    def test_quantize_then_pack_real_artifact(self, rng):
+        """End-to-end: a real calibrated layer packs and matches on all
+        three execution paths."""
+        w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32) * 0.1)
+        xc = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+        q = quantize_linear(w, xc, QuantConfig(group_size=32,
+                                               n_outlier_groups=1,
+                                               em_iters=4))
+        p = pack_linear(q)
+        x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+        want = quantized_dot(x, q)
+        np.testing.assert_array_equal(np.asarray(packed_dot(x, p)),
+                                      np.asarray(want))
+        for mode in ("decode", "prefill"):
+            with kernel_serving(mode):
+                got = jax.jit(packed_dot)(x, p)
+            assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestPackModelParams:
+    def _quantize_tiny(self, arch: str, seed=0):
+        from repro.core.quantize_model import quantize_model_sequential
+        cfg = tiny_variant(get_arch(arch), n_layers=2).replace(
+            vocab_size=64, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0, 64)
+        qparams = quantize_model_sequential(
+            model, params, toks,
+            QuantConfig(group_size=32, n_outlier_groups=0, em_iters=2,
+                        calib_tokens=64))
+        return model, params, qparams
+
+    @pytest.mark.slow
+    def test_dense_model_fully_covered(self):
+        model, params, qparams = self._quantize_tiny("llama1-7b")
+        packed, stats = pack_model_params(model, qparams)
+        assert stats["packed_linears"] == stats["quantized_linears_total"]
+        assert stats["reference_linears"] == 0
+        assert stats["packed_bytes"] > 0
+        leaves = jax.tree.leaves(
+            packed, is_leaf=lambda x: isinstance(x, PackedLinear))
+        assert any(isinstance(l, PackedLinear) for l in leaves)
+        assert not any(isinstance(l, QuantizedLinear) for l in leaves)
+
+    @pytest.mark.slow
+    def test_ssm_model_falls_back_to_reference(self):
+        """Kinds the kernels don't cover keep their QuantizedLinear
+        leaves (reference path) — packing never breaks a model."""
+        model, params, qparams = self._quantize_tiny("mamba2-2.7b")
+        packed, stats = pack_model_params(model, qparams)
+        assert stats["packed_linears"] == 0
+        assert stats["reference_linears"] == stats["quantized_linears_total"]
+        assert stats["quantized_linears_total"] > 0
+
+    def test_fp_params_pack_to_nothing(self):
+        cfg = tiny_variant(get_arch("llama1-7b"), n_layers=2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        packed, stats = pack_model_params(model, params)
+        assert stats["quantized_linears_total"] == 0
+        assert stats["packed_linears"] == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
