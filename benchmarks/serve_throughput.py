@@ -18,7 +18,16 @@ engine at 1/4/8 slots on a small dense LM.  Headline invariants:
   per-prompt-length recompile storm;
 - decode dispatches keep landing while a long prompt is being
   chunk-prefilled (``interleaved`` > 0 under mixed traffic);
-- greedy token streams are IDENTICAL across backends (f32 compute).
+- greedy token streams are IDENTICAL across backends AND across KV
+  layouts (dense slot rows vs the paged block pool) at f32 compute;
+- on the paged layout, identical prompt prefixes occupy ONE set of
+  pool blocks (``blocks_saved_by_sharing`` > 0) and every block is
+  returned when its streams finish.
+
+KV memory stats (pool MiB, blocks in use / peak / total, blocks saved
+by prefix sharing) are reported next to tok/s and persisted into both
+``experiments/serve/throughput.json`` and the ``BENCH_serve.json``
+baseline.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick|--tiny]
 
@@ -53,45 +62,68 @@ BASELINE_PATH = os.path.join(_ROOT, "BENCH_serve.json")
 BASELINE_TOLERANCE = 0.20       # fail the gate below (1 - tol) * baseline
 
 
-def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100):
+def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
+              shared_prefix=0):
     """Mixed-length traffic; every ``long_every``-th request gets a long
-    prompt so admission overlaps live decode streams."""
+    prompt so admission overlaps live decode streams.  With
+    ``shared_prefix`` > 0, every SECOND request starts with the same
+    ``shared_prefix``-token system prompt — the paged engine stores
+    those prefix blocks once (dense engines just see longer prompts)."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, shared_prefix).astype(np.int32)
     reqs = []
     for i in range(n):
-        ln = long_len if (long_every and i % long_every == long_every - 1) \
-            else 6 + (i % 5)
-        reqs.append(Request(rid=i,
-                            prompt=rng.integers(0, vocab, ln).astype(np.int32),
-                            max_new_tokens=max_new))
+        is_long = bool(long_every) and i % long_every == long_every - 1
+        p = rng.integers(0, vocab,
+                         long_len if is_long else 6 + (i % 5)).astype(np.int32)
+        if shared_prefix and not is_long and i % 2 == 0:
+            p = np.concatenate([prefix, p])
+        reqs.append(Request(rid=i, prompt=p, max_new_tokens=max_new))
     return reqs
 
 
 def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len,
-             backend="reference"):
+             backend="reference", kv_layout="dense", block_size=32,
+             shared_prefix=0):
     engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len,
-                         backend=backend)
+                         backend=backend, kv_layout=kv_layout,
+                         block_size=block_size)
     # warmup compiles outside the timed window: decode (1), one prefill
     # per chunk bucket (bounded — NOT one per distinct prompt length)
     engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
                               long_every=3, long_len=max_len - 28))
     engine.generate(_requests(n_requests, vocab, max_new, seed=0,
-                              long_every=4, long_len=max_len - 28))
+                              long_every=4, long_len=max_len - 28,
+                              shared_prefix=shared_prefix))
     return dict(engine.last_stats)
 
 
+def _kv_summary(st):
+    """Compact KV memory line from a stats dict: pool MiB + (paged)
+    block occupancy and sharing wins."""
+    kv = st.get("kv", {})
+    mib = kv.get("pool_bytes", 0) / 2**20
+    if kv.get("layout") != "paged":
+        return f"{mib:.2f}MiB dense"
+    return (f"{mib:.2f}MiB {kv['blocks_peak_in_use']}/{kv['blocks_total']}"
+            f"blk@{kv['block_size']} shared-{kv['blocks_saved_by_sharing']}")
+
+
 def _fmt_row(label, slots, st):
-    return (f"  {label:<10}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
+    return (f"  {label:<15}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
             f"  {st['ttft_ms'] or 0:<8.0f}  {st['itl_ms'] or 0:<7.0f}"
             f"  {st['decode_steps']:<5}  "
             f"{st['dispatches_per_step']:<9.0f}  "
             f"{st['prefill_compiles']}/{len(st['chunk_buckets'])}"
-            f"{'':<13}  {st['interleaved_steps']}")
+            f"{'':<13}  {st['interleaved_steps']:<11}  {_kv_summary(st)}")
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, block_size: int = 16):
+    # kv_chunk=block_size keeps the flash-decode kernel's chunk split
+    # identical across layouts, so dense and paged streams stay
+    # bit-identical (docs/serving.md "Paged KV cache")
     cfg = bench_arch(d_model=128, n_layers=2).replace(max_seq_len=128)
-    model = build_model(cfg)
+    model = build_model(cfg, kv_chunk=block_size)
     params = model.init(jax.random.PRNGKey(0))
     calib = jax.numpy.asarray(
         np.random.default_rng(1).integers(0, cfg.vocab_size, (4, 256)))
@@ -103,18 +135,26 @@ def run(quick: bool = False):
     max_new = 8 if quick else 16
 
     rows, records = [], []
-    print("  variant     slots  tok/s    ttft_ms   itl_ms   steps"
-          "  disp/step  prefill_compiles  interleaved")
-    # both execution backends over the same quantized weights, plus the
-    # fp-params reference as the unquantized anchor
-    for label, p, backend in (("fp", params, "reference"),
-                              ("quant-ref", qparams, "reference"),
-                              ("quant-kern", qparams, "quantized")):
+    print("  variant          slots  tok/s    ttft_ms   itl_ms   steps"
+          "  disp/step  prefill_compiles  interleaved  kv")
+    # both execution backends over the same quantized weights (dense and
+    # paged KV layouts), plus the fp-params reference as the unquantized
+    # anchor
+    for label, p, backend, layout in (
+            ("fp", params, "reference", "dense"),
+            ("quant-ref", qparams, "reference", "dense"),
+            ("quant-ref-paged", qparams, "reference", "paged"),
+            ("quant-kern", qparams, "quantized", "dense"),
+            ("quant-kern-paged", qparams, "quantized", "paged")):
         for slots in slot_counts:
+            # identical traffic for every variant (dense engines just
+            # prefill the shared prefix) so rows are comparable
             st = _measure(model, p, cfg.vocab_size, slots=slots,
                           n_requests=n_requests, max_new=max_new,
-                          max_len=128, backend=backend)
-            rec = {"variant": label, "backend": backend, **st,
+                          max_len=128, backend=backend, kv_layout=layout,
+                          block_size=block_size, shared_prefix=40)
+            rec = {"variant": label, "backend": backend,
+                   "kv_layout": layout, **st,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
             records.append(rec)
             print(_fmt_row(label, slots, st))
@@ -131,14 +171,18 @@ def run(quick: bool = False):
 
 
 def tiny_smoke(baseline_path: str = BASELINE_PATH,
-               update_baseline: bool = False) -> dict:
-    """CI serve-smoke lane: seconds-scale run of BOTH backends over the
-    same quantized weights, asserting the serving invariants (module
-    docstring), cross-backend greedy-stream parity, and the
-    ``BENCH_serve.json`` perf gate."""
+               update_baseline: bool = False, block_size: int = 16) -> dict:
+    """CI serve-smoke lane: seconds-scale run of BOTH backends x BOTH
+    KV layouts over the same quantized weights, asserting the serving
+    invariants (module docstring), greedy-stream parity across every
+    (backend, layout) cell, paged-pool hygiene (multi-block sequences
+    via a small ``block_size``, prefix blocks stored once, no leaked
+    blocks), and the ``BENCH_serve.json`` perf gate."""
     cfg = bench_arch(d_model=64, n_layers=2).replace(max_seq_len=128,
                                                      dtype="float32")
-    model = build_model(cfg)
+    # kv_chunk=block_size: equal flash-decode chunk splits across
+    # layouts — the bit-parity precondition on the kernel path
+    model = build_model(cfg, kv_chunk=block_size)
     params = model.init(jax.random.PRNGKey(0))
     calib = jax.numpy.asarray(
         np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 256)))
@@ -146,43 +190,60 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
         model, params, calib, default_qcfg(em_iters=2, calib_tokens=512))
 
     records, streams = [], {}
+    traffic = dict(long_every=4, long_len=100, shared_prefix=40)
     for backend in ("reference", "quantized"):
-        engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
-                             chunk_buckets=(8, 32), backend=backend)
-        # warmup so decode_tokens_per_sec measures steady state, not jit
-        engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
-                                  long_every=3, long_len=100))
-        # 8 requests x 32 new tokens: a decode window long enough that
-        # the perf gate measures steady state, not timer noise
-        t0 = time.perf_counter()
-        done = engine.generate(_requests(8, cfg.vocab_size, 32, seed=0,
-                                         long_every=4, long_len=100))
-        dt = time.perf_counter() - t0
-        st = dict(engine.last_stats)
-        assert len(done) == 8 and all(len(v) > 0 for v in done.values())
-        assert st["dispatches_per_step"] == 1.0, st
-        assert st["prefill_compiles"] <= len(engine.runner.chunk_buckets), st
-        assert st["interleaved_steps"] > 0, st  # decode flowed during admission
-        streams[backend] = done
-        records.append({"variant": f"tiny-smoke/{backend}",
-                        "backend": backend, **st,
-                        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")})
-        extra = ""
-        if engine.packed_stats is not None:
-            ps = engine.packed_stats
-            extra = (f", {ps['packed_linears']} packed linears "
-                     f"({ps['packed_bytes'] / 2**10:.0f} KiB)")
-        print(f"  serve-smoke[{backend}] OK: {st['tokens']} tokens in "
-              f"{dt:.1f}s, {st['decode_tokens_per_sec']:.1f} decode tok/s, "
-              f"{st['dispatches_per_step']:.0f} dispatch/step, "
-              f"{st['prefill_compiles']} prefill compiles "
-              f"(<= {len(engine.runner.chunk_buckets)} buckets), "
-              f"{st['interleaved_steps']} interleaved steps{extra}")
-    assert streams["reference"] == streams["quantized"], \
-        "greedy streams diverged across execution backends"
-    print("  serve-smoke parity OK: greedy streams identical across backends")
-    ratio = (records[1]["decode_tokens_per_sec"]
-             / records[0]["decode_tokens_per_sec"])
+        for layout in ("dense", "paged"):
+            gate = backend if layout == "dense" else f"{backend}-paged"
+            engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
+                                 chunk_buckets=(8, 32), backend=backend,
+                                 kv_layout=layout, block_size=block_size)
+            # warmup so decode_tokens_per_sec measures steady state, not jit
+            engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
+                                      long_every=3, long_len=100))
+            # 8 requests x 32 new tokens: a decode window long enough that
+            # the perf gate measures steady state, not timer noise
+            t0 = time.perf_counter()
+            done = engine.generate(_requests(8, cfg.vocab_size, 32, seed=0,
+                                             **traffic))
+            dt = time.perf_counter() - t0
+            st = dict(engine.last_stats)
+            assert len(done) == 8 and all(len(v) > 0 for v in done.values())
+            assert st["dispatches_per_step"] == 1.0, st
+            assert st["prefill_compiles"] <= \
+                len(engine.runner.chunk_buckets), st
+            assert st["interleaved_steps"] > 0, st  # decode kept flowing
+            kv = st["kv"]
+            if layout == "paged":
+                # multi-block sequences actually exercised + pool hygiene
+                assert kv["blocks_peak_in_use"] > engine.slots, kv
+                assert kv["blocks_saved_by_sharing"] > 0, kv
+                assert kv["blocks_in_use"] == 0, kv     # all freed
+                assert st["shared_prefix_tokens"] > 0, st
+            streams[(backend, layout)] = done
+            records.append({"variant": f"tiny-smoke/{gate}",
+                            "backend": backend, "kv_layout": layout,
+                            "gate": gate, **st,
+                            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")})
+            extra = ""
+            if engine.packed_stats is not None:
+                ps = engine.packed_stats
+                extra = (f", {ps['packed_linears']} packed linears "
+                         f"({ps['packed_bytes'] / 2**10:.0f} KiB)")
+            print(f"  serve-smoke[{gate}] OK: {st['tokens']} tokens in "
+                  f"{dt:.1f}s, {st['decode_tokens_per_sec']:.1f} decode "
+                  f"tok/s, {st['dispatches_per_step']:.0f} dispatch/step, "
+                  f"{st['prefill_compiles']} prefill compiles "
+                  f"(<= {len(engine.runner.chunk_buckets)} buckets), "
+                  f"{st['interleaved_steps']} interleaved steps, "
+                  f"kv {_kv_summary(st)}{extra}")
+    first = next(iter(streams.values()))
+    assert all(v == first for v in streams.values()), \
+        "greedy streams diverged across (backend, kv_layout) cells"
+    print("  serve-smoke parity OK: greedy streams identical across "
+          f"{len(streams)} (backend, kv_layout) cells")
+    by_gate = {r["gate"]: r for r in records}
+    ratio = (by_gate["quantized"]["decode_tokens_per_sec"]
+             / by_gate["reference"]["decode_tokens_per_sec"])
     print(f"  backend ratio: quantized/reference = {ratio:.2f}x decode tok/s "
           "(machine-independent trend line)")
     _write(records)
@@ -195,10 +256,18 @@ def _gate_baseline(records, path: str, *, update: bool = False):
     committed baseline; >tolerance regression fails, delta always
     printed.  ``update=True`` rewrites the baseline instead (commit the
     result after a legitimate perf change — docs/ci.md)."""
-    measured = {r["backend"]: float(r["decode_tokens_per_sec"])
-                for r in records if r.get("backend")}
+    measured = {r["gate"]: float(r["decode_tokens_per_sec"])
+                for r in records if r.get("gate")}
     ratio = measured["quantized"] / measured["reference"]
     if update:
+        # KV memory snapshot rides in the baseline so the paged win
+        # (pool MiB, sharing) is a committed, reviewable number too
+        kv_stats = {r["gate"]: {k: r["kv"][k] for k in
+                                ("pool_bytes", "blocks_total",
+                                 "blocks_peak_in_use",
+                                 "blocks_saved_by_sharing")
+                                if k in r["kv"]}
+                    for r in records if r.get("kv_layout") == "paged"}
         json.dump({
             "bench": "serve_throughput --tiny",
             "tolerance": BASELINE_TOLERANCE,
@@ -207,6 +276,7 @@ def _gate_baseline(records, path: str, *, update: bool = False):
             # machine-independent: survives runner-hardware changes that
             # shift both absolute numbers together
             "quantized_to_reference_ratio": round(ratio, 3),
+            "kv": kv_stats,
             "updated": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "update_cmd": ("PYTHONPATH=src python -m "
                            "benchmarks.serve_throughput --tiny "
@@ -269,9 +339,13 @@ if __name__ == "__main__":
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from this run instead of "
                          "gating against it (commit the result)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-layout block size; small values force "
+                         "multi-block sequences (CI uses 16)")
     args = ap.parse_args()
     if args.tiny:
         tiny_smoke(baseline_path=args.baseline,
-                   update_baseline=args.update_baseline)
+                   update_baseline=args.update_baseline,
+                   block_size=args.block_size)
     else:
-        run(quick=args.quick)
+        run(quick=args.quick, block_size=args.block_size)

@@ -14,4 +14,8 @@ wrapper), ref.py (pure-jnp oracle).
 from repro.kernels.bwa_matvec.ops import bwa_matvec, bwa_matvec_planes
 from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
 from repro.kernels.act_quant.ops import act_quant_pack
-from repro.kernels.kv4_attention.ops import kv4_chunk_for, kv4_decode_attention
+from repro.kernels.kv4_attention.ops import (
+    kv4_chunk_for,
+    kv4_decode_attention,
+    kv4_paged_decode_attention,
+)

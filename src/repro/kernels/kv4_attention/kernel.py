@@ -70,6 +70,132 @@ def _kernel(len_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref, o_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
+def _paged_kernel(len_ref, bt_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, d: int, s_chunk: int,
+                  n_chunks: int, scale: float):
+    """Same online-softmax body as ``_kernel`` over a PAGED pool: the
+    grid's kv-chunk axis walks LOGICAL positions (chunk ci covers
+    [ci*sc, (ci+1)*sc)); which pool block each chunk's tile comes from
+    is decided by the scalar-prefetched block table inside the
+    BlockSpec index maps, so the compute sequence — and therefore the
+    accumulation order and every intermediate — is identical to the
+    dense kernel at the same effective chunk split (bit-parity
+    contract, see docs/serving.md).  Chunks behind a null-block table
+    entry load garbage that the ``pos < kv_len`` mask turns into exact
+    zeros (exp(-inf - m) underflows to 0.0)."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0)]   # per-batch-row (= serving slot)
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
+    k = _unpack_dequant(kp_ref[0, 0], ks_ref[0, 0], d)  # [Sc, D]
+    v = _unpack_dequant(vp_ref[0, 0], vs_ref[0, 0], d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, Sc]
+    pos = ci * s_chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # [G, Sc]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_paged_decode_attention_kernel(q, k_packed, k_scales, v_packed,
+                                      v_scales, kv_len, block_tables, *,
+                                      s_chunk: int = 512,
+                                      interpret: bool = True):
+    """Paged flash-decode: q [B, H, D] attends a POOL cache through
+    per-row block tables.
+
+    Pool layout (shared across all serving slots; block id 0 is the
+    reserved null block):
+      k/v packed : int8 [NB+1, BS, Hkv, D/2]
+      k/v scales : f32  [NB+1, BS, Hkv, 2]
+    ``block_tables`` [B, n_bt] int32 maps row b's logical block i to a
+    pool block id; ``kv_len`` [B] (or scalar) per-row valid lengths.
+
+    The block table and lengths ride in as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``), so each (batch, kv-head, chunk) grid
+    step DMAs exactly ONE s_chunk-row tile of the pool — the one its
+    table entry points at — instead of a gathered dense row: HBM
+    traffic stays 4 bits/element over only the blocks the row owns.
+    ``s_chunk`` must divide BS (block-table walking needs chunks that
+    never straddle a page boundary).  Returns [B, H, D] f32.
+    """
+    b, h, d = q.shape
+    bs, hkv = k_packed.shape[1], k_packed.shape[2]
+    g = h // hkv
+    sc = min(s_chunk, bs)
+    assert bs % sc == 0, (bs, sc)
+    cpb = bs // sc                       # chunks per block
+    n_bt = block_tables.shape[1]
+    n_chunks = n_bt * cpb
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    # [NB+1, Hkv, BS, ...] layout so (block, kv-head, chunk) tiles are
+    # contiguous along the streamed axis
+    kp = k_packed.transpose(0, 2, 1, 3)
+    ks = k_scales.transpose(0, 2, 1, 3)
+    vp = v_packed.transpose(0, 2, 1, 3)
+    vs = v_scales.transpose(0, 2, 1, 3)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def pool_spec(width):
+        # chunk ci of row bi lives in pool block bt[bi, ci // cpb],
+        # sub-tile ci % cpb — the scalar-prefetched table IS the index map
+        return pl.BlockSpec(
+            (1, 1, sc, width),
+            lambda bi, hi, ci, lens_ref, bt_ref:
+                (bt_ref[bi, ci // cpb], hi, ci % cpb, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, hi, ci, lens_ref, bt_ref: (bi, hi, 0, 0)),
+            pool_spec(d // 2),
+            pool_spec(2),
+            pool_spec(d // 2),
+            pool_spec(2),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d),
+            lambda bi, hi, ci, lens_ref, bt_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, d=d, s_chunk=sc, n_chunks=n_chunks,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        interpret=interpret,
+    )(lens, bt, qg, kp, ks, vp, vs)
+    return out.reshape(b, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
 def kv4_decode_attention_kernel(q, k_packed, k_scales, v_packed, v_scales,
                                 kv_len, *, s_chunk: int = 512,

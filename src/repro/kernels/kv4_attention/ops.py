@@ -5,7 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.kv4_attention.kernel import kv4_decode_attention_kernel
+from repro.kernels.kv4_attention.kernel import (
+    kv4_decode_attention_kernel,
+    kv4_paged_decode_attention_kernel,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
@@ -20,6 +23,21 @@ def kv4_decode_attention(q, cache, kv_len, *, s_chunk: int = 512,
     return kv4_decode_attention_kernel(
         q, cache.k, cache.k_scale, cache.v, cache.v_scale, kv_len,
         s_chunk=s_chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_paged_decode_attention(q, cache, kv_len, block_tables, *,
+                               s_chunk: int = 512, interpret: bool = True):
+    """Paged-pool entry: ``cache`` leaves are ``[NB+1, BS, ...]`` (one
+    shared block pool, id 0 = null block) and ``block_tables`` [B, n_bt]
+    maps each batch row's logical blocks to pool blocks.  The kernel
+    grid walks the table via scalar prefetch — only the blocks a row
+    owns are streamed.  ``s_chunk`` must divide the pool's block size;
+    at an equal effective chunk split the accumulation order matches
+    the dense kernel bit-for-bit."""
+    return kv4_paged_decode_attention_kernel(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, kv_len,
+        block_tables, s_chunk=s_chunk, interpret=interpret)
 
 
 def kv4_chunk_for(s_max: int, cap: int = 512) -> int:

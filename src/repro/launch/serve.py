@@ -25,6 +25,16 @@ def main():
                          "params, i.e. not --no-quant)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV cache layout: dense slot rows, or the paged "
+                         "INT4 block pool (block tables, ref-counted "
+                         "prefix sharing, block-granular admission)")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="paged-layout page size in tokens")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: fully provisioned "
+                         "slots * ceil(max_len / block_size))")
     ap.add_argument("--prompt", action="append", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -41,7 +51,11 @@ def main():
     cfg = get_arch(args.arch)
     if args.tiny:
         cfg = tiny_variant(cfg)
-    model = build_model(cfg)
+    # paged: cap the flash-decode KV chunk at the block size so dense
+    # and paged runs of the same config stay bit-identical on the
+    # quantized backend (docs/serving.md "Paged KV cache")
+    model = build_model(cfg, **({"kv_chunk": args.block_size}
+                                if args.kv_layout == "paged" else {}))
     params = model.init(jax.random.PRNGKey(args.seed))
     tok = ByteTokenizer()
 
@@ -58,7 +72,9 @@ def main():
                     max_new_tokens=args.max_new)
             for i, p in enumerate(prompts)]
     engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512,
-                         backend=args.backend)
+                         backend=args.backend, kv_layout=args.kv_layout,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks)
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
@@ -78,6 +94,17 @@ def main():
           f"{st['dispatches_per_step']:.0f} dispatch/step, "
           f"{st['prefill_compiles']} prefill compiles for "
           f"buckets {st['chunk_buckets']}")
+    kv = st["kv"]
+    if kv["layout"] == "paged":
+        print(f"[serve] paged KV pool: {kv['pool_bytes'] / 2**20:.2f} MiB, "
+              f"{kv['blocks_peak_in_use']}/{kv['blocks_total']} blocks peak "
+              f"(block_size {kv['block_size']}), "
+              f"{kv['blocks_saved_by_sharing']} blocks saved by prefix "
+              f"sharing, {st['shared_prefix_tokens']} prompt tokens "
+              f"skipped, {st['block_waits']} block-waits")
+    else:
+        print(f"[serve] dense KV cache: {kv['pool_bytes'] / 2**20:.2f} MiB "
+              f"({engine.slots} slots x {engine.max_len} rows)")
 
 
 if __name__ == "__main__":

@@ -218,6 +218,80 @@ def _slot_row(cache: KVCache, slot) -> KVCache:
         v_scale=sl(cache.v_scale) if cache.v_scale is not None else None)
 
 
+# ---------------------------------------------------------------------------
+# Paged cache plumbing (pool leaves [num_blocks, block_size, ...], per-slot
+# block tables mapping logical positions to pool rows; see serve/block_pool)
+# ---------------------------------------------------------------------------
+
+def _flat_rows(buf):
+    """[NB, BS, ...] pool leaf -> [NB*BS, ...] flat row view."""
+    return buf.reshape((buf.shape[0] * buf.shape[1],) + buf.shape[2:])
+
+
+def _paged_row_index(block_table, positions, block_size: int):
+    """Flat pool-row index for logical ``positions`` through a block
+    table: position p -> bt[p // BS] * BS + p % BS.  ``block_table``
+    [n_bt] with ``positions`` [N], or [B, n_bt] with ``positions`` [B]
+    (one position per table row).  Table entries of 0 (null block)
+    redirect to the null block's rows — never attendable by a valid
+    query."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    p = jnp.asarray(positions, jnp.int32)
+    if bt.ndim == 1:
+        blk = jnp.take(bt, p // block_size)
+    else:
+        blk = jnp.take_along_axis(bt, (p // block_size)[:, None],
+                                  axis=1)[:, 0]
+    return blk * block_size + p % block_size
+
+
+def _paged_store_rows(cache: KVCache, k_new, v_new, dst, kv_bits: int
+                      ) -> KVCache:
+    """Scatter K/V rows into a paged pool.  ``k_new/v_new``
+    [N, Hkv, Dh] (one row per scatter target); ``dst`` [N] flat pool-row
+    indices (see ``_paged_row_index``).  Cache leaves [NB, BS, ...].
+
+    Duplicate targets only occur among null-block redirects (idle
+    slots, padding past a slot's reserved span) — all garbage, all
+    masked — so scatter order never affects an attendable row.
+    """
+    def upd(buf, val):
+        flat = _flat_rows(buf)
+        return flat.at[dst].set(val.astype(buf.dtype)).reshape(buf.shape)
+
+    if kv_bits == 4:
+        kp, vp, ks, vs = _pack_kv(k_new, v_new)   # shape-agnostic RTN
+        return cache._replace(k=upd(cache.k, kp), v=upd(cache.v, vp),
+                              k_scale=upd(cache.k_scale, ks),
+                              v_scale=upd(cache.v_scale, vs))
+    return cache._replace(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
+
+
+def _paged_gather_rows(cache: KVCache, block_table) -> KVCache:
+    """Gather the logical rows of one or more slots out of a paged pool
+    into a dense-layout view: ``block_table`` [n_bt] -> leaves
+    [L, ...]; [B, n_bt] -> leaves [B, L, ...] with L = n_bt * BS.
+
+    The gathered view is elementwise identical to the dense layout's
+    slot rows on every valid position, so downstream attention math is
+    bit-identical to the dense path (extra columns — block padding past
+    max_len, null-block rows — sit behind the same position-derived
+    masks whose contributions are exact zeros).
+    """
+    bs = cache.k.shape[1]
+    bt = jnp.asarray(block_table, jnp.int32)
+    idx = (bt[..., None] * bs + jnp.arange(bs, dtype=jnp.int32))
+    idx = idx.reshape(bt.shape[:-1] + (bt.shape[-1] * bs,))
+
+    def g(buf):
+        return jnp.take(_flat_rows(buf), idx, axis=0)
+
+    return cache._replace(
+        k=g(cache.k), v=g(cache.v),
+        k_scale=g(cache.k_scale) if cache.k_scale is not None else None,
+        v_scale=g(cache.v_scale) if cache.v_scale is not None else None)
+
+
 def attention_block(params, x, *, n_heads, n_kv, head_dim, rope_theta,
                     causal=True, window=0, positions=None, q_chunk=1024):
     """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
@@ -312,9 +386,103 @@ def attention_prefill_chunk(params, x, cache: KVCache, slot, pos, *,
     return out, cache
 
 
+def attention_prefill_chunk_paged(params, x, cache: KVCache, block_table,
+                                  pos, *, n_heads, n_kv, head_dim,
+                                  rope_theta, kv_bits):
+    """One prefill chunk for ONE slot of a paged pool cache.
+
+    Identical math to ``attention_prefill_chunk`` with the slot's dense
+    row replaced by its block table: K/V for absolute positions
+    [pos, pos+C) are quantized and SCATTERED to the pool rows the table
+    maps them to, then the chunk's queries attend the slot's gathered
+    logical rows (length ``n_bt * block_size >= max_len``) under the
+    same absolute-position causal mask — bit-identical to the dense
+    path (gathered valid rows are the same bytes; extra columns are
+    causally masked exact zeros).  Rows mapped to the null block
+    (positions past the slot's reserved span, only ever chunk padding)
+    take garbage harmlessly.  Returns (out [1, C, D], new_cache).
+    """
+    b, c, _ = x.shape
+    bs = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    positions = pos + jnp.arange(c)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    dst = _paged_row_index(block_table, positions, bs)
+    cache = _paged_store_rows(cache, k[0], v[0], dst, kv_bits)
+    row = _paged_gather_rows(cache, block_table)        # leaves [L, ...]
+    row = row._replace(
+        k=row.k[None], v=row.v[None],
+        k_scale=row.k_scale[None] if row.k_scale is not None else None,
+        v_scale=row.v_scale[None] if row.v_scale is not None else None)
+    kc, vc = _load(row, kv_bits, x.dtype)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=pos)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, c, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
+def attention_decode_paged(params, x, cache: KVCache, pos, block_tables, *,
+                           n_heads, n_kv, head_dim, rope_theta, kv_bits,
+                           kernel_ok: bool = True, kv_chunk: int = 512):
+    """Slot-parallel single-token decode against a paged pool cache.
+
+    x [B, 1, D]; ``pos`` [B] (or scalar) absolute positions;
+    ``block_tables`` [B, n_bt] int32 mapping each slot's logical blocks
+    to pool rows.  The new K/V row is scattered through the table
+    (slots whose entry is the null block — idle rides — write garbage
+    into never-attended rows), then attention runs either through the
+    paged flash-decode kernel (walks the block table in the kernel grid
+    via scalar prefetch; KV-chunk = the largest divisor of block_size
+    <= ``kv_chunk``, so a dense engine configured with the same
+    effective chunk split is bit-identical) or the reference gather
+    path (bit-identical to the dense reference path by the
+    masked-extra-columns argument).  Returns (out, new_cache).
+    """
+    from repro.core.packed_linear import current_kernel_mode
+
+    b = x.shape[0]
+    bs = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_v = pos if pos.ndim else jnp.full((b,), pos, jnp.int32)   # [B]
+    bt = jnp.asarray(block_tables, jnp.int32)
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    if rope_theta:
+        q = apply_rope(q, pos_v[:, None], rope_theta)
+        k = apply_rope(k, pos_v[:, None], rope_theta)
+    dst = _paged_row_index(bt, pos_v, bs)
+    cache = _paged_store_rows(cache, k[:, 0], v[:, 0], dst, kv_bits)
+    km = current_kernel_mode()
+    if (kernel_ok and km is not None and km.mode == "decode"
+            and kv_bits == 4 and head_dim % 2 == 0):
+        from repro.kernels.kv4_attention.ops import (
+            kv4_chunk_for,
+            kv4_paged_decode_attention,
+        )
+        sc = kv4_chunk_for(bs, cap=kv_chunk)
+        if sc:
+            out = kv4_paged_decode_attention(q[:, 0], cache, pos_v + 1, bt,
+                                             s_chunk=sc,
+                                             interpret=km.interpret)
+            out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+            return dot(out, params["wo"]), cache
+    row = _paged_gather_rows(cache, bt)              # leaves [B, L, ...]
+    kc, vc = _load(row, kv_bits, x.dtype)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=pos, kv_len=pos + 1)
+    out = dot(out.reshape(b, 1, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
 def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
                      head_dim, rope_theta, kv_bits, window=0,
-                     kernel_ok: bool = True):
+                     kernel_ok: bool = True, kv_chunk: int = 512):
     """Single-token decode with (possibly int4) KV cache.
 
     x [B, 1, D]; pos int32 absolute position — a scalar (all rows at the
@@ -354,7 +522,7 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
             kv4_chunk_for,
             kv4_decode_attention,
         )
-        sc = kv4_chunk_for(cache.k.shape[1])
+        sc = kv4_chunk_for(cache.k.shape[1], cap=kv_chunk)
         if sc:
             cache = _store(cache, k, v, pos, kv_bits)
             out = kv4_decode_attention(q[:, 0], cache, pos_v + 1,

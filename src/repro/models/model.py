@@ -32,13 +32,18 @@ from repro.models.transformer import (
 class LanguageModel:
     def __init__(self, cfg: ArchConfig, q_chunk: int = 512,
                  loss_chunk: int = 512, kv_bits: int = 4,
-                 scan_unroll: int | bool = 1):
+                 scan_unroll: int | bool = 1, kv_chunk: int = 512):
         self.cfg = cfg
         self.kinds = sublayer_kinds(cfg)
         self.n_units, self.n_tail = stack_counts(cfg)
         self.q_chunk = q_chunk
         self.loss_chunk = loss_chunk
         self.kv_bits = kv_bits
+        # cap on the flash-decode kernel's KV-chunk size (dense: largest
+        # divisor of max_len <= kv_chunk; paged: of block_size).  Bit-
+        # parity across engines on the kernel path requires equal
+        # effective chunk splits — see docs/serving.md.
+        self.kv_chunk = kv_chunk
         # full unroll for the dry-run: XLA cost_analysis counts a rolled
         # while-loop body ONCE, so roofline terms need the real op count
         self.scan_unroll = scan_unroll
@@ -266,7 +271,7 @@ class LanguageModel:
                 and self.cfg.ffn_kind != FFNKind.MOE)
 
     def prefill_chunk(self, params, tokens, caches, slot, pos,
-                      last_idx=None):
+                      last_idx=None, block_table=None):
         """Run one fixed-size prompt chunk for ONE slot of a shared
         slot-indexed cache tree (``init_caches`` layout), writing K/V
         directly into rows [pos, pos+C) of the slot's cache row.
@@ -277,11 +282,18 @@ class LanguageModel:
         new caches).  Bit-identical to whole-prompt ``prefill`` for any
         chunk split (see ``attention_prefill``); padding rows are
         causally masked and overwritten before they become attendable.
+
+        Paged layout: pass ``block_table`` ([n_bt] int32, the slot's row
+        of the engine's block table) with ``init_paged_caches`` caches;
+        ``slot`` is then unused (placement lives in the table) and may
+        be None.
         """
         cfg = self.cfg
         x = jnp.take(params["embed"], tokens[None, :], axis=0)
-        ctx = DecodeCtx(pos=jnp.asarray(pos, jnp.int32),
-                        slot=jnp.asarray(slot, jnp.int32))
+        ctx = DecodeCtx(
+            pos=jnp.asarray(pos, jnp.int32),
+            slot=None if slot is None else jnp.asarray(slot, jnp.int32),
+            block_tables=block_table)
 
         def scan_body(h, xs):
             unit_params, cache = xs
@@ -315,14 +327,16 @@ class LanguageModel:
         logits = self._logits(params, xl)[:, 0]
         return logits, {"main": new_main, "tail": new_tail}
 
-    def decode_step(self, params, token, caches, pos):
+    def decode_step(self, params, token, caches, pos, block_tables=None):
         """One token. token [B] int32; pos int32 absolute position —
         scalar, or [B] for slot-parallel decode where every batch row
         (= serving slot) sits at its own position in a shared cache.
-        Returns (logits [B, V], new caches)."""
+        Paged layout: pass ``block_tables`` [B, n_bt] int32 with
+        ``init_paged_caches`` caches.  Returns (logits [B, V],
+        new caches)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token[:, None], axis=0)
-        ctx = DecodeCtx(pos=pos)
+        ctx = DecodeCtx(pos=pos, block_tables=block_tables)
 
         def scan_body(h, xs):
             unit_params, cache = xs
@@ -395,6 +409,40 @@ class LanguageModel:
                 for si, kind in enumerate(self.kinds)}
         tail = ({"sub_0": stack(self.n_tail, one(self.kinds[0]))}
                 if self.n_tail else None)
+        return {"main": main, "tail": tail}
+
+    def init_paged_caches(self, num_blocks: int, block_size: int):
+        """Allocate the paged serving pool: every layer's cache leaves
+        are ``[num_blocks + 1, block_size, ...]`` — fixed-size pages of
+        one shared pool addressed through per-slot block tables
+        (``serve/block_pool.py``), with block id 0 reserved as the null
+        block (garbage sink for writes through unpopulated block-table
+        entries; never attended through a position-valid mask).
+
+        Only models whose every sub-layer is global attention can page:
+        sliding-window ring buffers and SSM/RG-LRU recurrent states have
+        no position-addressed rows to page, and cross-attention carries
+        a dense encoder cache.  Those models keep the dense slot-indexed
+        layout (``init_caches``).
+        """
+        cfg = self.cfg
+        if any(k != "attention" for k in self.kinds) or cfg.encoder_layers:
+            raise NotImplementedError(
+                f"paged KV layout needs all-global-attention sub-layers, "
+                f"got kinds {self.kinds} (encoder_layers="
+                f"{cfg.encoder_layers})")
+        hd = cfg.resolved_head_dim
+        base = attn_lib.init_kv_cache(num_blocks + 1, block_size,
+                                      cfg.n_kv_heads, hd,
+                                      kv_bits=self.kv_bits)
+
+        def stack(n, tree):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), tree)
+
+        main = {f"sub_{si}": stack(self.n_units, base)
+                for si in range(len(self.kinds))}
+        tail = ({"sub_0": stack(self.n_tail, base)} if self.n_tail else None)
         return {"main": main, "tail": tail}
 
 

@@ -230,7 +230,12 @@ class DecodeCtx(NamedTuple):
                               # per-row positions (slot-parallel decode)
     slot: jnp.ndarray | None = None   # cache row for mode="prefill_chunk"
                                       # (scalar int32 into a shared
-                                      # slot-indexed cache tree)
+                                      # slot-indexed cache tree; unused
+                                      # on the paged layout)
+    block_tables: jnp.ndarray | None = None
+    # paged KV layout: [B, n_bt] int32 (decode) or [n_bt] (one slot's
+    # prefill chunk) mapping logical blocks to pool rows.  None selects
+    # the dense slot-indexed layout.
 
 
 def _norm(cfg, x, g, b=None):
@@ -259,7 +264,8 @@ def _apply_ffn(cfg: ArchConfig, sub, x):
 def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
                    cache=None, ctx: DecodeCtx | None = None,
                    enc_kv=None, q_chunk: int = 512,
-                   max_len: int | None = None, kv_bits: int = 4):
+                   max_len: int | None = None, kv_bits: int = 4,
+                   kv_chunk: int = 512):
     """mode in {train, prefill, prefill_chunk, decode}.
     Returns (x, new_cache, aux).
 
@@ -270,6 +276,13 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
     window, SSM/RG-LRU state, cross-attention) need sequential state
     carried across chunks and fall back to whole-prompt prefill at the
     serving layer (see ``LanguageModel.supports_chunked_prefill``).
+
+    When ``ctx.block_tables`` is set (paged KV layout; global attention
+    only), decode and prefill_chunk read/write the cache through the
+    block table instead of dense slot rows — bit-identical numerics,
+    page-granular memory.  ``kv_chunk`` caps the flash-decode kernel's
+    KV-chunk size (parity knob: a dense and a paged engine whose
+    effective chunk splits match are bit-identical on the kernel path).
     """
     h = _norm(cfg, x, sub["norm1"], sub.get("norm1_b"))
     hd = cfg.resolved_head_dim if cfg.n_heads else 0
@@ -282,19 +295,35 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
         self_cache = cache["self"] if kind == "crossdec" and cache else cache
         if kind == "crossdec" and cache:
             enc_kv = cache["enc"]
-        if mode == "decode":
+        paged = ctx is not None and ctx.block_tables is not None
+        if paged and kind != "attention" and mode in ("decode",
+                                                      "prefill_chunk"):
+            raise NotImplementedError(
+                f"paged KV layout only supports global attention, "
+                f"got {kind!r}")
+        if mode == "decode" and paged:
+            mix, new_self = attn.attention_decode_paged(
+                sub["mix"], h, self_cache, ctx.pos, ctx.block_tables,
+                kv_bits=kv_bits, kv_chunk=kv_chunk,
+                kernel_ok=kind in KERNEL_COVERED_KINDS, **akw)
+        elif mode == "decode":
             mix, new_self = attn.attention_decode(
                 sub["mix"], h, self_cache, ctx.pos, kv_bits=kv_bits,
-                window=window,
+                window=window, kv_chunk=kv_chunk,
                 kernel_ok=kind in KERNEL_COVERED_KINDS, **akw)
         elif mode == "prefill_chunk":
             if kind != "attention":
                 raise NotImplementedError(
                     f"prefill_chunk only supports global attention, "
                     f"got {kind!r}")
-            mix, new_self = attn.attention_prefill_chunk(
-                sub["mix"], h, self_cache, ctx.slot, ctx.pos,
-                kv_bits=kv_bits, **akw)
+            if paged:
+                mix, new_self = attn.attention_prefill_chunk_paged(
+                    sub["mix"], h, self_cache, ctx.block_tables, ctx.pos,
+                    kv_bits=kv_bits, **akw)
+            else:
+                mix, new_self = attn.attention_prefill_chunk(
+                    sub["mix"], h, self_cache, ctx.slot, ctx.pos,
+                    kv_bits=kv_bits, **akw)
         elif mode == "prefill" and kind == "attention":
             # serve-consistent prefill: attend through the quantized
             # cache so whole-prompt and chunked prefill are bit-identical

@@ -1,0 +1,187 @@
+"""Block pool: the ref-counted allocator under the paged KV cache.
+
+The paged serving cache stores K/V in fixed-size pages ("blocks") of a
+shared pool (``model.init_paged_caches``, leaves
+``[layers, num_blocks + 1, block_size, ...]``); this module owns the
+pure-python bookkeeping: which block ids are free, how many slots
+reference each block, and which *complete, content-deterministic*
+prompt blocks are registered for prefix sharing.  It holds no jax state
+at all — the pool ARRAYS live in the KV manager, and the one operation
+that must touch them (the copy half of copy-on-write) is returned to
+the caller as a ``(src, dst)`` pair to apply through the runner.
+
+Block id 0 is the reserved NULL block: block-table entries of slots
+that have not allocated that far point at it, and writes that fall
+outside a slot's reserved span are redirected into it.  Its contents
+are garbage by design — every read of it sits behind a position-derived
+validity mask (see ``docs/serving.md``).
+
+Prefix sharing: the KV manager registers each *complete* prompt block
+under an exact content key (the byte string of all prompt tokens up to
+and including that block — collision-free by construction, no hashing
+ambiguity).  A later prompt with an identical prefix attaches the
+registered blocks ref-counted instead of re-prefilling them.  A block's
+registry entry dies with the block (refcount -> 0).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def prefix_block_keys(prompt: np.ndarray, block_size: int,
+                      max_blocks: int | None = None) -> list[bytes]:
+    """Exact-content registry keys for the *shareable* complete blocks
+    of ``prompt``: block i's key is the bytes of tokens [0, (i+1)*bs).
+
+    Only blocks that leave at least one prompt token after them are
+    shareable — the consumer must prefill >= 1 token to produce its
+    first-token logits — so at most ``floor((len - 1) / bs)`` keys.
+    """
+    prompt = np.ascontiguousarray(np.asarray(prompt, np.int32))
+    n = (len(prompt) - 1) // block_size if len(prompt) else 0
+    if max_blocks is not None:
+        n = min(n, max_blocks)
+    return [prompt[: (i + 1) * block_size].tobytes() for i in range(n)]
+
+
+class BlockPool:
+    """Ref-counted free-list allocator over ``num_blocks`` usable block
+    ids (1..num_blocks; 0 is the null block).  Deterministic: lowest
+    free id first."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(1, num_blocks + 1))
+        self._ref: dict[int, int] = {}
+        self._by_key: dict[bytes, int] = {}   # prefix key -> block id
+        self._key_of: dict[int, bytes] = {}   # block id -> prefix key
+        self._written: set[int] = set()       # content finalized
+        # cumulative counters (reset with the pool)
+        self.shared_attaches = 0   # blocks NOT allocated thanks to sharing
+        self.cow_copies = 0
+        self.peak_live = 0         # high-water block occupancy
+
+    # ---------------- alloc / free ----------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim the lowest free block (refcount 1); raises when empty —
+        callers gate on ``n_free`` (the admission hook's job)."""
+        if not self._free:
+            raise RuntimeError("block pool exhausted — admission must "
+                               "gate on n_free before allocating")
+        self._free.sort()
+        bid = self._free.pop(0)
+        self._ref[bid] = 1
+        self.peak_live = max(self.peak_live, self.n_live)
+        return bid
+
+    def alloc_n(self, n: int) -> list[int] | None:
+        """All-or-nothing batch alloc: None when fewer than ``n`` free."""
+        if n > len(self._free):
+            return None
+        return [self.alloc() for _ in range(n)]
+
+    def incref(self, bid: int):
+        if bid == NULL_BLOCK:
+            return
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; frees (and deregisters) at zero.
+        Returns True when the block was actually freed."""
+        if bid == NULL_BLOCK:
+            return False
+        left = self._ref[bid] - 1
+        if left < 0:
+            raise ValueError(f"block {bid} double-freed")
+        if left:
+            self._ref[bid] = left
+            return False
+        del self._ref[bid]
+        self._written.discard(bid)
+        key = self._key_of.pop(bid, None)
+        if key is not None and self._by_key.get(key) == bid:
+            del self._by_key[key]
+        self._free.append(bid)
+        return True
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    # ---------------- prefix-sharing registry ----------------
+
+    def register(self, key: bytes, bid: int):
+        """Publish ``bid`` as the canonical block for prefix ``key``
+        (first writer wins; a block carries at most one key)."""
+        if key in self._by_key or bid in self._key_of:
+            return
+        self._by_key[key] = bid
+        self._key_of[bid] = key
+
+    def lookup(self, key: bytes) -> int | None:
+        return self._by_key.get(key)
+
+    def attach(self, key: bytes) -> int | None:
+        """Ref-counted attach of the registered block for ``key``
+        (counts toward ``shared_attaches``)."""
+        bid = self._by_key.get(key)
+        if bid is None:
+            return None
+        self.incref(bid)
+        self.shared_attaches += 1
+        return bid
+
+    def mark_written(self, bid: int):
+        self._written.add(bid)
+
+    def is_written(self, bid: int) -> bool:
+        return bid in self._written
+
+    # ---------------- copy-on-write ----------------
+
+    def cow(self, bid: int) -> tuple[int, int | None]:
+        """Make ``bid`` exclusively owned by the caller.  Returns
+        ``(writable_bid, copy_src)``: when the block is shared
+        (refcount > 1) a fresh block is allocated and ``copy_src`` is
+        the old id whose CONTENTS the caller must copy into
+        ``writable_bid`` (via the runner's jitted block copy) before
+        writing; otherwise ``(bid, None)``.  Raises when a copy is
+        needed but the pool is empty."""
+        if bid == NULL_BLOCK:
+            raise ValueError("cannot take ownership of the null block")
+        if self._ref[bid] == 1:
+            return bid, None
+        fresh = self.alloc()
+        self._ref[bid] -= 1
+        self.cow_copies += 1
+        return fresh, bid
+
+    # ---------------- stats ----------------
+
+    def stats(self) -> dict:
+        shared = sum(1 for r in self._ref.values() if r > 1)
+        return {
+            "block_size": self.block_size,
+            "blocks_total": self.num_blocks,
+            "blocks_in_use": self.n_live,
+            "blocks_peak_in_use": self.peak_live,
+            "blocks_free": self.n_free,
+            "blocks_shared": shared,
+            "blocks_saved_by_sharing": self.shared_attaches,
+            "cow_copies": self.cow_copies,
+        }

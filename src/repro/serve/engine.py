@@ -6,9 +6,14 @@ The serving stack is three layers behind this stable API:
   truncate/reject), per-slot lifecycle, Sarathi-style interleave of
   prefill chunks with batched decode, streaming ``on_token`` callbacks,
   TTFT/ITL/compile metrics;
-- ``serve/kv_manager.py``  — the shared slot-indexed INT4 cache tree
-  (``model.init_caches``, layout ``[layers, slots, max_len, ...]``),
-  slot alloc/free and per-slot position vectors;
+- ``serve/kv_manager.py``  — the shared serving cache in one of two
+  layouts (``kv_layout=``): ``dense`` slot-indexed rows
+  (``model.init_caches``, ``[layers, slots, max_len, ...]``) or the
+  ``paged`` INT4 block pool (``model.init_paged_caches``,
+  ``[layers, num_blocks + 1, block_size, ...]`` + per-slot block
+  tables, ref-counted via ``serve/block_pool.py``) — block-granular
+  OOM-aware admission, copy-free shared-prefix reuse, memory that
+  scales with live tokens instead of ``slots x max_len``;
 - ``serve/runner.py``     — the only layer that touches ``jax.jit``:
   one decode compile, one prefill compile per chunk bucket.
 
@@ -33,11 +38,13 @@ lowers at production shapes.
 """
 from __future__ import annotations
 
-from repro.serve.kv_manager import KVManager
+from repro.serve.kv_manager import KVManager, PagedKVManager
 from repro.serve.runner import DEFAULT_CHUNK_BUCKETS, ModelRunner
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["Request", "ServeEngine"]
+
+KV_LAYOUTS = ("dense", "paged")
 
 
 class ServeEngine:
@@ -45,21 +52,37 @@ class ServeEngine:
                  max_len: int = 512, eos_id: int | None = None,
                  seed: int = 0, chunk_buckets=DEFAULT_CHUNK_BUCKETS,
                  overflow_policy: str = "truncate",
-                 backend: str = "reference", kernel_interpret: bool = True):
+                 backend: str = "reference", kernel_interpret: bool = True,
+                 kv_layout: str = "dense", block_size: int = 32,
+                 num_blocks: int | None = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
+                             f"got {kv_layout!r}")
+        if kv_layout == "paged" and not model.supports_chunked_prefill:
+            raise ValueError(
+                "kv_layout='paged' needs a model with chunked-prefill "
+                "support (all-global-attention); window/SSM/RG-LRU/"
+                "cross-attention/MoE models keep the dense layout")
         self.model = model
         self.slots = batch_slots
         self.max_len = max_len
         self.runner = ModelRunner(model, params, max_len=max_len,
                                   chunk_buckets=chunk_buckets,
                                   backend=backend,
-                                  kernel_interpret=kernel_interpret)
+                                  kernel_interpret=kernel_interpret,
+                                  paged=kv_layout == "paged")
         # the runner's tree, not the constructor arg: on the quantized
         # backend the runner packs covered linears, and pinning the
         # original here would keep BOTH weight copies resident
         self.params = self.runner.params
-        self.kv = KVManager(model, batch_slots, max_len)
+        if kv_layout == "paged":
+            self.kv = PagedKVManager(model, batch_slots, max_len,
+                                     block_size=block_size,
+                                     num_blocks=num_blocks)
+        else:
+            self.kv = KVManager(model, batch_slots, max_len)
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
                                    seed=seed, overflow_policy=overflow_policy)
 
@@ -72,6 +95,16 @@ class ServeEngine:
     @property
     def backend(self) -> str:
         return self.runner.backend
+
+    @property
+    def kv_layout(self) -> str:
+        return "paged" if self.kv.paged else "dense"
+
+    @property
+    def kv_stats(self) -> dict:
+        """KV memory/occupancy: layout + pool bytes, plus (paged) block
+        totals, live/peak occupancy, and prefix-sharing counters."""
+        return self.kv.stats()
 
     @property
     def packed_stats(self) -> dict | None:

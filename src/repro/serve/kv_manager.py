@@ -1,11 +1,24 @@
-"""KV manager: owns the shared slot-indexed INT4 cache tree.
+"""KV managers: slot/page bookkeeping over the shared serving cache.
 
-One preallocated cache tree (``model.init_caches``, leaves
-``[layers, slots, max_len, ...]``) holds every serving slot; this layer
-tracks which rows are free, hands slots to the scheduler, and keeps the
-per-slot absolute-position vector the jitted steps consume.  It holds
-NO jax-transformed functions — all jit lives in ``serve/runner.py`` —
-and no request state — lifecycle lives in ``serve/scheduler.py``.
+Two layouts share one scheduler-facing surface (``slots``, ``max_len``,
+``pos``, ``caches``, ``n_free``, ``free``, ``reset``):
+
+- ``KVManager`` — the dense slot-indexed tree (``model.init_caches``,
+  leaves ``[layers, slots, max_len, ...]``): every slot owns a full
+  ``max_len`` row whether it needs it or not.  Kept as the reference
+  layout and the fallback for models whose states cannot page
+  (sliding-window rings, SSM/RG-LRU, cross-attention).
+- ``PagedKVManager`` — the paged INT4 pool (``model.init_paged_caches``,
+  leaves ``[layers, num_blocks + 1, block_size, ...]``): slots hold
+  ref-counted fixed-size blocks through a per-slot block table, memory
+  scales with ``sum(min(max_len, len + max_new))`` instead of
+  ``slots x max_len``, identical prompt prefixes attach the same blocks
+  (prefill once), and admission is gated block-granular (the OOM-aware
+  hook ``admit``).
+
+Neither manager holds jax-transformed functions — all jit lives in
+``serve/runner.py`` — and neither holds request state — lifecycle lives
+in ``serve/scheduler.py``.
 
 Position-vector contract (shared with `models/attention.py`): validity
 masks inside the jitted steps derive from ``pos`` alone, never from the
@@ -13,12 +26,16 @@ masks inside the jitted steps derive from ``pos`` alone, never from the
 A mid-prefill slot keeps ``pos`` at its chunk progress: a batched decode
 dispatch that rides over it writes garbage K/V at ``pos``, which the
 next prefill chunk (whose window starts at ``pos``) overwrites before
-any query can attend it.
+any query can attend it.  In the paged layout, writes whose block-table
+entry is the null block (id 0) — idle slots, padding rows past a slot's
+reserved span — land in the never-attended null block.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
+
+from repro.serve.block_pool import NULL_BLOCK, BlockPool, prefix_block_keys
 
 
 def write_slot_row(shared, fresh, slot):
@@ -28,24 +45,39 @@ def write_slot_row(shared, fresh, slot):
     sliding-window / SSM / RG-LRU / cross-attention states).
 
     Every state leaf is stacked ``[layers, batch, ...]``, so the slot
-    row is axis 1.  Per-layer scalar bookkeeping (``KVCache.length``,
-    stacked to ndim-1) is left untouched: decode validity masks derive
-    from the engine's position vector, never from stored lengths.
+    row is axis 1.  The ONLY leaves allowed to skip the row write are
+    known per-layer scalar bookkeeping — ``KVCache.length``, stacked to
+    ndim 1 — because decode validity masks derive from the engine's
+    position vector, never from stored lengths.  Any other sub-2-dim
+    leaf raises: a new cache leaf must be either slot-indexed (written
+    here) or explicitly whitelisted, never silently dropped.
     """
-    def upd(s, f):
+    _SKIP_OK = ("length",)
+
+    def upd(path, s, f):
         if f.ndim < 2:
-            return s
+            name = getattr(path[-1], "name", None) if path else None
+            if f.ndim == 1 and name in _SKIP_OK:
+                return s          # per-layer scalar bookkeeping
+            raise ValueError(
+                f"write_slot_row: cache leaf {jax.tree_util.keystr(path)} "
+                f"has ndim {f.ndim} (shape {f.shape}) and is not known "
+                f"scalar bookkeeping {_SKIP_OK} — it would be silently "
+                f"dropped from the shared cache")
         start = (0, slot) + (0,) * (s.ndim - 2)
         return jax.lax.dynamic_update_slice(s, f.astype(s.dtype), start)
-    return jax.tree.map(upd, shared, fresh)
+    return jax.tree_util.tree_map_with_path(upd, shared, fresh)
 
 
 class KVManager:
-    """Slot allocator + position bookkeeping over one shared cache tree.
+    """Dense layout: slot allocator + position bookkeeping over one
+    shared slot-indexed cache tree.
 
     ``caches`` is replaced (never mutated) by the scheduler after each
     jitted step returns its updated (donated) tree.
     """
+
+    paged = False
 
     def __init__(self, model, slots: int, max_len: int):
         if slots < 1:
@@ -87,3 +119,215 @@ class KVManager:
         if slot in self._free:
             raise ValueError(f"slot {slot} already free")
         self._free.append(slot)
+
+    def stats(self) -> dict:
+        leaves = [x for x in jax.tree.leaves(self.caches)
+                  if hasattr(x, "nbytes")]
+        return {"layout": "dense",
+                "pool_bytes": int(sum(x.nbytes for x in leaves))}
+
+
+class PagedKVManager:
+    """Paged layout: per-slot block tables over one ref-counted block
+    pool, with prefix sharing and block-granular (OOM-aware) admission.
+
+    - Pool leaves are ``[layers, num_blocks + 1, block_size, ...]``;
+      block id 0 is the reserved null block (see ``block_pool``).
+    - ``block_tables`` is ``[slots, blocks_per_slot]`` int32 on the
+      host; unpopulated entries are 0 (null).  The jitted steps consume
+      it as a plain input, so its fixed shape keeps the 1-decode-compile
+      contract.
+    - Admission (``admit``) reserves the request's WORST-CASE block need
+      ``ceil(min(max_len, len + max_new) / block_size)`` up front
+      (minus attached shared blocks), so a request can never run out of
+      blocks mid-prefill or mid-decode; the scheduler queues requests
+      the hook declines and rejects ones that could never fit.
+    - Prefix sharing: complete prompt blocks are registered under exact
+      content keys at admission; a later identical prefix attaches them
+      ref-counted and starts its prefill AFTER them (``shared_len``).
+      Sound under the scheduler's strict-FIFO prefill: a consumer's
+      first chunk only runs after every earlier-admitted slot finished
+      its prompt, so attached blocks are always written before they can
+      be attended.  Consumers never write into fully-shared blocks
+      (writes start at ``shared_len``; the chunk-window tail-overrun
+      re-run rewrites identical bytes), so serving needs no
+      copy-on-write — ``fork`` + ``writable_block`` provide it for
+      explicit stream forking.
+    """
+
+    paged = True
+
+    def __init__(self, model, slots: int, max_len: int, *,
+                 block_size: int = 32, num_blocks: int | None = None):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        block_size = min(block_size, max_len)
+        if max_len % block_size:
+            # self-enforce the dense-parity precondition (docs/serving.md
+            # "Paged KV cache"): a non-dividing block size pads the
+            # gathered view past max_len, changing f32 reduction shapes
+            raise ValueError(
+                f"block_size {block_size} must divide max_len {max_len} "
+                f"(bit-parity with the dense layout needs an exact split)")
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.blocks_per_slot = max_len // block_size
+        # full provisioning by default: admission can never be blocked
+        # on blocks when a slot is free (each slot holds <= blocks_per_
+        # slot); pass a smaller pool to trade worst-case admission for
+        # memory (the paged win)
+        self.num_blocks = (int(num_blocks) if num_blocks is not None
+                           else slots * self.blocks_per_slot)
+        self.caches = None
+        self.pos = np.zeros(slots, np.int32)
+        self.block_tables = np.zeros((slots, self.blocks_per_slot), np.int32)
+        self.pool: BlockPool | None = None
+        self._free: list[int] = []
+        self._shared_len = np.zeros(slots, np.int32)
+        self._pending_copies: list[tuple[int, int]] = []
+        self.reset()
+
+    # ---------------- lifecycle ----------------
+
+    def reset(self):
+        self.caches = self.model.init_paged_caches(self.num_blocks,
+                                                   self.block_size)
+        self.pool = BlockPool(self.num_blocks, self.block_size)
+        self.block_tables[:] = NULL_BLOCK
+        self.pos[:] = 0
+        self._shared_len[:] = 0
+        self._free = list(range(self.slots))
+        self._pending_copies = []
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    # ---------------- admission (the OOM-aware hook) ----------------
+
+    def required_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case block need: positions [0, min(max_len, len+new))
+        are writable over the request's lifetime."""
+        span = min(self.max_len, prompt_len + max_new)
+        return -(-span // self.block_size)
+
+    def fits_empty_pool(self, prompt_len: int, max_new: int) -> bool:
+        """Could this request EVER be admitted (whole pool free)?  The
+        scheduler rejects instead of queueing when this is False."""
+        return self.required_blocks(prompt_len, max_new) <= self.num_blocks
+
+    def admit(self, prompt: np.ndarray, max_new: int) -> int | None:
+        """Admission hook: attach shared prefix blocks + reserve the
+        worst-case remainder, all-or-nothing.  Returns the slot, or
+        None when slots or blocks are insufficient (caller queues or
+        rejects).  On success ``shared_len(slot)`` tokens are already
+        resident and ``pos[slot]`` starts there."""
+        if not self._free:
+            return None
+        need = self.required_blocks(len(prompt), max_new)
+        keys = prefix_block_keys(prompt, self.block_size,
+                                 max_blocks=self.blocks_per_slot)
+        shared_ids = []
+        for key in keys:
+            bid = self.pool.lookup(key)
+            if bid is None:
+                break
+            shared_ids.append(bid)
+        if self.pool.n_free < need - len(shared_ids):
+            return None
+        self._free.sort()
+        slot = self._free.pop(0)
+        table = self.block_tables[slot]
+        table[:] = NULL_BLOCK
+        for i, bid in enumerate(shared_ids):
+            self.pool.attach(keys[i])
+            table[i] = bid
+        for i in range(len(shared_ids), need):
+            table[i] = self.pool.alloc()
+            # publish this slot's complete prompt blocks for later
+            # identical prefixes (content is deterministic: same tokens
+            # at same positions quantize to the same bytes)
+            if i < len(keys):
+                self.pool.register(keys[i], int(table[i]))
+        self._shared_len[slot] = len(shared_ids) * self.block_size
+        self.pos[slot] = self._shared_len[slot]
+        return slot
+
+    def shared_len(self, slot: int) -> int:
+        """Tokens already resident via prefix sharing — the slot's
+        prefill starts here."""
+        return int(self._shared_len[slot])
+
+    def mark_prompt_written(self, slot: int, prompt_len: int):
+        """Called by the scheduler when the slot's prompt is fully
+        prefilled: flags its complete prompt blocks as content-final
+        (consumers attached under the FIFO invariant; the flag makes
+        the invariant checkable)."""
+        n_full = prompt_len // self.block_size
+        for i in range(min(n_full, self.blocks_per_slot)):
+            bid = int(self.block_tables[slot, i])
+            if bid != NULL_BLOCK:
+                self.pool.mark_written(bid)
+
+    def free(self, slot: int):
+        """Release a slot: decref every held block (freed blocks return
+        to the pool; registry entries die with their block) and null the
+        table row so idle rides write into the null block."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        for bid in self.block_tables[slot]:
+            self.pool.decref(int(bid))
+        self.block_tables[slot] = NULL_BLOCK
+        self._shared_len[slot] = 0
+        self._free.append(slot)
+
+    # ---------------- fork / copy-on-write ----------------
+
+    def fork(self, src: int) -> int | None:
+        """Clone ``src`` into a fresh slot sharing ALL its blocks
+        (including the partial tail) ref-counted.  The forked slot's
+        first write into a shared block goes through ``writable_block``
+        (copy-on-write).  Returns None when no slot is free."""
+        if not self._free:
+            return None
+        self._free.sort()
+        slot = self._free.pop(0)
+        self.block_tables[slot] = self.block_tables[src]
+        for bid in self.block_tables[slot]:
+            self.pool.incref(int(bid))
+        self.pos[slot] = self.pos[src]
+        self._shared_len[slot] = self.pos[src]
+        return slot
+
+    def writable_block(self, slot: int, block_idx: int) -> int:
+        """Copy-on-write entry: make the slot's ``block_idx`` table
+        entry exclusively owned, queueing a pool-array copy when the
+        block was shared.  The scheduler/caller MUST drain
+        ``take_pending_copies`` through the runner's jitted
+        ``copy_block`` before the next write dispatch."""
+        bid = int(self.block_tables[slot, block_idx])
+        new_bid, copy_src = self.pool.cow(bid)
+        if copy_src is not None:
+            self.block_tables[slot, block_idx] = new_bid
+            self._pending_copies.append((copy_src, new_bid))
+        return new_bid
+
+    def take_pending_copies(self) -> list[tuple[int, int]]:
+        out, self._pending_copies = self._pending_copies, []
+        return out
+
+    # ---------------- stats ----------------
+
+    def stats(self) -> dict:
+        leaves = [x for x in jax.tree.leaves(self.caches)
+                  if hasattr(x, "nbytes")]
+        pool_bytes = int(sum(x.nbytes for x in leaves))
+        return {"layout": "paged",
+                "blocks_per_slot": self.blocks_per_slot,
+                "pool_bytes": pool_bytes,
+                "pool_mib": pool_bytes / 2**20,
+                **self.pool.stats()}

@@ -31,6 +31,13 @@ Execution backends (``backend=``):
 
 Both backends share the compile-cache contract: 1 decode compile +
 1 prefill compile per chunk bucket, per runner.
+
+KV layouts (``paged=``): the dense slot-indexed tree, or the paged
+block pool — block tables enter the jitted steps as ordinary
+fixed-shape int32 inputs ([slots, n_bt] decode, [n_bt] per prefill
+chunk), so the layout changes WHICH rows the steps touch without adding
+compiles; ``copy_blocks`` applies queued copy-on-write pool copies
+(one extra jitted fn, compiled once).
 """
 from __future__ import annotations
 
@@ -46,15 +53,30 @@ DEFAULT_CHUNK_BUCKETS = (8, 64)
 BACKENDS = ("reference", "quantized")
 
 
+def _copy_block(caches, src, dst):
+    """Copy pool block ``src`` onto ``dst`` in every paged cache leaf
+    (``[layers, NB+1, BS, ...]``; the block axis is axis 1) — the array
+    half of copy-on-write.  Sub-2-dim leaves (per-layer scalar
+    bookkeeping) have no block rows to copy."""
+    def upd(x):
+        if x.ndim < 2:
+            return x
+        row = jax.lax.dynamic_slice_in_dim(x, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(x, row, dst, axis=1)
+    return jax.tree.map(upd, caches)
+
+
 class ModelRunner:
     def __init__(self, model, params, *, max_len: int,
                  chunk_buckets=DEFAULT_CHUNK_BUCKETS,
-                 backend: str = "reference", kernel_interpret: bool = True):
+                 backend: str = "reference", kernel_interpret: bool = True,
+                 paged: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
         self.model = model
         self.backend = backend
+        self.paged = paged
         self.kernel_interpret = kernel_interpret
         self.pack_stats = None
         if backend == "quantized":
@@ -75,8 +97,16 @@ class ModelRunner:
             raise ValueError(f"no usable chunk bucket in {chunk_buckets}")
         self.chunk_buckets = tuple(buckets)
 
-        self._decode = jax.jit(self._traced(model.decode_step, "decode"),
+        # paged layout: block tables ride as an extra fixed-shape input
+        # ([slots, n_bt] decode / [n_bt] prefill chunk), so the compile
+        # cache stays 1 decode + 1 prefill per bucket — same contract
+        decode_fn = (
+            (lambda p, tok, caches, pos, bt:
+             model.decode_step(p, tok, caches, pos, block_tables=bt))
+            if paged else model.decode_step)
+        self._decode = jax.jit(self._traced(decode_fn, "decode"),
                                donate_argnums=(2,))
+        self._copy_block = jax.jit(_copy_block, donate_argnums=(0,))
         self._write = jax.jit(write_slot_row, donate_argnums=(0,))
         self._sample = jax.jit(sample_tokens_batched)
         self._argmax = jax.jit(
@@ -121,7 +151,7 @@ class ModelRunner:
         return self.chunk_buckets[-1]
 
     def prefill_chunk(self, caches, prompt: np.ndarray, slot: int,
-                      fill: int):
+                      fill: int, block_table: np.ndarray | None = None):
         """Run ONE chunk of ``prompt`` (already ``fill`` tokens in) into
         cache row ``slot``.  Returns (logits [1, V] at the chunk's last
         valid token, new caches, n_new tokens consumed).
@@ -132,6 +162,12 @@ class ModelRunner:
         tokens are RE-RUN: recomputed rows quantize to the identical
         packed bytes (position-independent math), so the rewrite is a
         no-op and correctness is preserved without a per-tail recompile.
+        (On the paged layout a re-run may rewrite blocks shared with
+        another slot — same bytes, same no-op.)
+
+        Paged layout: pass ``block_table`` (the slot's [n_bt] row of the
+        engine's table); placement goes through it and ``slot`` is
+        ignored.
         """
         remaining = len(prompt) - fill
         c = self.bucket_for(remaining)
@@ -142,13 +178,25 @@ class ModelRunner:
         buf[:m] = prompt[start:start + m]
         fn = self._chunk_fns.get(c)
         if fn is None:
+            if self.paged:
+                def chunk_fn(p, tokens, caches, pos, last_idx, bt):
+                    return self.model.prefill_chunk(
+                        p, tokens, caches, None, pos, last_idx,
+                        block_table=bt)
+            else:
+                chunk_fn = self.model.prefill_chunk
             fn = self._chunk_fns[c] = jax.jit(
-                self._traced(self.model.prefill_chunk, "prefill"),
-                donate_argnums=(2,))
-        logits, caches = fn(self.params, jnp.asarray(buf), caches,
-                            jnp.asarray(slot, jnp.int32),
-                            jnp.asarray(start, jnp.int32),
-                            jnp.asarray(m - 1, jnp.int32))
+                self._traced(chunk_fn, "prefill"), donate_argnums=(2,))
+        if self.paged:
+            logits, caches = fn(self.params, jnp.asarray(buf), caches,
+                                jnp.asarray(start, jnp.int32),
+                                jnp.asarray(m - 1, jnp.int32),
+                                jnp.asarray(block_table, jnp.int32))
+        else:
+            logits, caches = fn(self.params, jnp.asarray(buf), caches,
+                                jnp.asarray(slot, jnp.int32),
+                                jnp.asarray(start, jnp.int32),
+                                jnp.asarray(m - 1, jnp.int32))
         self.prefill_dispatches += 1
         return logits, caches, n_new
 
@@ -173,12 +221,28 @@ class ModelRunner:
 
     # ---------------- decode / sampling ----------------
 
-    def decode(self, tokens: np.ndarray, caches, pos: np.ndarray):
-        """ONE batched decode dispatch over all slots."""
-        logits, caches = self._decode(self.params, jnp.asarray(tokens),
-                                      caches, jnp.asarray(pos))
+    def decode(self, tokens: np.ndarray, caches, pos: np.ndarray,
+               block_tables: np.ndarray | None = None):
+        """ONE batched decode dispatch over all slots.  Paged layout:
+        pass the full [slots, n_bt] ``block_tables``."""
+        if self.paged:
+            logits, caches = self._decode(
+                self.params, jnp.asarray(tokens), caches, jnp.asarray(pos),
+                jnp.asarray(block_tables, jnp.int32))
+        else:
+            logits, caches = self._decode(self.params, jnp.asarray(tokens),
+                                          caches, jnp.asarray(pos))
         self.decode_dispatches += 1
         return logits, caches
+
+    def copy_blocks(self, caches, copies):
+        """Apply queued copy-on-write block copies ((src, dst) pool ids,
+        from ``PagedKVManager.take_pending_copies``) to the pool arrays.
+        One jitted compile total (ids are traced scalars)."""
+        for src, dst in copies:
+            caches = self._copy_block(caches, jnp.asarray(src, jnp.int32),
+                                      jnp.asarray(dst, jnp.int32))
+        return caches
 
     def sample(self, keys, logits, temps: np.ndarray):
         return self._sample(keys, logits, jnp.asarray(temps))

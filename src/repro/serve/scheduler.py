@@ -10,7 +10,12 @@ generation step stays a single jitted dispatch.
 Lifecycle: queued -> prefill -> decode -> done (or rejected at
 admission).  Admission is FIFO into the lowest free slot; prompts at or
 past the cache ceiling are truncated or rejected AT ADMISSION
-(``overflow_policy``) instead of being prefilled past max_len.
+(``overflow_policy``) instead of being prefilled past max_len.  On the
+paged KV layout admission is additionally block-granular: the queue
+head waits until its WORST-CASE block need fits the free pool (and is
+rejected when it could never fit), identical prompt prefixes attach
+already-resident blocks so their prefill starts at ``shared_len``, and
+block tables ride into every jitted step.
 
 All jitted execution goes through ``serve/runner.py``; cache/slot state
 lives in ``serve/kv_manager.py``; this layer is pure-python
@@ -72,6 +77,11 @@ class Scheduler:
         self.rng = jax.random.PRNGKey(seed)
         self.overflow_policy = overflow_policy
         self.chunked = runner.model.supports_chunked_prefill
+        self.paged = bool(getattr(kv, "paged", False))
+        if self.paged and not self.chunked:
+            raise ValueError(
+                "paged KV layout needs chunked prefill (the whole-prompt "
+                "fallback writes dense slot rows)")
         # observability: generation steps vs jitted decode dispatches —
         # slot-parallel batching means these stay EQUAL at any slot count
         self.decode_steps = 0
@@ -130,6 +140,7 @@ class Scheduler:
         steps0 = self.decode_steps
         prefill_s = decode_s = 0.0
         n_tokens = n_first = interleaved = rejected = 0
+        block_waits = shared_tokens = 0
 
         def emit(req: Request, tok: int):
             nonlocal n_tokens
@@ -160,20 +171,54 @@ class Scheduler:
                     active[s] = None
                     temps[s] = 0.0
                     kv.free(s)
-            # 2. admit FIFO into free slots
+            # 2. admit FIFO into free slots.  Paged: admission is
+            #    block-granular and all-or-nothing — the head of the
+            #    queue WAITS (no pop) when its worst-case block need
+            #    exceeds the free pool right now, and is rejected
+            #    outright when it could never fit even into an empty
+            #    pool.  A prompt can therefore never OOM mid-prefill or
+            #    mid-decode.
             while queue and kv.n_free:
-                req = queue.pop(0)
+                req = queue[0]
                 if not self._validate(req):
+                    queue.pop(0)
                     done[req.rid] = req.out_tokens      # []
                     rejected += 1
                     continue
-                s = kv.alloc()
+                if self.paged:
+                    need = kv.required_blocks(len(req.prompt),
+                                              req.max_new_tokens)
+                    if not kv.fits_empty_pool(len(req.prompt),
+                                              req.max_new_tokens):
+                        queue.pop(0)
+                        req.status = "rejected"
+                        req.error = (
+                            f"worst-case block need {need} exceeds pool "
+                            f"size {kv.num_blocks} "
+                            f"(block_size {kv.block_size})")
+                        done[req.rid] = req.out_tokens  # []
+                        rejected += 1
+                        continue
+                    s = kv.admit(req.prompt, req.max_new_tokens)
+                    if s is None:
+                        block_waits += 1    # head-of-line waits for blocks
+                        break
+                    queue.pop(0)
+                    fill[s] = kv.shared_len(s)   # prefix-shared tokens
+                    shared_tokens += int(fill[s])
+                else:
+                    queue.pop(0)
+                    s = kv.alloc()
+                    fill[s] = 0
                 active[s] = req
                 req.status = "prefill"
-                fill[s] = 0
                 temps[s] = req.temperature
                 prefill_fifo.append(s)
             if not prefill_fifo and all(a is None for a in active):
+                if queue:   # paged head blocked with the whole pool free
+                    raise RuntimeError(
+                        "admission stalled with no live work — "
+                        "fits_empty_pool should have rejected the head")
                 break   # queue drained (rejects only) and no live work
             # 3. at most ONE prefill chunk per iteration (chunk budget)
             did_prefill = False
@@ -182,8 +227,13 @@ class Scheduler:
                 req = active[s]
                 tp = time.perf_counter()
                 if self.chunked:
-                    logits, kv.caches, n_new = runner.prefill_chunk(
-                        kv.caches, req.prompt, s, int(fill[s]))
+                    if self.paged:
+                        logits, kv.caches, n_new = runner.prefill_chunk(
+                            kv.caches, req.prompt, s, int(fill[s]),
+                            block_table=kv.block_tables[s])
+                    else:       # dense call shape unchanged (PR 2)
+                        logits, kv.caches, n_new = runner.prefill_chunk(
+                            kv.caches, req.prompt, s, int(fill[s]))
                     fill[s] += n_new
                 else:
                     logits, fresh = runner.prefill_full(req.prompt)
@@ -193,6 +243,8 @@ class Scheduler:
                 did_prefill = True
                 if fill[s] >= len(req.prompt):          # prompt complete
                     prefill_fifo.pop(0)
+                    if self.paged:
+                        kv.mark_prompt_written(s, len(req.prompt))
                     if req.temperature > 0:
                         k_next, k_use = jax.random.split(keys[s])
                         tok = int(sample_token(k_use, logits,
@@ -214,7 +266,9 @@ class Scheduler:
                     and not finished(s)]
             if live:
                 td = time.perf_counter()
-                logits, kv.caches = runner.decode(next_tok, kv.caches, kv.pos)
+                logits, kv.caches = runner.decode(
+                    next_tok, kv.caches, kv.pos,
+                    block_tables=kv.block_tables if self.paged else None)
                 self.decode_steps += 1
                 if keys is not None and np.any(temps > 0):
                     toks, keys = runner.sample(keys, logits, temps)
@@ -260,5 +314,12 @@ class Scheduler:
             # iterations where a decode dispatch ran in the same step as
             # a prefill chunk: live streams kept flowing during admission
             "interleaved_steps": interleaved,
+            # KV memory: layout, pool bytes, and (paged) block occupancy
+            # + prefix-sharing wins at end of run
+            "kv": kv.stats(),
+            # paged admission pressure: iterations the queue head waited
+            # for blocks / prompt tokens skipped via shared prefixes
+            "block_waits": block_waits,
+            "shared_prefix_tokens": shared_tokens,
         }
         return done

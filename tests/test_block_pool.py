@@ -1,0 +1,196 @@
+"""Block-allocator lifecycle: the ref-counted pool under the paged KV
+cache (serve/block_pool.py + PagedKVManager bookkeeping).
+
+The core is a property test driving random admit / fork / free
+sequences (admission covers alloc + ref-counted prefix attach; varying
+``max_new`` covers different reservation extents) and asserting after
+EVERY op that no block is leaked or double-freed: free + live always
+partitions the pool, every live block's refcount equals the number of
+table references to it, and when the last slot finishes every refcount
+has returned to zero.  Runs under hypothesis when available, with a
+seeded stand-in sweep otherwise (requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+
+from repro.serve.block_pool import NULL_BLOCK, BlockPool, prefix_block_keys
+from repro.serve.kv_manager import PagedKVManager
+
+try:        # hypothesis is dev-only; everything else here runs without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class _PoolModel:
+    """Stub model: the manager only needs ``init_paged_caches`` to
+    return a pytree with pool-shaped array leaves."""
+
+    def init_paged_caches(self, num_blocks, block_size):
+        return {"k": np.zeros((2, num_blocks + 1, block_size, 4), np.int8),
+                "length": np.zeros((2,), np.int32)}
+
+
+def _check_invariants(kv: PagedKVManager, busy: set[int]):
+    """No leaks, no double-frees, refcounts consistent with tables."""
+    pool = kv.pool
+    assert pool.n_free + pool.n_live == pool.num_blocks
+    want = {}
+    for s in busy:
+        for bid in kv.block_tables[s]:
+            bid = int(bid)
+            if bid != NULL_BLOCK:
+                want[bid] = want.get(bid, 0) + 1
+    have = {bid: pool.refcount(bid) for bid in want}
+    assert have == want, f"refcounts {have} != table references {want}"
+    # live set == referenced set (nothing held by zero tables)
+    assert set(want) == {bid for bid in range(1, pool.num_blocks + 1)
+                         if pool.refcount(bid) > 0}
+
+
+def _drive(seed: int, *, slots=4, max_len=64, block_size=8, num_blocks=None,
+           n_ops=60):
+    """Random lifecycle run; returns the manager for end-state checks."""
+    r = np.random.default_rng(seed)
+    kv = PagedKVManager(_PoolModel(), slots, max_len, block_size=block_size,
+                        num_blocks=num_blocks)
+    # a small prompt universe so identical prefixes (-> sharing) recur
+    prompts = [r.integers(0, 50, int(n)).astype(np.int32)
+               for n in r.integers(1, max_len - 1, 6)]
+    for i in range(1, 6):       # guaranteed shared prefixes
+        prompts.append(np.concatenate(
+            [prompts[0][: 3 * block_size],
+             r.integers(0, 50, i).astype(np.int32)]))
+    busy: set[int] = set()
+    for _ in range(n_ops):
+        op = r.choice(["admit", "fork", "free"])
+        if op == "admit":
+            p = prompts[r.integers(len(prompts))]
+            max_new = int(r.integers(1, 32))
+            if not kv.fits_empty_pool(len(p), max_new):
+                continue
+            s = kv.admit(p, max_new)
+            if s is not None:
+                assert s not in busy
+                busy.add(s)
+        elif op == "fork" and busy:
+            s = kv.fork(int(r.choice(sorted(busy))))
+            if s is not None:
+                busy.add(s)
+        elif op == "free" and busy:
+            s = int(r.choice(sorted(busy)))
+            kv.free(s)
+            busy.remove(s)
+        _check_invariants(kv, busy)
+    # drain: after ALL slots finish, every refcount is back to zero
+    for s in sorted(busy):
+        kv.free(s)
+    _check_invariants(kv, set())
+    assert kv.pool.n_free == kv.pool.num_blocks
+    assert all(kv.pool.refcount(b) == 0
+               for b in range(1, kv.pool.num_blocks + 1))
+    return kv
+
+
+class TestLifecycleProperty:
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=40, deadline=None)
+        @given(seed=st.integers(0, 2**32 - 1),
+               block_size=st.sampled_from([4, 8, 16, 64]),
+               scarce=st.booleans())
+        def test_random_lifecycles(self, seed, block_size, scarce):
+            """Random alloc/extend(-via-max_new)/fork/free interleavings
+            leak nothing, double-free nothing, and return every
+            refcount to zero — at full provisioning and under block
+            scarcity (admission pressure)."""
+            _drive(seed, block_size=block_size,
+                   num_blocks=10 if scarce else None)
+    else:
+        @pytest.mark.parametrize("seed", range(25))
+        def test_random_lifecycles(self, seed):
+            """Seeded stand-in sweep when hypothesis isn't installed."""
+            _drive(seed, block_size=int(np.random.default_rng(
+                seed).choice([4, 8, 16, 64])),
+                num_blocks=10 if seed % 2 else None)
+
+    def test_sharing_attaches_same_blocks(self):
+        kv = PagedKVManager(_PoolModel(), 3, 64, block_size=8)
+        p = np.arange(40, dtype=np.int32)
+        a = kv.admit(p, 4)
+        b = kv.admit(p, 4)
+        n_keys = len(prefix_block_keys(p, 8))
+        assert n_keys == 4      # floor((40-1)/8)
+        assert list(kv.block_tables[b][:n_keys]) == \
+            list(kv.block_tables[a][:n_keys])
+        assert kv.shared_len(b) == n_keys * 8
+        assert kv.pool.stats()["blocks_saved_by_sharing"] == n_keys
+        # shared blocks survive the producer's exit...
+        kv.free(a)
+        assert all(kv.pool.refcount(int(x)) == 1
+                   for x in kv.block_tables[b][:n_keys])
+        # ...and die (deregister) with the last holder
+        kv.free(b)
+        assert kv.pool.n_free == kv.pool.num_blocks
+        c = kv.admit(p, 4)
+        assert kv.shared_len(c) == 0    # registry gone with the blocks
+
+
+class TestBlockPool:
+    def test_alloc_exhaustion_raises(self):
+        pool = BlockPool(2, 8)
+        pool.alloc(), pool.alloc()
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc()
+
+    def test_double_free_raises(self):
+        pool = BlockPool(2, 8)
+        bid = pool.alloc()
+        assert pool.decref(bid)
+        with pytest.raises((ValueError, KeyError)):
+            pool.decref(bid)
+
+    def test_alloc_n_all_or_nothing(self):
+        pool = BlockPool(3, 8)
+        assert pool.alloc_n(4) is None
+        assert pool.n_free == 3
+        assert len(pool.alloc_n(3)) == 3
+
+    def test_cow_unique_is_noop(self):
+        pool = BlockPool(4, 8)
+        bid = pool.alloc()
+        assert pool.cow(bid) == (bid, None)
+        assert pool.cow_copies == 0
+
+    def test_cow_shared_allocates_and_decrefs(self):
+        pool = BlockPool(4, 8)
+        bid = pool.alloc()
+        pool.incref(bid)
+        fresh, src = pool.cow(bid)
+        assert src == bid and fresh != bid
+        assert pool.refcount(bid) == 1 and pool.refcount(fresh) == 1
+        assert pool.cow_copies == 1
+
+    def test_cow_null_block_rejected(self):
+        with pytest.raises(ValueError, match="null"):
+            BlockPool(2, 8).cow(NULL_BLOCK)
+
+    def test_registry_first_writer_wins(self):
+        pool = BlockPool(4, 8)
+        a, b = pool.alloc(), pool.alloc()
+        pool.register(b"k", a)
+        pool.register(b"k", b)          # ignored
+        assert pool.lookup(b"k") == a
+        pool.decref(a)
+        assert pool.lookup(b"k") is None
+
+    def test_prefix_keys_leave_a_token_to_prefill(self):
+        # a prompt that exactly fills N blocks shares only N-1: the
+        # consumer must still prefill >= 1 token for first logits
+        assert len(prefix_block_keys(np.arange(16, dtype=np.int32), 8)) == 1
+        assert len(prefix_block_keys(np.arange(17, dtype=np.int32), 8)) == 2
+        assert prefix_block_keys(np.zeros(0, np.int32), 8) == []
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

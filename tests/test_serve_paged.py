@@ -1,0 +1,289 @@
+"""Paged INT4 KV-cache subsystem: dense-vs-paged greedy stream parity
+(both execution backends, chunk sizes {1, 8, L}, block sizes
+{small, max_len}), prefix sharing storing shared blocks ONCE,
+block-granular OOM-aware admission, the compile-count contract, fork /
+copy-on-write, and the ``write_slot_row`` unknown-leaf guard.
+
+Parity preconditions (docs/serving.md "Paged KV cache"): f32 compute,
+``block_size`` dividing ``max_len``, and a model ``kv_chunk`` equal to
+the paged block size so the flash-decode kernel walks identical
+effective KV-chunk splits in both layouts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # module-scoped quantization fixture
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.quantize_model import quantize_model_sequential
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_manager import write_slot_row
+
+VOCAB = 128
+MAX_LEN = 64
+BLOCK = 16          # small block size; also the model's kv_chunk
+
+
+@pytest.fixture(scope="module")
+def quantized_lm():
+    cfg = tiny_variant(get_arch("llama1-7b")).replace(
+        d_model=96, d_ff=192, n_layers=2, vocab_size=VOCAB,
+        dtype="float32")
+    model = build_model(cfg, kv_chunk=BLOCK)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, VOCAB)
+    qparams = quantize_model_sequential(
+        model, params, calib,
+        QuantConfig(group_size=32, n_outlier_groups=1, em_iters=4,
+                    calib_tokens=256))
+    return model, qparams
+
+
+def _requests(n, max_new=8, seed=0, shared_prefix=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, VOCAB, shared_prefix).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        p = rng.integers(0, VOCAB, 5 + 3 * i).astype(np.int32)
+        if shared_prefix:
+            p = np.concatenate([prefix, p])
+        reqs.append(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    return reqs
+
+
+def _engine(model, params, *, backend="reference", slots=4, chunk=8,
+            layout="dense", block=BLOCK, num_blocks=None):
+    return ServeEngine(model, params, batch_slots=slots, max_len=MAX_LEN,
+                       chunk_buckets=(chunk,), backend=backend,
+                       kv_layout=layout, block_size=block,
+                       num_blocks=num_blocks)
+
+
+class TestDenseVsPagedParity:
+    _dense = {}     # (backend, chunk) -> streams, computed once
+
+    def _dense_streams(self, model, qparams, backend, chunk):
+        key = (backend, chunk)
+        if key not in self._dense:
+            eng = _engine(model, qparams, backend=backend, chunk=chunk)
+            self._dense[key] = eng.generate(_requests(5))
+        return self._dense[key]
+
+    @pytest.mark.parametrize("block", [BLOCK, MAX_LEN])
+    @pytest.mark.parametrize("chunk", [1, 8, MAX_LEN])
+    @pytest.mark.parametrize("backend", ["reference", "quantized"])
+    def test_greedy_streams_bit_identical(self, quantized_lm, backend,
+                                          chunk, block):
+        """The acceptance criterion: backends x chunk {1, 8, L} x block
+        {small, max_len}, paged streams equal dense bit-for-bit."""
+        model, qparams = quantized_lm
+        dense = self._dense_streams(model, qparams, backend, chunk)
+        eng = _engine(model, qparams, backend=backend, chunk=chunk,
+                      layout="paged", block=block)
+        assert eng.generate(_requests(5)) == dense
+        # multi-block sequences actually exercised at the small block
+        if block == BLOCK:
+            assert eng.kv_stats["blocks_peak_in_use"] > eng.slots
+
+    def test_temperature_sampling_paged_runs(self, quantized_lm):
+        """Non-greedy requests flow through the paged layout too (same
+        seed => same streams as dense)."""
+        model, qparams = quantized_lm
+
+        def reqs():
+            out = _requests(3, max_new=6)
+            for r in out:
+                r.temperature = 0.8
+            return out
+
+        d = _engine(model, qparams, slots=2).generate(reqs())
+        p = _engine(model, qparams, slots=2, layout="paged").generate(reqs())
+        assert d == p
+
+
+class TestPrefixSharing:
+    def test_shared_blocks_stored_once(self, quantized_lm):
+        """Two slots with a common prefix: the shared blocks appear ONCE
+        in pool occupancy, and streams still match the dense engine."""
+        model, qparams = quantized_lm
+        block = 8
+        reqs = lambda: _requests(2, shared_prefix=3 * block + 2, seed=7)
+        dense = _engine(model, qparams, slots=2).generate(reqs())
+
+        eng = _engine(model, qparams, slots=2, layout="paged", block=block)
+        assert eng.generate(reqs()) == dense
+        kv = eng.kv_stats
+        # prompts: 26+5=31 and 26+8=34 tokens (+8 new) -> solo needs
+        # ceil(39/8) + ceil(42/8) = 11 blocks; the producer registers
+        # floor((31-1)/8)=3 complete prompt blocks, all 3 inside the
+        # 26-token common prefix -> consumer attaches 3
+        assert kv["blocks_saved_by_sharing"] == 3
+        assert kv["blocks_peak_in_use"] == 11 - 3
+        assert kv["blocks_in_use"] == 0          # all returned
+        st = eng.last_stats
+        assert st["shared_prefix_tokens"] == 3 * block
+
+    def test_sharing_disabled_across_different_prefixes(self, quantized_lm):
+        model, qparams = quantized_lm
+        eng = _engine(model, qparams, slots=2, layout="paged", block=8)
+        eng.generate([Request(rid=0, prompt=np.arange(20, dtype=np.int32),
+                              max_new_tokens=4),
+                      Request(rid=1,
+                              prompt=np.arange(1, 21, dtype=np.int32),
+                              max_new_tokens=4)])
+        assert eng.kv_stats["blocks_saved_by_sharing"] == 0
+
+
+class TestCompileContract:
+    def test_one_decode_one_prefill_per_bucket(self, quantized_lm):
+        """PR 2/3 contract survives paging: 1 dispatch per step, prefill
+        compiles bounded by buckets, stable across runs."""
+        model, qparams = quantized_lm
+        eng = ServeEngine(model, qparams, batch_slots=4, max_len=MAX_LEN,
+                          chunk_buckets=(8, 32), backend="quantized",
+                          kv_layout="paged", block_size=BLOCK)
+        eng.generate(_requests(6))
+        st = eng.last_stats
+        assert st["dispatches_per_step"] == 1.0
+        assert st["prefill_compiles"] <= 2
+        eng.generate(_requests(6, seed=3, shared_prefix=10))
+        assert eng.last_stats["prefill_compiles"] <= 2
+
+
+class TestBlockGranularAdmission:
+    def test_scarce_pool_queues_instead_of_crashing(self, quantized_lm):
+        """Over-admission regression: with slots free but blocks scarce,
+        the queue head WAITS for blocks (no mid-prefill OOM) and every
+        request still completes."""
+        model, qparams = quantized_lm
+        # 8 blocks of 8: one request needs ceil((20+20)/8)=5 -> the two
+        # can never be resident together despite 4 free slots
+        eng = _engine(model, qparams, slots=4, layout="paged", block=8,
+                      num_blocks=8)
+        reqs = [Request(rid=i, prompt=np.arange(20, dtype=np.int32) + i,
+                        max_new_tokens=20) for i in range(2)]
+        done = eng.generate(reqs)
+        assert all(len(done[i]) == 20 for i in range(2))
+        st = eng.last_stats
+        assert st["block_waits"] > 0
+        assert st["rejected"] == 0
+        kv = eng.kv_stats
+        assert kv["blocks_peak_in_use"] <= kv["blocks_total"]
+        assert kv["blocks_in_use"] == 0
+
+    def test_never_fits_is_rejected_not_queued(self, quantized_lm):
+        """A prompt whose worst-case need exceeds the WHOLE pool is
+        rejected at admission with an error, not deadlocked."""
+        model, qparams = quantized_lm
+        eng = _engine(model, qparams, slots=2, layout="paged", block=8,
+                      num_blocks=4)     # pool ceiling: 32 tokens
+        ok = Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                     max_new_tokens=8)
+        doomed = Request(rid=1, prompt=np.arange(30, dtype=np.int32),
+                         max_new_tokens=16)
+        done = eng.generate([ok, doomed])
+        assert len(done[0]) == 8
+        assert done[1] == [] and doomed.status == "rejected"
+        assert "block need" in doomed.error
+
+    def test_fully_provisioned_pool_never_waits(self, quantized_lm):
+        """Default provisioning (slots x blocks_per_slot) keeps the old
+        slot-granular admission behaviour."""
+        model, qparams = quantized_lm
+        eng = _engine(model, qparams, slots=2, layout="paged")
+        eng.generate(_requests(6, max_new=4))
+        assert eng.last_stats["block_waits"] == 0
+
+
+class TestForkCopyOnWrite:
+    def test_fork_shares_then_copies_on_write(self, quantized_lm):
+        """fork() clones a slot ref-counted; writable_block() + the
+        runner's jitted block copy give the forked slot private storage
+        whose bytes match the original."""
+        model, qparams = quantized_lm
+        eng = _engine(model, qparams, slots=2, layout="paged", block=8)
+        kv, runner = eng.kv, eng.runner
+        kv.reset()
+        # fill the pool arrays with per-position ramps so the block copy
+        # is observable (blocks hold DIFFERENT bytes before the copy)
+        kv.caches = jax.tree.map(
+            lambda x: (jnp.arange(x.size) % 7).reshape(x.shape)
+            .astype(x.dtype), kv.caches)
+        a = kv.admit(np.arange(20, dtype=np.int32), 8)
+        kv.pos[a] = 20
+        b = kv.fork(a)
+        assert list(kv.block_tables[b]) == list(kv.block_tables[a])
+        tail = 20 // 8          # block holding position 20
+        shared_bid = int(kv.block_tables[a][tail])
+        fresh_bid = kv.writable_block(b, tail)
+        assert fresh_bid != shared_bid
+        copies = kv.take_pending_copies()
+        assert copies == [(shared_bid, fresh_bid)]
+        before = jax.tree.leaves(kv.caches)[0]
+        assert not np.array_equal(np.asarray(before[:, fresh_bid]),
+                                  np.asarray(before[:, shared_bid]))
+        kv.caches = runner.copy_blocks(kv.caches, copies)
+        leaf = jax.tree.leaves(kv.caches)[0]
+        np.testing.assert_array_equal(np.asarray(leaf[:, fresh_bid]),
+                                      np.asarray(leaf[:, shared_bid]))
+        assert kv.pool.stats()["cow_copies"] == 1
+        kv.free(a), kv.free(b)
+        assert kv.pool.n_free == kv.pool.num_blocks
+
+
+class TestWriteSlotRowGuard:
+    def test_unknown_scalar_leaf_raises(self):
+        """A new sub-2-dim cache leaf can no longer be dropped silently:
+        only whitelisted bookkeeping (KVCache.length) may skip the row
+        write."""
+        from typing import NamedTuple
+
+        class Odd(NamedTuple):      # namedtuples are native pytrees
+            k: jnp.ndarray
+            weird: jnp.ndarray
+
+        shared = {"sub_0": Odd(jnp.zeros((2, 4, 8)), jnp.zeros((2,)))}
+        fresh = {"sub_0": Odd(jnp.ones((2, 1, 8)), jnp.ones((2,)))}
+        with pytest.raises(ValueError, match="weird"):
+            write_slot_row(shared, fresh, 0)
+
+    def test_length_bookkeeping_still_skipped(self):
+        from repro.models.attention import KVCache
+        shared = {"sub_0": KVCache(jnp.zeros((2, 4, 8)), jnp.zeros((2, 4, 8)),
+                                   None, None, jnp.zeros((2,), jnp.int32))}
+        fresh = {"sub_0": KVCache(jnp.ones((2, 1, 8)), jnp.ones((2, 1, 8)),
+                                  None, None, jnp.ones((2,), jnp.int32))}
+        out = write_slot_row(shared, fresh, 1)
+        np.testing.assert_array_equal(np.asarray(out["sub_0"].length),
+                                      np.zeros(2))       # untouched
+        np.testing.assert_array_equal(np.asarray(out["sub_0"].k[:, 1]),
+                                      np.ones((2, 8)))   # row written
+
+
+class TestValidation:
+    def test_paged_needs_chunked_prefill(self):
+        """Models without chunked-prefill support (MoE routing here)
+        keep the dense layout."""
+        cfg = tiny_variant(get_arch("llama4-scout-17b-a16e"),
+                           n_layers=2).replace(
+            d_model=64, vocab_size=VOCAB, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                        kv_layout="paged")
+
+    def test_unknown_layout_rejected(self, quantized_lm):
+        model, qparams = quantized_lm
+        with pytest.raises(ValueError, match="kv_layout"):
+            ServeEngine(model, qparams, batch_slots=2, max_len=MAX_LEN,
+                        kv_layout="ring")
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
