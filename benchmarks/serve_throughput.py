@@ -54,7 +54,7 @@ import numpy as np
 from benchmarks.common import bench_arch, default_qcfg
 from repro.core.quantize_model import quantize_model_sequential
 from repro.models.model import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_PATH = os.path.join(_ROOT, "experiments", "serve", "throughput.json")
@@ -115,7 +115,9 @@ def _fmt_row(label, slots, st):
             f"  {st['decode_steps']:<5}  "
             f"{st['dispatches_per_step']:<9.0f}  "
             f"{st['prefill_compiles']}/{len(st['chunk_buckets'])}"
-            f"{'':<13}  {st['interleaved_steps']:<11}  {_kv_summary(st)}")
+            f"{'':<13}  {st['interleaved_steps']:<11}  {_kv_summary(st)}"
+            f"  q{st['queue_ms'] or 0:.0f}ms"
+            f" w{st['block_waits']} p{st['preemptions']}")
 
 
 def run(quick: bool = False, block_size: int = 16):
@@ -168,6 +170,64 @@ def run(quick: bool = False, block_size: int = 16):
 
     _write(records)
     return rows
+
+
+def _session_smoke(model, qparams, vocab, block_size: int) -> dict:
+    """Drive the session-based request API with a mixed traffic shape —
+    low-priority background streams, a preempting high-priority
+    arrival, a cancellation storm (queued + live), and a fork tree —
+    and assert the lifecycle invariants CI cares about: no slot or
+    block leaks after the storm, preemption + queue-time observable in
+    stats, forked greedy streams exact, compile contract intact."""
+    rng = np.random.default_rng(7)
+    prompt = lambda n: rng.integers(0, vocab, n).astype(np.int32)
+    # 13 blocks of 16: four background streams need 3 each (24 prompt +
+    # 24 new), so the high-priority arrival (2 blocks) must preempt
+    eng = ServeEngine(model, qparams, batch_slots=4, max_len=128,
+                      chunk_buckets=(8, 32), kv_layout="paged",
+                      block_size=block_size,
+                      num_blocks=-(-48 // block_size) * 4 + 1)
+    bg = [eng.submit(prompt(24), SamplingParams(max_new_tokens=24),
+                     priority=5) for _ in range(4)]
+    while sum(len(h.out_tokens) > 0 for h in bg) < 2:
+        eng.step()
+    hp = eng.submit(prompt(16), SamplingParams(max_new_tokens=12),
+                    priority=0)
+    extras = [eng.submit(prompt(12), SamplingParams(max_new_tokens=8),
+                         priority=9) for _ in range(2)]
+    eng.step(), eng.step()
+    for h in extras:                    # storm: cancel while queued
+        h.cancel()
+    victim_live = next(h for h in bg if h.status == "decode")
+    victim_live.cancel()                # storm: cancel a live stream
+    while hp.status != "done":
+        eng.step()
+    donor = next(h for h in bg if h.status == "decode")
+    forks = donor.fork(1)               # copy-free beam branch
+    eng.drain()
+    st = eng.last_stats
+    assert hp.out_tokens and len(hp.out_tokens) == 12
+    assert st["preemptions"] >= 1, st
+    assert st["cancelled"] == 3, st
+    assert st["forks"] == 1, st
+    assert st["queue_ms"] is not None
+    assert all(h.status == "done" for h in bg if h is not victim_live)
+    # a greedy fork with inherited params reproduces its donor exactly
+    assert forks[0].out_tokens == donor.out_tokens
+    # the storm + preemption left NOTHING behind
+    kv = st["kv"]
+    assert kv["blocks_in_use"] == 0, kv
+    assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+    assert eng.scheduler.kv.n_free == 4
+    assert st["dispatches_per_step"] == 1.0, st
+    assert st["prefill_compiles"] <= len(eng.runner.chunk_buckets), st
+    print(f"  serve-smoke[session] OK: {st['tokens']} tokens, "
+          f"{st['preemptions']} preemptions, {st['cancelled']} cancels, "
+          f"{st['forks']} forks, queue {st['queue_ms']:.0f}ms, "
+          f"{st['block_waits']} block-waits, no slot/block leaks")
+    return {"variant": "tiny-smoke/session", "backend": "reference",
+            "kv_layout": "paged", "gate": None, **st,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
 
 def tiny_smoke(baseline_path: str = BASELINE_PATH,
@@ -241,6 +301,10 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
         "greedy streams diverged across (backend, kv_layout) cells"
     print("  serve-smoke parity OK: greedy streams identical across "
           f"{len(streams)} (backend, kv_layout) cells")
+    # session-API lifecycle smoke: submit/cancel/fork/preempt traffic
+    # (not perf-gated; the record rides along in the artifact)
+    records.append(_session_smoke(model, qparams, cfg.vocab_size,
+                                  block_size))
     by_gate = {r["gate"]: r for r in records}
     ratio = (by_gate["quantized"]["decode_tokens_per_sec"]
              / by_gate["reference"]["decode_tokens_per_sec"])

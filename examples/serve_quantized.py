@@ -1,9 +1,12 @@
-"""Serve a quantized model with batched requests + INT4 KV cache.
+"""Serve a quantized model through the session-based request API.
 
     PYTHONPATH=src python examples/serve_quantized.py
 
 Loads the cached benchmark LM, quantizes it to W(1+1)A(1x4), and runs
-the continuous-batching engine over a handful of text prompts.
+the continuous-batching engine over a handful of text prompts via
+``engine.submit`` -> ``StreamHandle`` (paged KV layout: block tables +
+copy-on-write), then forks one live stream into a copy-free 2-way
+sampling tree.
 """
 import os
 import sys
@@ -14,7 +17,7 @@ import numpy as np
 
 from benchmarks.common import calib_batch, get_trained_lm, quantize_ours
 from repro.data.tokenizer import ByteTokenizer
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import SamplingParams, ServeEngine
 
 
 def main():
@@ -30,18 +33,49 @@ def main():
         "for i in range(",
         '"""Docstring',
     ]
-    reqs = [Request(rid=i, prompt=np.asarray(tok.encode(p), np.int32),
-                    max_new_tokens=24) for i, p in enumerate(prompts)]
-    engine = ServeEngine(model, qp, batch_slots=3, max_len=128)
-    done = engine.generate(reqs)
-    for i, p in enumerate(prompts):
-        completion = tok.decode(np.asarray(done[i]))
-        print(f"  {p!r} -> {completion!r}")
+    engine = ServeEngine(model, qp, batch_slots=3, max_len=128,
+                         kv_layout="paged", block_size=16)
+    # submit: every prompt becomes a live stream handle immediately;
+    # the urgent one (priority 0) is served ahead of the backlog and
+    # may preempt it if the block pool runs short
+    handles = [engine.submit(np.asarray(tok.encode(p), np.int32),
+                             SamplingParams(max_new_tokens=24),
+                             priority=0 if i == 0 else 5)
+               for i, p in enumerate(prompts)]
+
+    # pull-iterate the first stream (this drives the whole engine);
+    # the remaining handles finish during the same drain
+    first = "".join(tok.decode(np.asarray([t]))
+                    for t in handles[0].tokens())
+    print(f"  {prompts[0]!r} -> {first!r}   (streamed token-by-token)")
+    for p, h in zip(prompts[1:], handles[1:]):
+        print(f"  {p!r} -> {tok.decode(np.asarray(h.result()))!r}")
     st = engine.last_stats
-    print(f"served {len(prompts)} requests on {engine.slots} slots "
-          "(W(1+1)A(1x4) weights, shared INT4 KV cache): "
+    print(f"served {len(prompts)} streams on {engine.slots} slots "
+          "(W(1+1)A(1x4) weights, paged INT4 KV cache): "
           f"{st['tokens']} tokens at {st['tokens_per_sec']:.1f} tok/s, "
-          f"one decode dispatch per step x {st['decode_steps']} steps")
+          f"one decode dispatch per step x {st['decode_steps']} steps, "
+          f"mean queue {st['queue_ms'] or 0:.0f}ms")
+
+    # fork: branch a live stream's continuation into a 2-way sampling
+    # tree — each branch shares every pre-fork KV block copy-free
+    # (copy-on-write on first divergent write) and diverges via its own
+    # sampling seed
+    donor = engine.submit(np.asarray(tok.encode("def main("), np.int32),
+                          SamplingParams(max_new_tokens=24))
+    while len(donor.out_tokens) < 8:
+        engine.step()
+    branches = [donor.fork(1, params=SamplingParams(
+        max_new_tokens=24, temperature=0.9, seed=s))[0] for s in (1, 2)]
+    engine.drain()
+    print("  fork tree from 'def main(':")
+    print(f"    greedy   -> {tok.decode(np.asarray(donor.out_tokens))!r}")
+    for i, b in enumerate(branches):
+        print(f"    sample {i} -> {tok.decode(np.asarray(b.out_tokens))!r}")
+    st, kv = engine.last_stats, engine.kv_stats
+    print(f"  fork window: {st['forks']} forks, {kv['cow_copies']} COW "
+          f"block copies, {kv['blocks_saved_by_sharing']} blocks saved "
+          f"by sharing, {kv['blocks_in_use']} blocks leaked")
 
 
 if __name__ == "__main__":

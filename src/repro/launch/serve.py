@@ -1,8 +1,13 @@
-"""Serving launcher: batched generation with the quantized engine.
+"""Serving launcher: stream generation through the session request API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama1-7b --tiny \
         [--no-quant] [--backend quantized] [--slots 4] [--max-new 32] \
-        --prompt "def main(" ...
+        [--temperature 0.8] --prompt "def main(" ...
+
+Each prompt becomes one submitted stream (``engine.submit`` ->
+``StreamHandle``); draining the engine completes them all with
+continuous batching, priorities, and (paged layout) preemption under
+block pressure.
 """
 from __future__ import annotations
 
@@ -36,6 +41,8 @@ def main():
                     help="paged pool size (default: fully provisioned "
                          "slots * ceil(max_len / block_size))")
     ap.add_argument("--prompt", action="append", default=None)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-stream sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -46,7 +53,7 @@ def main():
     from repro.data.corpus import load_corpus_text
     from repro.data.tokenizer import ByteTokenizer
     from repro.models.model import build_model
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import SamplingParams, ServeEngine
 
     cfg = get_arch(args.arch)
     if args.tiny:
@@ -67,10 +74,6 @@ def main():
                                            QuantConfig(group_size=32))
 
     prompts = args.prompt or ["def main(", "import ", "class "]
-    reqs = [Request(rid=i,
-                    prompt=np.asarray(tok.encode(p), np.int32) % cfg.vocab_size,
-                    max_new_tokens=args.max_new)
-            for i, p in enumerate(prompts)]
     engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512,
                          backend=args.backend, kv_layout=args.kv_layout,
                          block_size=args.block_size,
@@ -81,9 +84,14 @@ def main():
               f"packed to kernel-native W(1+1) "
               f"({ps['packed_bytes'] / 2**20:.2f} MiB), "
               f"{ps['reference_linears']} on the reference fallback")
-    done = engine.generate(reqs)
-    for i, p in enumerate(prompts):
-        print(f"{p!r} -> {tok.decode(np.asarray(done[i]))!r}")
+    sp = SamplingParams(max_new_tokens=args.max_new,
+                        temperature=args.temperature)
+    handles = [engine.submit(
+        np.asarray(tok.encode(p), np.int32) % cfg.vocab_size, sp)
+        for p in prompts]
+    engine.drain()
+    for p, h in zip(prompts, handles):
+        print(f"{p!r} -> {tok.decode(np.asarray(h.out_tokens))!r}")
     st = engine.last_stats
     print(f"[serve] {st['tokens']} tokens on {st['slots']} slots in "
           f"{st['seconds']:.2f}s ({st['tokens_per_sec']:.1f} tok/s overall; "
@@ -94,6 +102,9 @@ def main():
           f"{st['dispatches_per_step']:.0f} dispatch/step, "
           f"{st['prefill_compiles']} prefill compiles for "
           f"buckets {st['chunk_buckets']}")
+    print(f"[serve] session: mean queue {st['queue_ms'] or 0:.1f}ms, "
+          f"{st['preemptions']} preemptions, {st['cancelled']} cancelled, "
+          f"{st['forks']} forks")
     kv = st["kv"]
     if kv["layout"] == "paged":
         print(f"[serve] paged KV pool: {kv['pool_bytes'] / 2**20:.2f} MiB, "

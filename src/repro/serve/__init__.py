@@ -1,5 +1,8 @@
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.kv_manager import KVManager
+from repro.serve.handle import StreamHandle
+from repro.serve.kv_manager import KVManager, PagedKVManager
+from repro.serve.params import (ForkError, InvalidParamsError,
+                                SamplingParams)
 from repro.serve.runner import ModelRunner
 from repro.serve.sampler import sample_token
 from repro.serve.scheduler import Scheduler

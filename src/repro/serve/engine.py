@@ -1,21 +1,37 @@
 """Slot-parallel continuous-batching serving engine (façade).
 
+The public front door is the **session API**: ``submit`` enqueues one
+stream and returns a live ``StreamHandle`` — incremental ``tokens()``
+iteration, ``result()``, ``cancel()`` (frees KV blocks immediately),
+and ``fork(n)`` (copy-free beam/speculative trees over the paged
+pool's copy-on-write ``fork``).  Streams carry per-request
+``SamplingParams`` (temperature, token budget, eos override, stop
+tokens, seed) and an integer ``priority``: lower values run first and
+may PREEMPT strictly-lower-priority live streams when slots or blocks
+run short — the victim is snapshotted to the host, its blocks freed,
+and it resumes later via prefix-sharing-aware re-prefill, bit-identical
+for greedy streams.  ``generate()`` remains as a thin batch-mode compat
+shim (submit + drain + legacy ``Request`` mirroring).
+
 The serving stack is three layers behind this stable API:
 
-- ``serve/scheduler.py`` — request queue, admission (overflow
-  truncate/reject), per-slot lifecycle, Sarathi-style interleave of
+- ``serve/scheduler.py`` — priority queue + re-entrant ``step()`` loop,
+  admission (overflow truncate/reject, block-granular on paged),
+  preemption/cancellation/fork lifecycle, Sarathi-style interleave of
   prefill chunks with batched decode, streaming ``on_token`` callbacks,
-  TTFT/ITL/compile metrics;
+  TTFT/ITL/queue-time/compile metrics;
 - ``serve/kv_manager.py``  — the shared serving cache in one of two
   layouts (``kv_layout=``): ``dense`` slot-indexed rows
   (``model.init_caches``, ``[layers, slots, max_len, ...]``) or the
   ``paged`` INT4 block pool (``model.init_paged_caches``,
   ``[layers, num_blocks + 1, block_size, ...]`` + per-slot block
   tables, ref-counted via ``serve/block_pool.py``) — block-granular
-  OOM-aware admission, copy-free shared-prefix reuse, memory that
-  scales with live tokens instead of ``slots x max_len``;
+  OOM-aware admission, copy-free shared-prefix reuse, preemption
+  snapshot/release, memory that scales with live tokens instead of
+  ``slots x max_len``;
 - ``serve/runner.py``     — the only layer that touches ``jax.jit``:
-  one decode compile, one prefill compile per chunk bucket.
+  one decode compile, one prefill compile per chunk bucket, one block
+  copy (COW) — unchanged by the session API.
 
 Admission streams the prompt as fixed-size, zero-padded chunks written
 DIRECTLY into the slot's rows of the shared cache
@@ -38,11 +54,14 @@ lowers at production shapes.
 """
 from __future__ import annotations
 
+from repro.serve.handle import StreamHandle
 from repro.serve.kv_manager import KVManager, PagedKVManager
+from repro.serve.params import ForkError, InvalidParamsError, SamplingParams
 from repro.serve.runner import DEFAULT_CHUNK_BUCKETS, ModelRunner
 from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "SamplingParams", "StreamHandle", "ServeEngine",
+           "InvalidParamsError", "ForkError"]
 
 KV_LAYOUTS = ("dense", "paged")
 
@@ -86,8 +105,40 @@ class ServeEngine:
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
                                    seed=seed, overflow_policy=overflow_policy)
 
+    # ---------------- session API ----------------
+
+    def submit(self, prompt, params: SamplingParams | None = None, *,
+               priority: int = 0, on_token=None) -> StreamHandle:
+        """Enqueue one stream and return its live handle.  ``params``
+        defaults to greedy ``SamplingParams()`` and is validated now
+        (``InvalidParamsError``); lower ``priority`` runs first and may
+        preempt strictly-lower-priority live streams.  The handle joins
+        the running batch mid-flight on the next ``step()``."""
+        return self.scheduler.submit(prompt, params, priority=priority,
+                                     on_token=on_token)
+
+    def step(self) -> bool:
+        """Advance every live stream by one engine iteration (at most
+        one prefill chunk + one batched decode dispatch).  Returns True
+        while work remains.  Handle accessors (``tokens()`` /
+        ``result()``) pump this for you."""
+        return self.scheduler.step()
+
+    def drain(self):
+        """Run ``step()`` until every submitted stream is terminal."""
+        self.scheduler.drain()
+
+    def has_live_work(self) -> bool:
+        return self.scheduler.has_live_work()
+
+    # ---------------- batch compat shim ----------------
+
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Serve a list of requests with continuous slot reuse."""
+        """Legacy batch API: serve ``Request`` records to completion
+        with continuous slot reuse (thin shim over submit + drain;
+        resets the cache/pool first, so repeated batches are
+        deterministic).  Requires an idle engine — mixed usage should
+        go through ``submit``."""
         return self.scheduler.run(requests)
 
     # ---------------- stable observability surface ----------------

@@ -1,0 +1,148 @@
+"""Live stream handles: the session-based request API's user surface.
+
+A ``StreamHandle`` is returned by ``ServeEngine.submit`` the moment a
+request is enqueued and stays valid for the stream's whole life.  The
+engine is single-threaded by design (every jitted step runs on the
+caller's thread), so consuming a handle *drives* the engine: blocking
+accessors pump ``scheduler.step()`` — advancing ALL live streams, not
+just this one — until their condition is met.
+
+State machine::
+
+    queued ──admit──> prefill ──prompt done──> decode ──budget/eos──> done
+      ▲                  │                        │
+      │                  └───────preempt──────────┤          (terminal:
+      └────────────── preempted <─────────────────┘     done / rejected
+                                                          / cancelled)
+
+    cancel() from any live state -> cancelled (slot + blocks freed
+    immediately); admission may also end a stream as rejected (overflow
+    policy, empty prompt, or a worst-case block need that could never
+    fit the pool).
+
+Fork (paged KV layout only): ``fork(n)`` clones a decode-state stream
+into ``n`` new handles through the kv-manager's ref-counted ``fork()``
+— every pre-fork block (including the partial tail) is shared
+copy-free, and the first divergent write triggers copy-on-write through
+the runner's jitted block copy.  Greedy forks with inherited params
+reproduce the parent stream exactly; divergence comes from per-fork
+``SamplingParams`` (temperature / seed / stop conditions).
+"""
+from __future__ import annotations
+
+import time
+
+TERMINAL_STATES = ("done", "rejected", "cancelled")
+
+
+class StreamHandle:
+    """Engine-facing view of one live stream.  Constructed by the
+    scheduler (``submit`` / ``fork``) — not directly by users."""
+
+    def __init__(self, scheduler, rid, prompt, params, priority,
+                 on_token=None, compat=None):
+        self._sched = scheduler
+        self.rid = rid
+        self.prompt = prompt            # np.int32 [len] (post-truncation)
+        self.params = params
+        self.priority = priority        # lower value = more urgent
+        self.on_token = on_token
+        self.out_tokens: list[int] = []
+        self.status = "queued"
+        self.error: str | None = None
+        self.truncated = False
+        self.preemptions = 0            # times snapshotted + re-queued
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+        # scheduler internals
+        self._seq = scheduler._next_seq()   # arrival order, preserved
+        self._slot: int | None = None       # across preemption
+        self._key = None                # saved sampler key (np [2] u32)
+        self._span = None               # reserved row span (fork bound)
+        self._t_submit = time.perf_counter()
+        self._t_admit: float | None = None
+        self._ttft_s: float | None = None
+        self._compat = compat           # legacy Request mirror, if any
+
+    # ---------------- inspection ----------------
+
+    @property
+    def finished(self) -> bool:
+        return self.status in TERMINAL_STATES
+
+    @property
+    def ttft_s(self) -> float | None:
+        """First-token latency from submit (includes queue time)."""
+        return self._ttft_s
+
+    @property
+    def itl_s(self) -> float | None:
+        """Mean inter-token latency (needs >= 2 tokens)."""
+        if self.t_first is None or len(self.out_tokens) < 2:
+            return None
+        return (self.t_last - self.t_first) / (len(self.out_tokens) - 1)
+
+    @property
+    def queue_s(self) -> float | None:
+        """Submit -> first admission wait (None while still queued)."""
+        if self._t_admit is None:
+            return None
+        return self._t_admit - self._t_submit
+
+    # ---------------- consumption (drives the engine) ----------------
+
+    def tokens(self):
+        """Incremental token iterator.  Yields every token already
+        emitted, then pumps engine steps until the stream finishes —
+        the streaming-pull twin of the ``on_token`` push callback (both
+        observe the same sequence in the same order)."""
+        i = 0
+        while True:
+            while i < len(self.out_tokens):
+                yield self.out_tokens[i]
+                i += 1
+            if self.finished:
+                return
+            if not self._sched.step() and not self.finished \
+                    and i >= len(self.out_tokens):
+                raise RuntimeError(
+                    f"engine went idle with stream {self.rid} still "
+                    f"{self.status!r}")
+
+    def result(self) -> list[int]:
+        """Pump engine steps until this stream reaches a terminal state;
+        returns its emitted tokens (``[]`` for a rejected stream,
+        partial output for a cancelled one).  Check ``status`` /
+        ``error`` to distinguish."""
+        while not self.finished:
+            if not self._sched.step() and not self.finished:
+                raise RuntimeError(
+                    f"engine went idle with stream {self.rid} still "
+                    f"{self.status!r}")
+        return self.out_tokens
+
+    # ---------------- control ----------------
+
+    def cancel(self):
+        """End the stream now.  Queued: dequeued; live: its slot and
+        every KV block it holds are freed immediately (fork siblings
+        keep theirs ref-counted).  No-op on an already-terminal
+        stream."""
+        self._sched.cancel(self)
+
+    def fork(self, n: int = 1, params=None, priority=None):
+        """Clone this decode-state stream into ``n`` new handles that
+        share ALL pre-fork KV blocks copy-free (paged layout's
+        ref-counted ``fork`` + copy-on-write on first divergent write).
+        Each fork inherits the emitted-so-far tokens and continues
+        independently; ``params``/``priority`` override per fork.
+        Raises ``ForkError`` on the dense layout, on a non-decode-state
+        stream, when no slot is free, or when ``params`` asks for more
+        rows than the parent's reserved span."""
+        return self._sched.fork_stream(self, n, params=params,
+                                       priority=priority)
+
+    def __repr__(self):
+        return (f"StreamHandle(rid={self.rid}, status={self.status!r}, "
+                f"priority={self.priority}, tokens={len(self.out_tokens)}, "
+                f"preemptions={self.preemptions})")

@@ -285,6 +285,66 @@ class PagedKVManager:
         self._shared_len[slot] = 0
         self._free.append(slot)
 
+    # ---------------- preemption snapshot/restore ----------------
+
+    def preempt_release(self, slot: int, seq_tokens: np.ndarray,
+                        written_rows: int):
+        """Preemption release: before freeing the slot, publish every
+        COMPLETE, already-written block of ``seq_tokens`` (the victim's
+        prompt + emitted tokens) in the sharing registry and flag it
+        content-final.  Blocks still shared with live streams survive
+        the free ref-counted, so the victim's re-admission — which
+        treats ``seq_tokens`` as its prompt — reattaches them through
+        the ordinary prefix-sharing path and re-prefills only the rest.
+        Registration is content-keyed and deterministic: decode-written
+        rows quantize to the same bytes a re-prefill would write, so
+        attaching them is as sound as prompt-block sharing.
+
+        Only blocks this slot wrote ITSELF (beyond its attached shared
+        region) are flagged content-final here — an attached block's
+        written flag belongs to its producer's lifecycle (it may still
+        be mid-prefill), and the flag gates the consumer-takeover logic
+        in ``rescind_unwritten_shared``."""
+        own_start = int(self._shared_len[slot])
+        keys = prefix_block_keys(seq_tokens, self.block_size,
+                                 max_blocks=self.blocks_per_slot)
+        for i, key in enumerate(keys):
+            if (i + 1) * self.block_size > written_rows:
+                break
+            bid = int(self.block_tables[slot, i])
+            if bid != NULL_BLOCK:
+                self.pool.register(key, bid)
+                if (i + 1) * self.block_size > own_start:
+                    self.pool.mark_written(bid)
+        self.free(slot)
+
+    def rescind_unwritten_shared(self, slot: int,
+                                 orphaned: set | None = None) -> int:
+        """Takeover hook after a producer released mid-prefill (cancel
+        or preemption): if this still-prefilling slot attached a shared
+        block the producer never finished writing, lower its
+        ``shared_len`` to the first such block so its OWN chunks write
+        it.  The block stays attached — content is deterministic in
+        (token, position), so this slot writes the identical bytes the
+        producer would have.  Returns the (possibly lowered)
+        shared_len.
+
+        ``orphaned`` restricts the takeover to blocks the released slot
+        actually owned as writer — attached blocks whose producer is
+        still live keep their FIFO soundness and must NOT be demoted by
+        unrelated churn."""
+        sl = int(self._shared_len[slot])
+        bs = self.block_size
+        for i in range(sl // bs):
+            bid = int(self.block_tables[slot, i])
+            if bid != NULL_BLOCK and not self.pool.is_written(bid) \
+                    and (orphaned is None or bid in orphaned):
+                self._shared_len[slot] = i * bs
+                if int(self.pos[slot]) > i * bs:
+                    self.pos[slot] = i * bs
+                return i * bs
+        return sl
+
     # ---------------- fork / copy-on-write ----------------
 
     def fork(self, src: int) -> int | None:

@@ -1,0 +1,95 @@
+"""Per-request sampling parameters + the serve API's typed errors.
+
+``SamplingParams`` replaces the engine-global sampling knobs: every
+stream submitted through ``ServeEngine.submit`` (or the ``generate``
+compat shim) carries its own temperature, token budget, eos override,
+and stop-token list.  Validation is strict and happens at ``submit``
+time — an invalid combination raises ``InvalidParamsError`` before the
+request can reach the scheduler, never a silent clamp.
+
+The params object is frozen: the scheduler may hold it for the whole
+stream lifetime (including across preemption snapshots) without
+defensive copies, and ``fork`` can reuse the parent's params verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class InvalidParamsError(ValueError):
+    """A ``SamplingParams`` field (or a submit-time argument such as
+    ``priority``) failed validation.  Raised at admission — the request
+    is never enqueued."""
+
+
+class ForkError(RuntimeError):
+    """``StreamHandle.fork`` could not run: dense KV layout (no
+    copy-on-write substrate), the stream is not in a forkable state, no
+    slot is free, or the requested budget exceeds the parent's reserved
+    block span."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling/termination settings.
+
+    - ``temperature``     0.0 => greedy argmax (never touches the PRNG);
+      > 0 => categorical sampling.
+    - ``max_new_tokens``  total new-token budget for the stream.  Forked
+      streams inherit the parent's already-emitted tokens against this
+      budget (a fork of a stream with k emitted tokens generates at most
+      ``max_new_tokens - k`` more).
+    - ``eos_id``          overrides the engine-wide eos id for this
+      stream (``None`` keeps the engine default).
+    - ``ignore_eos``      disables eos termination entirely (budget and
+      cache ceiling still apply) — useful for fixed-length benchmarks.
+    - ``stop_tokens``     extra per-request stop ids; the stop token is
+      emitted, then the stream finishes.
+    - ``seed``            per-stream PRNG seed for ``temperature > 0``
+      (``None`` draws from the engine's seeded key chain).  Distinct
+      seeds are how forked streams diverge under sampling.
+    """
+
+    temperature: float = 0.0
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    ignore_eos: bool = False
+    stop_tokens: tuple = ()
+    seed: int | None = None
+
+    def validated(self) -> "SamplingParams":
+        """Return self after strict validation (raises
+        ``InvalidParamsError``)."""
+        if not isinstance(self.max_new_tokens, int) \
+                or isinstance(self.max_new_tokens, bool) \
+                or self.max_new_tokens < 1:
+            raise InvalidParamsError(
+                f"max_new_tokens must be an int >= 1, "
+                f"got {self.max_new_tokens!r}")
+        try:
+            t = float(self.temperature)
+        except (TypeError, ValueError):
+            t = None
+        if t is None or not t >= 0.0 or t != t:
+            raise InvalidParamsError(
+                f"temperature must be a finite float >= 0, "
+                f"got {self.temperature!r}")
+        for name, val in (("eos_id", self.eos_id), ("seed", self.seed)):
+            if val is not None and (not isinstance(val, int)
+                                    or isinstance(val, bool) or val < 0):
+                raise InvalidParamsError(
+                    f"{name} must be a non-negative int or None, "
+                    f"got {val!r}")
+        if not isinstance(self.stop_tokens, (tuple, list)):
+            raise InvalidParamsError(
+                f"stop_tokens must be a tuple/list of token ids, "
+                f"got {self.stop_tokens!r}")
+        for s in self.stop_tokens:
+            if not isinstance(s, int) or isinstance(s, bool) or s < 0:
+                raise InvalidParamsError(
+                    f"stop_tokens entries must be non-negative ints, "
+                    f"got {s!r}")
+        if not isinstance(self.ignore_eos, bool):
+            raise InvalidParamsError(
+                f"ignore_eos must be a bool, got {self.ignore_eos!r}")
+        return self

@@ -38,6 +38,12 @@ fixed-shape int32 inputs ([slots, n_bt] decode, [n_bt] per prefill
 chunk), so the layout changes WHICH rows the steps touch without adding
 compiles; ``copy_blocks`` applies queued copy-on-write pool copies
 (one extra jitted fn, compiled once).
+
+The session-based request API (submit/fork/cancel/preemption) adds NO
+entry points here: preemption restore re-prefills through the same
+chunk buckets, forks decode through the same batched step, and fork
+divergence reuses ``copy_blocks`` — the compile cache stays 1 decode +
+1 prefill per bucket (+1 block copy) per runner under any traffic mix.
 """
 from __future__ import annotations
 

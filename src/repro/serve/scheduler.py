@@ -1,49 +1,81 @@
-"""Scheduler: request queue, admission policy, per-slot lifecycle.
+"""Scheduler: priority queue, re-entrant step loop, per-slot lifecycle.
 
-Continuous batching over a fixed set of slots, Sarathi-style: each
-engine iteration runs AT MOST ONE prefill chunk (for the oldest
-admitted, still-prefilling request) and then ONE batched decode
-dispatch over all slots — so live decode streams never stall for more
-than one chunk budget while a long prompt is being admitted, and every
-generation step stays a single jitted dispatch.
+Session-based request layer over the continuous-batching substrate:
+streams are submitted one at a time (``submit`` -> ``StreamHandle``)
+into a priority queue ((priority, arrival) order — lower priority value
+first, FIFO within a class) and served by a re-entrant ``step()`` that
+callers pump explicitly (handles pump it for you).  One ``step()`` is
+one Sarathi-style engine iteration: sweep finished streams, admit from
+the queue head, run AT MOST ONE prefill chunk, then ONE batched decode
+dispatch over all slots — so live decode streams never stall more than
+one chunk budget, every generation step stays a single jitted dispatch,
+and new submissions join mid-flight.
 
-Lifecycle: queued -> prefill -> decode -> done (or rejected at
-admission).  Admission is FIFO into the lowest free slot; prompts at or
-past the cache ceiling are truncated or rejected AT ADMISSION
-(``overflow_policy``) instead of being prefilled past max_len.  On the
-paged KV layout admission is additionally block-granular: the queue
-head waits until its WORST-CASE block need fits the free pool (and is
-rejected when it could never fit), identical prompt prefixes attach
-already-resident blocks so their prefill starts at ``shared_len``, and
-block tables ride into every jitted step.
+Lifecycle: queued -> prefill -> decode -> done, with three more exits —
+rejected (admission), cancelled (``handle.cancel()``: slot and blocks
+freed immediately), and preempted (snapshotted + re-queued, below).
+Admission is priority-then-FIFO into the lowest free slot; prompts at
+or past the cache ceiling are truncated or rejected AT ADMISSION
+(``overflow_policy``).  On the paged KV layout admission is
+block-granular: the queue head waits until its WORST-CASE block need
+fits the free pool, identical prompt prefixes attach already-resident
+blocks (prefill starts at ``shared_len``), and block tables ride into
+every jitted step.
 
-All jitted execution goes through ``serve/runner.py``; cache/slot state
-lives in ``serve/kv_manager.py``; this layer is pure-python
-orchestration plus the serving metrics (TTFT / ITL / prefill vs decode
-seconds / compile counts).
+Preemption: when the head of the queue cannot be placed (no free slot,
+or ``block_waits`` pressure on the paged pool) and some running stream
+has strictly lower priority, the lowest-progress such victim is
+snapshotted — full token sequence + sampler key on the host, its
+written complete blocks registered for prefix sharing — its slot and
+blocks are released, and it is re-queued at its original arrival order.
+On re-admission it re-prefills ``prompt + emitted`` through the normal
+chunk path (attaching any still-resident shared blocks first), which is
+bit-identical to having never been preempted for greedy streams.
+Equal-priority traffic is NEVER preempted — only a strictly
+higher-priority arrival can displace a stream — so preemption cannot
+livelock.
+
+Forking (paged layout): ``fork_stream`` clones a decode-state stream n
+ways through the kv-manager's ref-counted ``fork()``; before every
+decode dispatch the scheduler copy-on-writes any live slot whose next
+write lands in a block shared with a sibling (one jitted block copy per
+divergence, drained through ``runner.copy_blocks``).
+
+All jitted execution goes through ``serve/runner.py`` (same compile
+contract: 1 decode + 1 prefill per chunk bucket + 1 block copy);
+cache/slot state lives in ``serve/kv_manager.py``; this layer is
+pure-python orchestration plus the serving metrics (TTFT / ITL /
+queue-time / prefill vs decode seconds / preemptions / compile counts).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Callable
 
 import jax
 import numpy as np
 
+from repro.serve.handle import StreamHandle
+from repro.serve.params import ForkError, InvalidParamsError, SamplingParams
 from repro.serve.sampler import sample_token
 
 
 @dataclasses.dataclass
 class Request:
+    """Legacy batch-mode request record (PR 1-4 API).  ``generate()``
+    converts it into a submitted stream and mirrors the stream's final
+    state (status/error/tokens/latency) back onto it — new code should
+    use ``ServeEngine.submit`` + ``StreamHandle`` directly."""
     rid: int
     prompt: np.ndarray              # [len] int32
     max_new_tokens: int = 32
     temperature: float = 0.0
     on_token: Callable[[int], None] | None = None   # streaming callback
     out_tokens: list | None = None
-    # lifecycle + per-request metrics (filled by the scheduler)
-    status: str = "queued"          # queued|prefill|decode|done|rejected
+    # lifecycle + per-request metrics (mirrored from the stream handle)
+    status: str = "queued"
     error: str | None = None
     truncated: bool = False
     t_first: float | None = None    # perf_counter at first/last token
@@ -54,7 +86,7 @@ class Request:
 
     @property
     def ttft_s(self) -> float | None:
-        """Set after run(): first-token latency from run start."""
+        """First-token latency from submission."""
         return getattr(self, "_ttft_s", None)
 
     @property
@@ -82,244 +114,632 @@ class Scheduler:
             raise ValueError(
                 "paged KV layout needs chunked prefill (the whole-prompt "
                 "fallback writes dense slot rows)")
+        slots = kv.slots
+        self.active: list[StreamHandle | None] = [None] * slots
+        self.fill = np.zeros(slots, np.int32)       # prefill progress
+        self.next_tok = np.zeros(slots, np.int32)
+        self.temps = np.zeros(slots, np.float32)
+        self.prefill_fifo: list[int] = []           # slots awaiting chunks
+        # greedy runs never touch the PRNG: the key array exists only
+        # once some stream actually samples, and keys derive per-stream
+        # at admission (so they survive preemption snapshots)
+        self.keys: np.ndarray | None = None         # [slots, 2] uint32
+        self._heap: list = []                       # (priority, seq, handle)
+        self._seq = 0
+        self._auto_rid = 0
         # observability: generation steps vs jitted decode dispatches —
         # slot-parallel batching means these stay EQUAL at any slot count
         self.decode_steps = 0
         self.last_stats: dict = {}
+        self._win: dict | None = None               # live stats window
+
+    # ---------------- session API ----------------
+
+    def submit(self, prompt, params: SamplingParams | None = None, *,
+               priority: int = 0, on_token=None, rid=None,
+               compat=None) -> StreamHandle:
+        """Enqueue one stream; returns its live handle immediately.
+        ``params`` is validated NOW (``InvalidParamsError``); prompt
+        overflow is still an admission-time concern (``overflow_policy``
+        decides truncate vs rejected-status).  Lower ``priority`` values
+        run first and may preempt strictly-lower-priority live streams.
+        """
+        params = (params if params is not None
+                  else SamplingParams()).validated()
+        if not isinstance(priority, int) or isinstance(priority, bool):
+            raise InvalidParamsError(
+                f"priority must be an int, got {priority!r}")
+        if rid is None:
+            rid = self._auto_rid
+        self._auto_rid = max(self._auto_rid + 1,
+                             rid + 1 if isinstance(rid, int) else 0)
+        self._ensure_window()
+        h = StreamHandle(self, rid, np.asarray(prompt), params, priority,
+                         on_token=on_token, compat=compat)
+        heapq.heappush(self._heap, (priority, h._seq, h))
+        w = self._win
+        w["submitted"] += 1
+        w["streams"].append(h)
+        return h
+
+    def cancel(self, h: StreamHandle):
+        """Terminate a stream immediately.  Live streams release their
+        slot and every KV block right away (ref-counted: fork siblings
+        and prefix sharers keep theirs); queued streams are dequeued
+        lazily.  No-op on terminal streams."""
+        if h.finished:
+            return
+        if h._slot is not None:
+            self._release_slot(h)
+        if self._win is not None:
+            self._win["cancelled"] += 1
+        self._finish(h, "cancelled")
+
+    def fork_stream(self, parent: StreamHandle, n: int = 1, *,
+                    params: SamplingParams | None = None,
+                    priority: int | None = None) -> list[StreamHandle]:
+        """Clone ``parent`` into ``n`` decode-state streams sharing all
+        its KV blocks copy-free (see ``StreamHandle.fork``)."""
+        if not self.paged:
+            raise ForkError(
+                "fork needs kv_layout='paged' (copy-on-write block pool); "
+                "the dense layout has no shared-block substrate")
+        if parent.status != "decode" or parent._slot is None:
+            raise ForkError(
+                f"fork needs a live decode-state stream, parent is "
+                f"{parent.status!r}")
+        if n < 1:
+            raise ForkError(f"fork count must be >= 1, got {n}")
+        p = (params if params is not None else parent.params).validated()
+        child_span = min(self.kv.max_len, len(parent.prompt)
+                         + p.max_new_tokens)
+        if child_span > parent._span:
+            raise ForkError(
+                f"fork budget needs {child_span} cache rows but the "
+                f"parent reserved {parent._span} at admission — lower "
+                f"max_new_tokens or admit the parent with a larger "
+                f"budget")
+        if self.kv.n_free < n:
+            raise ForkError(
+                f"fork needs {n} free slots, {self.kv.n_free} available "
+                f"— cancel a stream or raise batch_slots")
+        ps = parent._slot
+        out = []
+        self._ensure_window()
+        w = self._win
+        for _ in range(n):
+            s = self.kv.fork(ps)
+            if s is None:       # unreachable behind the n_free check
+                raise ForkError("no free slot for fork")
+            child = StreamHandle(
+                self, self._auto_rid, parent.prompt,
+                p, parent.priority if priority is None else priority)
+            self._auto_rid += 1
+            child.out_tokens = list(parent.out_tokens)
+            child.status = "decode"
+            child.truncated = parent.truncated
+            child._slot = s
+            child._span = parent._span
+            child._t_admit = time.perf_counter()
+            child.t_first, child.t_last = parent.t_first, parent.t_last
+            self.active[s] = child
+            self.fill[s] = self.fill[ps]
+            self.next_tok[s] = self.next_tok[ps]
+            self.temps[s] = p.temperature
+            if p.temperature > 0:
+                self._ensure_keys()
+                self.keys[s] = self._key_for(child)
+            w["forks"] += 1
+            w["streams"].append(child)
+            out.append(child)
+        return out
+
+    def step(self) -> bool:
+        """ONE engine iteration: sweep, admit (+preempt), at most one
+        prefill chunk, one batched decode dispatch.  Returns True while
+        work remains (queued or live streams); on the transition to
+        idle, finalizes ``last_stats`` and returns False."""
+        if self._win is None:
+            return False
+        w = self._win
+        # 1. sweep: release finished streams
+        for s in range(self.kv.slots):
+            h = self.active[s]
+            if h is not None and h.status == "decode" and self._finished(s):
+                self._release_slot(h)
+                self._finish(h, "done")
+        # 2. admission: priority-then-FIFO, block-granular on the paged
+        #    layout, preempting strictly-lower-priority victims when the
+        #    head cannot be placed
+        self._admit(w)
+        if not self.prefill_fifo and all(a is None for a in self.active):
+            if self._queue_alive():
+                # head blocked with the whole pool free and nothing to
+                # preempt: fits_empty_pool should have rejected it
+                raise RuntimeError(
+                    "admission stalled with no live work — "
+                    "fits_empty_pool should have rejected the head")
+            self._finalize_window()
+            return False
+        # 3. at most ONE prefill chunk per iteration (chunk budget)
+        did_prefill = self._prefill_one(w)
+        # 4. ONE batched decode dispatch over ALL slots (idle and
+        #    mid-prefill rows ride along masked; see kv_manager doc)
+        self._decode_all(w, did_prefill)
+        return True
+
+    def drain(self):
+        """Pump ``step()`` until the engine is idle."""
+        while self.step():
+            pass
+
+    def has_live_work(self) -> bool:
+        return (any(a is not None for a in self.active)
+                or bool(self.prefill_fifo) or self._queue_alive())
+
+    def reset(self):
+        """Fresh caches/pool and empty queue — only valid when idle
+        (one ``generate()`` batch = one reset, preserving the PR 1-4
+        determinism contract)."""
+        if self.has_live_work():
+            raise RuntimeError("reset() with live or queued streams — "
+                               "cancel them first")
+        self.kv.reset()
+        self._heap = []
+        self.active = [None] * self.kv.slots
+        self.fill[:] = 0
+        self.next_tok[:] = 0
+        self.temps[:] = 0.0
+        self.prefill_fifo = []
+        self.keys = None
+        self._win = None
+
+    # ---------------- legacy batch API (compat shim) ----------------
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Serve a list of legacy ``Request`` records to completion:
+        thin shim over submit + drain.  Resets the cache/pool first (so
+        repeated batches stay deterministic), mirrors final stream state
+        back onto each Request, and returns {rid: out_tokens} (rejected
+        requests map to [])."""
+        self.reset()
+        handles = {}
+        for r in requests:
+            params = SamplingParams(temperature=r.temperature,
+                                    max_new_tokens=r.max_new_tokens)
+            handles[r.rid] = self.submit(r.prompt, params,
+                                         on_token=r.on_token, rid=r.rid,
+                                         compat=r)
+        self._ensure_window()       # empty batches still produce stats
+        self.drain()
+        return {rid: h.out_tokens for rid, h in handles.items()}
 
     # ---------------- admission ----------------
 
-    def _validate(self, req: Request) -> bool:
-        """Admission check; truncates in place or rejects (returns False).
-        The cache holds max_len rows and the first decode write lands at
-        position len(prompt), so admissible prompts have
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _ensure_window(self):
+        if self._win is None:
+            self._win = dict(
+                t0=time.perf_counter(),
+                disp0=self.runner.decode_dispatches,
+                pdisp0=self.runner.prefill_dispatches,
+                steps0=self.decode_steps,
+                prefill_s=0.0, decode_s=0.0,
+                n_tokens=0, n_first=0, interleaved=0,
+                submitted=0, rejected=0, cancelled=0, preempted=0,
+                forks=0, block_waits=0, shared_tokens=0,
+                streams=[])
+
+    def _queue_alive(self) -> bool:
+        return any(not h.finished for _, _, h in self._heap)
+
+    def _peek(self) -> StreamHandle | None:
+        """Head of the priority queue, lazily dropping cancelled
+        entries."""
+        while self._heap:
+            h = self._heap[0][2]
+            if h.finished:          # cancelled while queued
+                heapq.heappop(self._heap)
+                continue
+            return h
+        return None
+
+    def _validate(self, h: StreamHandle) -> bool:
+        """Admission check; truncates in place or rejects (returns
+        False).  The cache holds max_len rows and the first decode write
+        lands at position len(prompt), so admissible prompts have
         1 <= len(prompt) <= max_len - 1."""
-        req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        h.prompt = np.asarray(h.prompt, np.int32).reshape(-1)
         limit = self.kv.max_len - 1
-        if len(req.prompt) == 0:
-            req.status, req.error = "rejected", "empty prompt"
+        if len(h.prompt) == 0:
+            h.error = "empty prompt"
             return False
-        if len(req.prompt) <= limit:
+        if len(h.prompt) <= limit:
             return True
         if self.overflow_policy == "reject":
-            req.status = "rejected"
-            req.error = (f"prompt length {len(req.prompt)} >= max_len "
-                         f"{self.kv.max_len}")
+            h.error = (f"prompt length {len(h.prompt)} >= max_len "
+                       f"{self.kv.max_len}")
             return False
-        req.prompt = req.prompt[:limit]
-        req.truncated = True
+        h.prompt = h.prompt[:limit]
+        h.truncated = True
         return True
 
-    # ---------------- serve loop ----------------
+    def _source(self, h: StreamHandle) -> np.ndarray:
+        """Prefill/snapshot source: the full sequence
+        ``prompt + emitted``.  For a fresh stream mid-prefill this is
+        just the prompt (first emission happens at prompt completion);
+        for a preempted-then-restored stream it is the sequence whose
+        re-prefill restores the KV state bit-identically."""
+        if h.out_tokens:
+            return np.concatenate(
+                [h.prompt, np.asarray(h.out_tokens, np.int32)])
+        return h.prompt
 
-    def run(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Serve a list of requests to completion with continuous slot
-        reuse.  Returns {rid: out_tokens} (rejected requests map to [])."""
-        runner, kv = self.runner, self.kv
-        kv.reset()
-        queue = list(requests)
-        done: dict[int, list[int]] = {}
-        slots = kv.slots
-        active: list[Request | None] = [None] * slots
-        fill = np.zeros(slots, np.int32)        # prompt tokens written
-        next_tok = np.zeros(slots, np.int32)
-        temps = np.zeros(slots, np.float32)
-        prefill_fifo: list[int] = []            # slots awaiting chunks
-
-        # greedy runs never touch the PRNG: keys exist only when some
-        # request actually samples (satellite: no key split per admitted
-        # request under pure argmax decode)
-        keys = None
-        if any(r.temperature > 0 for r in queue):
-            self.rng, sub = jax.random.split(self.rng)
-            keys = jax.random.split(sub, slots)
-
-        t0 = time.perf_counter()
-        disp0 = runner.decode_dispatches
-        pdisp0 = runner.prefill_dispatches
-        steps0 = self.decode_steps
-        prefill_s = decode_s = 0.0
-        n_tokens = n_first = interleaved = rejected = 0
-        block_waits = shared_tokens = 0
-
-        def emit(req: Request, tok: int):
-            nonlocal n_tokens
-            req.out_tokens.append(int(tok))
-            now = time.perf_counter()
-            if req.t_first is None:
-                req.t_first = now
-                req._ttft_s = now - t0
-            req.t_last = now
-            n_tokens += 1
-            if req.on_token is not None:
-                req.on_token(int(tok))
-
-        def finished(s: int) -> bool:
-            req = active[s]
-            return (len(req.out_tokens) >= req.max_new_tokens
-                    or (self.eos is not None and req.out_tokens
-                        and req.out_tokens[-1] == self.eos)
-                    or int(kv.pos[s]) + 1 >= kv.max_len)
-
+    def _admit(self, w):
         while True:
-            # 1. sweep: release finished streams
-            for s in range(slots):
-                req = active[s]
-                if req is not None and req.status == "decode" and finished(s):
-                    req.status = "done"
-                    done[req.rid] = req.out_tokens
-                    active[s] = None
-                    temps[s] = 0.0
-                    kv.free(s)
-            # 2. admit FIFO into free slots.  Paged: admission is
-            #    block-granular and all-or-nothing — the head of the
-            #    queue WAITS (no pop) when its worst-case block need
-            #    exceeds the free pool right now, and is rejected
-            #    outright when it could never fit even into an empty
-            #    pool.  A prompt can therefore never OOM mid-prefill or
-            #    mid-decode.
-            while queue and kv.n_free:
-                req = queue[0]
-                if not self._validate(req):
-                    queue.pop(0)
-                    done[req.rid] = req.out_tokens      # []
-                    rejected += 1
+            h = self._peek()
+            if h is None:
+                return
+            if h.status == "queued" and not self._validate(h):
+                heapq.heappop(self._heap)
+                w["rejected"] += 1
+                self._finish(h, "rejected")
+                continue
+            src = self._source(h)
+            remaining = h.params.max_new_tokens - len(h.out_tokens)
+            if self.paged and not self.kv.fits_empty_pool(len(src),
+                                                          remaining):
+                heapq.heappop(self._heap)
+                need = self.kv.required_blocks(len(src), remaining)
+                h.error = (f"worst-case block need {need} exceeds pool "
+                           f"size {self.kv.num_blocks} "
+                           f"(block_size {self.kv.block_size})")
+                w["rejected"] += 1
+                self._finish(h, "rejected")
+                continue
+            if self.kv.n_free:
+                if self._try_place(h, src, remaining, w):
+                    heapq.heappop(self._heap)
                     continue
-                if self.paged:
-                    need = kv.required_blocks(len(req.prompt),
-                                              req.max_new_tokens)
-                    if not kv.fits_empty_pool(len(req.prompt),
-                                              req.max_new_tokens):
-                        queue.pop(0)
-                        req.status = "rejected"
-                        req.error = (
-                            f"worst-case block need {need} exceeds pool "
-                            f"size {kv.num_blocks} "
-                            f"(block_size {kv.block_size})")
-                        done[req.rid] = req.out_tokens  # []
-                        rejected += 1
-                        continue
-                    s = kv.admit(req.prompt, req.max_new_tokens)
-                    if s is None:
-                        block_waits += 1    # head-of-line waits for blocks
-                        break
-                    queue.pop(0)
-                    fill[s] = kv.shared_len(s)   # prefix-shared tokens
-                    shared_tokens += int(fill[s])
-                else:
-                    queue.pop(0)
-                    s = kv.alloc()
-                    fill[s] = 0
-                active[s] = req
-                req.status = "prefill"
-                temps[s] = req.temperature
-                prefill_fifo.append(s)
-            if not prefill_fifo and all(a is None for a in active):
-                if queue:   # paged head blocked with the whole pool free
-                    raise RuntimeError(
-                        "admission stalled with no live work — "
-                        "fits_empty_pool should have rejected the head")
-                break   # queue drained (rejects only) and no live work
-            # 3. at most ONE prefill chunk per iteration (chunk budget)
-            did_prefill = False
-            if prefill_fifo:
-                s = prefill_fifo[0]
-                req = active[s]
-                tp = time.perf_counter()
-                if self.chunked:
-                    if self.paged:
-                        logits, kv.caches, n_new = runner.prefill_chunk(
-                            kv.caches, req.prompt, s, int(fill[s]),
-                            block_table=kv.block_tables[s])
-                    else:       # dense call shape unchanged (PR 2)
-                        logits, kv.caches, n_new = runner.prefill_chunk(
-                            kv.caches, req.prompt, s, int(fill[s]))
-                    fill[s] += n_new
-                else:
-                    logits, fresh = runner.prefill_full(req.prompt)
-                    kv.caches = runner.write_slot(kv.caches, fresh, s)
-                    fill[s] = len(req.prompt)
-                kv.pos[s] = fill[s]
-                did_prefill = True
-                if fill[s] >= len(req.prompt):          # prompt complete
-                    prefill_fifo.pop(0)
-                    if self.paged:
-                        kv.mark_prompt_written(s, len(req.prompt))
-                    if req.temperature > 0:
-                        k_next, k_use = jax.random.split(keys[s])
-                        tok = int(sample_token(k_use, logits,
-                                               req.temperature)[0])
-                        keys = keys.at[s].set(k_next)
-                    else:
-                        tok = int(np.asarray(runner.greedy(logits))[0])
-                    req.status = "decode"
-                    next_tok[s] = tok
-                    emit(req, tok)
-                    n_first += 1
-                else:
-                    jax.block_until_ready(logits)   # honest chunk timing
-                prefill_s += time.perf_counter() - tp
-            # 4. ONE batched decode dispatch over ALL slots (idle and
-            #    mid-prefill rows ride along masked; see kv_manager doc)
-            live = [s for s in range(slots)
-                    if active[s] is not None and active[s].status == "decode"
-                    and not finished(s)]
-            if live:
-                td = time.perf_counter()
-                logits, kv.caches = runner.decode(
-                    next_tok, kv.caches, kv.pos,
-                    block_tables=kv.block_tables if self.paged else None)
-                self.decode_steps += 1
-                if keys is not None and np.any(temps > 0):
-                    toks, keys = runner.sample(keys, logits, temps)
-                else:
-                    toks = runner.greedy(logits)
-                toks = np.asarray(toks)
-                for s in live:
-                    next_tok[s] = toks[s]
-                    kv.pos[s] += 1
-                    emit(active[s], toks[s])
-                decode_s += time.perf_counter() - td
-                if did_prefill:
-                    interleaved += 1
+                # paged: slots free but the worst-case block need is not
+                if self._preempt_for(h, w):
+                    continue            # retry the same head
+                w["block_waits"] += 1   # head-of-line waits for blocks
+                return
+            if self._preempt_for(h, w):
+                continue
+            return                      # all slots busy; head waits
 
-        dt = time.perf_counter() - t0
-        steps = self.decode_steps - steps0
-        dispatches = runner.decode_dispatches - disp0
-        ttfts = [r._ttft_s for r in requests if r.t_first is not None]
-        itls = [r.itl_s for r in requests if r.itl_s is not None]
+    def _try_place(self, h, src, remaining, w) -> bool:
+        if self.paged:
+            s = self.kv.admit(src, remaining)
+            if s is None:
+                return False
+            self.fill[s] = self.kv.shared_len(s)  # prefix-shared tokens
+            w["shared_tokens"] += int(self.fill[s])
+        else:
+            s = self.kv.alloc()
+            self.fill[s] = 0
+        h._slot = s
+        h.status = "prefill"
+        if h._t_admit is None:
+            h._t_admit = time.perf_counter()
+        h._span = min(self.kv.max_len, len(src) + remaining)
+        self.active[s] = h
+        self.temps[s] = h.params.temperature
+        if h.params.temperature > 0:
+            self._ensure_keys()
+            self.keys[s] = self._key_for(h)
+        self.prefill_fifo.append(s)
+        return True
+
+    def _ensure_keys(self):
+        if self.keys is None:
+            self.keys = np.zeros((self.kv.slots, 2), np.uint32)
+
+    def _key_for(self, h: StreamHandle) -> np.ndarray:
+        """Per-stream sampler key: restored across preemption, seeded
+        per request when asked, engine-chain otherwise.  Greedy streams
+        never reach here (the engine rng stays untouched)."""
+        if h._key is not None:
+            return h._key
+        if h.params.seed is not None:
+            return np.asarray(jax.random.PRNGKey(h.params.seed))
+        self.rng, sub = jax.random.split(self.rng)
+        return np.asarray(sub)
+
+    # ---------------- preemption ----------------
+
+    def _preempt_for(self, head: StreamHandle, w) -> bool:
+        """Make room for ``head`` by preempting ONE running stream with
+        strictly lower priority (higher value), lowest progress first
+        (ties: youngest arrival).  Returns True when a victim was
+        preempted — the admission loop then retries the head, preempting
+        again if the freed capacity is still short.  Equal-priority
+        traffic is never displaced."""
+        victims = [v for v in self.active
+                   if v is not None and v.priority > head.priority]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda v: (len(v.out_tokens), -v._seq))
+        self._preempt(victim, w)
+        return True
+
+    def _preempt(self, victim: StreamHandle, w):
+        """Snapshot ``victim`` to the host (full token sequence +
+        sampler key; written complete blocks registered for prefix
+        sharing), release its slot and blocks, and re-queue it at its
+        original arrival order."""
+        s = victim._slot
+        if self.keys is not None and victim.params.temperature > 0:
+            victim._key = self.keys[s].copy()
+        self._release_slot(victim, register_blocks=True)
+        victim.status = "preempted"
+        victim.preemptions += 1
+        w["preempted"] += 1
+        heapq.heappush(self._heap, (victim.priority, victim._seq, victim))
+
+    def _release_slot(self, h: StreamHandle, *, register_blocks=False):
+        """Free a live stream's slot + blocks.  ``register_blocks``
+        (preemption) publishes its written complete blocks for
+        prefix-sharing-aware re-prefill first.
+
+        A MID-PREFILL release (cancel/preempt before the prompt
+        finished) may orphan registered-but-never-written blocks that
+        consumers attached; each such consumer takes over writing
+        exactly the orphaned blocks (``rescind_unwritten_shared`` — the
+        block stays attached, the bytes are deterministic).  Releases
+        of decode-state streams skip the pass entirely: their blocks
+        are all genuinely written, and consumers attached to OTHER
+        still-live producers must not be demoted by unrelated churn."""
+        s = h._slot
+        if s in self.prefill_fifo:
+            self.prefill_fifo.remove(s)
+        orphaned = None
+        if self.paged and h.status == "prefill":
+            # blocks this slot owned AS WRITER (beyond its attached
+            # shared region) and never finished writing
+            own_from = self.kv.shared_len(s) // self.kv.block_size
+            orphaned = {int(b) for b in self.kv.block_tables[s][own_from:]
+                        if int(b) != 0
+                        and not self.kv.pool.is_written(int(b))}
+        if self.paged and register_blocks:
+            self.kv.preempt_release(s, self._source(h), int(self.kv.pos[s]))
+        else:
+            self.kv.free(s)
+        if orphaned:
+            for s2 in range(self.kv.slots):
+                h2 = self.active[s2]
+                if h2 is None or h2.status != "prefill" or s2 == s:
+                    continue
+                new_shared = self.kv.rescind_unwritten_shared(s2, orphaned)
+                if self.fill[s2] > new_shared:
+                    self.fill[s2] = new_shared
+        self.active[s] = None
+        self.temps[s] = 0.0
+        h._slot = None
+
+    # ---------------- serve loop pieces ----------------
+
+    def _finished(self, s: int) -> bool:
+        h = self.active[s]
+        p = h.params
+        if len(h.out_tokens) >= p.max_new_tokens:
+            return True
+        if h.out_tokens:
+            last = h.out_tokens[-1]
+            eos = self.eos if p.eos_id is None else p.eos_id
+            if not p.ignore_eos and eos is not None and last == eos:
+                return True
+            if last in p.stop_tokens:
+                return True
+        return int(self.kv.pos[s]) + 1 >= self.kv.max_len
+
+    def _emit(self, h: StreamHandle, tok: int):
+        w = self._win
+        h.out_tokens.append(int(tok))
+        now = time.perf_counter()
+        if h.t_first is None:
+            h.t_first = now
+            h._ttft_s = now - h._t_submit
+        h.t_last = now
+        w["n_tokens"] += 1
+        if h.on_token is not None:
+            h.on_token(int(tok))
+
+    def _prefill_one(self, w) -> bool:
+        if not self.prefill_fifo:
+            return False
+        runner, kv = self.runner, self.kv
+        s = self.prefill_fifo[0]
+        h = self.active[s]
+        src = self._source(h)
+        tp = time.perf_counter()
+        if self.chunked:
+            if self.paged:
+                logits, kv.caches, n_new = runner.prefill_chunk(
+                    kv.caches, src, s, int(self.fill[s]),
+                    block_table=kv.block_tables[s])
+            else:       # dense call shape unchanged (PR 2)
+                logits, kv.caches, n_new = runner.prefill_chunk(
+                    kv.caches, src, s, int(self.fill[s]))
+            self.fill[s] += n_new
+        else:
+            logits, fresh = runner.prefill_full(src)
+            kv.caches = runner.write_slot(kv.caches, fresh, s)
+            self.fill[s] = len(src)
+        kv.pos[s] = self.fill[s]
+        if self.fill[s] >= len(src):                # source complete
+            self.prefill_fifo.pop(0)
+            if self.paged:
+                kv.mark_prompt_written(s, len(src))
+            if h.params.temperature > 0:
+                key = jax.numpy.asarray(self.keys[s])
+                k_next, k_use = jax.random.split(key)
+                tok = int(sample_token(k_use, logits,
+                                       h.params.temperature)[0])
+                self.keys[s] = np.asarray(k_next)
+            else:
+                tok = int(np.asarray(runner.greedy(logits))[0])
+            h.status = "decode"
+            self.next_tok[s] = tok
+            self._emit(h, tok)
+            w["n_first"] += 1
+        else:
+            jax.block_until_ready(logits)   # honest chunk timing
+        w["prefill_s"] += time.perf_counter() - tp
+        return True
+
+    def _cow_pass(self, live: list[int]):
+        """Before a decode dispatch, give every live slot exclusive
+        ownership of the block its next write lands in (fork siblings
+        share blocks ref-counted until first divergent write).  Queued
+        pool copies are applied in one jitted block-copy fn.
+
+        A copy that finds the pool empty frees blocks by preemption,
+        under the same invariant as admission — only STRICTLY
+        lower-priority streams are displaced (lowest progress first).
+        When none exists, the WRITER itself yields: it is snapshotted
+        and re-queued, and its eventual re-admission reserves worst-case
+        blocks up front, so it never needs COW headroom it cannot get —
+        no crash, no priority inversion, no livelock."""
+        kv = self.kv
+        for s in list(live):
+            h = self.active[s]
+            if h is None or h.status != "decode":
+                continue    # preempted/cancelled earlier in this pass
+            b = int(kv.pos[s]) // kv.block_size
+            bid = int(kv.block_tables[s, b])
+            if kv.pool.refcount(bid) <= 1:
+                continue
+            while kv.pool.n_free == 0:
+                victims = [v for v in self.active
+                           if v is not None and v._slot != s
+                           and v.status in ("prefill", "decode")
+                           and v.priority > h.priority]
+                if not victims:
+                    self._preempt(h, self._win)     # writer yields
+                    break
+                victim = min(victims,
+                             key=lambda v: (len(v.out_tokens), -v._seq))
+                self._preempt(victim, self._win)
+            if self.active[s] is h:
+                kv.writable_block(s, b)
+        copies = kv.take_pending_copies()
+        if copies:
+            kv.caches = self.runner.copy_blocks(kv.caches, copies)
+
+    def _decode_all(self, w, did_prefill: bool):
+        def live_slots():
+            return [s for s in range(self.kv.slots)
+                    if self.active[s] is not None
+                    and self.active[s].status == "decode"
+                    and not self._finished(s)]
+
+        live = live_slots()
+        if not live:
+            return
+        kv, runner = self.kv, self.runner
+        if self.paged:
+            self._cow_pass(live)
+            live = live_slots()     # COW preemption may have culled one
+            if not live:
+                return
+        td = time.perf_counter()
+        logits, kv.caches = runner.decode(
+            self.next_tok, kv.caches, kv.pos,
+            block_tables=kv.block_tables if self.paged else None)
+        self.decode_steps += 1
+        if self.keys is not None and np.any(self.temps[live] > 0):
+            toks, keys = runner.sample(self.keys, logits, self.temps)
+            # a stream's key chain advances ONLY on its own emissions —
+            # the batched sampler splits every slot's key, but splits of
+            # idle/greedy/mid-prefill rows are discarded so per-request
+            # seeds stay reproducible under any concurrent traffic
+            keys = np.asarray(keys)
+            for s in live:
+                if self.temps[s] > 0:
+                    self.keys[s] = keys[s]
+        else:
+            toks = runner.greedy(logits)
+        toks = np.asarray(toks)
+        for s in live:
+            h = self.active[s]
+            if h is None or h.status != "decode":
+                continue    # cancelled by an earlier on_token callback
+            self.next_tok[s] = toks[s]
+            kv.pos[s] += 1
+            self._emit(h, toks[s])
+        w["decode_s"] += time.perf_counter() - td
+        if did_prefill:
+            w["interleaved"] += 1
+
+    # ---------------- completion + stats ----------------
+
+    def _finish(self, h: StreamHandle, status: str):
+        h.status = status
+        r = h._compat
+        if r is not None:       # mirror onto the legacy Request record
+            r.status, r.error, r.truncated = status, h.error, h.truncated
+            r.prompt, r.out_tokens = h.prompt, h.out_tokens
+            r.t_first, r.t_last = h.t_first, h.t_last
+            if h._ttft_s is not None:
+                r._ttft_s = h._ttft_s
+
+    def _finalize_window(self):
+        w, self._win = self._win, None
+        if w is None:
+            return
+        dt = time.perf_counter() - w["t0"]
+        steps = self.decode_steps - w["steps0"]
+        dispatches = self.runner.decode_dispatches - w["disp0"]
+        streams = w["streams"]
+        ttfts = [h._ttft_s for h in streams if h._ttft_s is not None]
+        itls = [h.itl_s for h in streams if h.itl_s is not None]
+        queue_ts = [h.queue_s for h in streams if h.queue_s is not None]
         self.last_stats = {
-            "requests": len(requests),
-            "rejected": rejected,
-            "slots": slots,
-            "tokens": n_tokens,
+            "requests": w["submitted"],
+            "rejected": w["rejected"],
+            "slots": self.kv.slots,
+            "tokens": w["n_tokens"],
             "seconds": dt,
-            "tokens_per_sec": n_tokens / dt if dt > 0 else float("inf"),
+            "tokens_per_sec": (w["n_tokens"] / dt if dt > 0
+                               else float("inf")),
             # prefill/decode time split (no longer conflated)
-            "prefill_seconds": prefill_s,
-            "decode_seconds": decode_s,
-            "decode_tokens_per_sec": ((n_tokens - n_first) / decode_s
-                                      if decode_s > 0 else float("inf")),
+            "prefill_seconds": w["prefill_s"],
+            "decode_seconds": w["decode_s"],
+            "decode_tokens_per_sec": (
+                (w["n_tokens"] - w["n_first"]) / w["decode_s"]
+                if w["decode_s"] > 0 else float("inf")),
             "ttft_ms": float(np.mean(ttfts) * 1e3) if ttfts else None,
             "itl_ms": float(np.mean(itls) * 1e3) if itls else None,
+            # session-API pressure/lifecycle counters
+            "queue_ms": (float(np.mean(queue_ts) * 1e3)
+                         if queue_ts else None),
+            "preemptions": w["preempted"],
+            "cancelled": w["cancelled"],
+            "forks": w["forks"],
             "decode_steps": steps,
             "dispatches_per_step": dispatches / steps if steps else 0.0,
-            "prefill_dispatches": runner.prefill_dispatches - pdisp0,
+            "prefill_dispatches": (self.runner.prefill_dispatches
+                                   - w["pdisp0"]),
             # CUMULATIVE size of the runner's prefill compile cache
             # (unlike the per-run dispatch delta above): the bounded-by-
             # buckets invariant is about the cache's lifetime growth
-            "prefill_compiles": runner.prefill_compiles,
-            "chunk_buckets": list(runner.chunk_buckets),
+            "prefill_compiles": self.runner.prefill_compiles,
+            "chunk_buckets": list(self.runner.chunk_buckets),
             "chunked_prefill": self.chunked,
             # iterations where a decode dispatch ran in the same step as
             # a prefill chunk: live streams kept flowing during admission
-            "interleaved_steps": interleaved,
+            "interleaved_steps": w["interleaved"],
             # KV memory: layout, pool bytes, and (paged) block occupancy
-            # + prefix-sharing wins at end of run
-            "kv": kv.stats(),
+            # + prefix-sharing wins at end of window
+            "kv": self.kv.stats(),
             # paged admission pressure: iterations the queue head waited
             # for blocks / prompt tokens skipped via shared prefixes
-            "block_waits": block_waits,
-            "shared_prefix_tokens": shared_tokens,
+            "block_waits": w["block_waits"],
+            "shared_prefix_tokens": w["shared_tokens"],
         }
-        return done

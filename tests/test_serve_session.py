@@ -1,0 +1,560 @@
+"""Session-based request API: live stream handles with submit / fork /
+cancel / priorities / preemption.
+
+Covers the PR-5 acceptance criteria end to end through the PUBLIC API:
+
+- ``fork(n)`` shares every pre-fork KV block copy-free (pool occupancy
+  unchanged at the fork point — stored once), forked streams diverge
+  after the fork point under per-fork sampling params, cancelling one
+  fork leaves its siblings bit-exact, and refcounts drain to zero;
+- preemption: a strictly-higher-priority arrival displaces the
+  lowest-progress lower-priority victim (slot pressure on dense, block
+  pressure on paged); the restored greedy stream is BIT-IDENTICAL to an
+  unpreempted run across backend x kv_layout; equal-priority traffic is
+  never displaced;
+- per-request ``SamplingParams`` validated at submit with typed
+  ``InvalidParamsError``; eos override / ignore_eos / stop tokens /
+  per-request budgets;
+- handle lifecycle: tokens() pull iteration == on_token push order,
+  mid-flight submission, cancellation storms leave no slot/block leaks,
+  and the generate() compat shim still mirrors legacy Requests;
+- the 1-decode + 1-prefill-per-bucket compile contract survives any
+  submit/fork/cancel/preempt traffic mix.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.quantize_model import quantize_model_sequential
+from repro.models.model import build_model
+from repro.serve.engine import (ForkError, InvalidParamsError, Request,
+                                SamplingParams, ServeEngine)
+
+VOCAB = 128
+MAX_LEN = 64
+BLOCK = 8           # paged block size; also the model's kv_chunk
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = tiny_variant(get_arch("llama1-7b")).replace(
+        d_model=64, d_ff=128, n_layers=2, vocab_size=VOCAB,
+        dtype="float32")
+    model = build_model(cfg, kv_chunk=BLOCK)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def quantized_lm(tiny_lm):
+    model, params = tiny_lm
+    calib = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, VOCAB)
+    qparams = quantize_model_sequential(
+        model, params, calib,
+        QuantConfig(group_size=32, n_outlier_groups=1, em_iters=2,
+                    calib_tokens=256))
+    return model, qparams
+
+
+def _prompt(n, stride=7):
+    return (np.arange(n) * stride % VOCAB).astype(np.int32)
+
+
+def _engine(model, params, *, slots=2, layout="paged", num_blocks=None,
+            backend="reference", **kw):
+    return ServeEngine(model, params, batch_slots=slots, max_len=MAX_LEN,
+                       chunk_buckets=(8,), backend=backend,
+                       kv_layout=layout, block_size=BLOCK,
+                       num_blocks=num_blocks, **kw)
+
+
+def _pump_until(engine, cond, limit=500):
+    for _ in range(limit):
+        if cond():
+            return
+        engine.step()
+    raise AssertionError("condition never reached")
+
+
+class TestHandleBasics:
+    def test_result_and_tokens_iterator(self, tiny_lm):
+        model, params = tiny_lm
+        eng = _engine(model, params)
+        pushed = []
+        h1 = eng.submit(_prompt(10), SamplingParams(max_new_tokens=6),
+                        on_token=pushed.append)
+        h2 = eng.submit(_prompt(7), SamplingParams(max_new_tokens=4))
+        pulled = list(h1.tokens())      # pull iteration drives the engine
+        assert pulled == h1.out_tokens == pushed
+        assert len(pulled) == 6 and h1.status == "done"
+        assert len(h2.result()) == 4
+        assert not eng.has_live_work()
+        assert h1.ttft_s > 0 and h1.queue_s is not None
+
+    def test_mid_flight_submission(self, tiny_lm):
+        """A stream submitted while others decode joins the running
+        batch without a fresh generate() call — and everyone's stream
+        matches the batch-mode shim."""
+        model, params = tiny_lm
+        ref = _engine(model, params).generate(
+            [Request(rid=i, prompt=_prompt(6 + 4 * i), max_new_tokens=5)
+             for i in range(2)])
+        eng = _engine(model, params)
+        h0 = eng.submit(_prompt(6), SamplingParams(max_new_tokens=5))
+        _pump_until(eng, lambda: len(h0.out_tokens) >= 2)
+        h1 = eng.submit(_prompt(10), SamplingParams(max_new_tokens=5))
+        eng.drain()
+        assert h0.out_tokens == ref[0]
+        assert h1.out_tokens == ref[1]
+
+    def test_generate_compat_shim_mirrors_requests(self, tiny_lm):
+        """The legacy batch API is a thin shim over submit + drain:
+        identical streams, and Request records carry final state."""
+        model, params = tiny_lm
+        reqs = [Request(rid=i, prompt=_prompt(5 + 3 * i), max_new_tokens=4)
+                for i in range(3)]
+        eng = _engine(model, params)
+        done = eng.generate(reqs)
+        for r in reqs:
+            assert r.status == "done"
+            assert done[r.rid] == r.out_tokens and len(r.out_tokens) == 4
+            assert r.ttft_s > 0
+
+    def test_cancel_queued_and_live(self, tiny_lm):
+        """cancel() of a queued stream dequeues it; of a live stream
+        frees its slot + blocks immediately; siblings complete."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=2)
+        hs = [eng.submit(_prompt(8 + i), SamplingParams(max_new_tokens=8))
+              for i in range(4)]
+        _pump_until(eng, lambda: len(hs[0].out_tokens) >= 2)
+        hs[0].cancel()                  # live decode
+        hs[3].cancel()                  # still queued
+        assert hs[0].status == "cancelled" and hs[3].status == "cancelled"
+        eng.drain()
+        assert hs[1].status == "done" and hs[2].status == "done"
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.last_stats["cancelled"] == 2
+
+    def test_cancellation_storm_no_leaks(self, tiny_lm):
+        """Cancel every stream at every lifecycle stage; pool and slots
+        drain to empty."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=3, num_blocks=18)
+        hs = [eng.submit(_prompt(5 + 5 * i),
+                         SamplingParams(max_new_tokens=10))
+              for i in range(8)]
+        for i, h in enumerate(hs):
+            if i % 2:
+                eng.step()
+            h.cancel()
+        eng.drain()
+        assert all(h.status == "cancelled" for h in hs)
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+        assert eng.scheduler.kv.n_free == 3     # all slots free
+
+    def test_on_token_callback_may_cancel_other_streams(self, tiny_lm):
+        """Regression: an on_token callback cancelling ANOTHER live
+        stream mid-dispatch must not crash the decode loop (the
+        advertised speculative-verify pattern)."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=3)
+        victims = []
+
+        def killer(_tok):
+            for v in victims:
+                v.cancel()
+
+        h0 = eng.submit(_prompt(6), SamplingParams(max_new_tokens=8),
+                        on_token=killer)
+        victims.append(eng.submit(_prompt(7),
+                                  SamplingParams(max_new_tokens=8)))
+        victims.append(eng.submit(_prompt(8),
+                                  SamplingParams(max_new_tokens=8)))
+        eng.drain()
+        assert h0.status == "done" and len(h0.out_tokens) == 8
+        assert all(v.status == "cancelled" for v in victims)
+        assert eng.kv_stats["blocks_in_use"] == 0
+
+    def test_seeded_sampling_reproducible_under_traffic(self, tiny_lm):
+        """Regression: a stream's PRNG chain advances only on its OWN
+        emissions, so SamplingParams(seed=...) yields the same tokens
+        whether the stream runs alone or next to other sampled/greedy
+        traffic."""
+        model, params = tiny_lm
+        sp = SamplingParams(max_new_tokens=8, temperature=1.0, seed=42)
+        alone = _engine(model, params).submit(_prompt(9), sp).result()
+        eng = _engine(model, params, slots=3)
+        noise = [eng.submit(_prompt(14), SamplingParams(
+            max_new_tokens=12, temperature=0.9, seed=7)),
+            eng.submit(_prompt(5), SamplingParams(max_new_tokens=12))]
+        _pump_until(eng, lambda: len(noise[0].out_tokens) >= 2)
+        h = eng.submit(_prompt(9), sp)
+        eng.drain()
+        assert h.out_tokens == alone
+
+    def test_stats_surface_pressure_and_queue_time(self, tiny_lm):
+        """Satellite: block_waits, preemption count, and queue-time are
+        observable in last_stats."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=2, num_blocks=4)
+        for i in range(4):
+            eng.submit(_prompt(10 + i), SamplingParams(max_new_tokens=8))
+        eng.drain()
+        st = eng.last_stats
+        for key in ("block_waits", "preemptions", "queue_ms", "cancelled",
+                    "forks", "shared_prefix_tokens"):
+            assert key in st, key
+        assert st["block_waits"] > 0        # scarce pool made heads wait
+        assert st["queue_ms"] is not None and st["queue_ms"] >= 0
+
+
+class TestSamplingParams:
+    @pytest.mark.parametrize("bad", [
+        dict(temperature=-0.5), dict(temperature=float("nan")),
+        dict(max_new_tokens=0), dict(max_new_tokens=2.5),
+        dict(eos_id=-2), dict(seed=-1),
+        dict(stop_tokens=(-3,)), dict(stop_tokens=3),
+        dict(ignore_eos="yes")])
+    def test_invalid_params_typed_error(self, tiny_lm, bad):
+        model, params = tiny_lm
+        eng = _engine(model, params)
+        with pytest.raises(InvalidParamsError):
+            eng.submit(_prompt(5), SamplingParams(**bad))
+        with pytest.raises(InvalidParamsError):
+            eng.submit(_prompt(5), SamplingParams(), priority="high")
+        assert not eng.has_live_work()      # nothing was enqueued
+
+    def test_stop_tokens_and_eos_override(self, tiny_lm):
+        model, params = tiny_lm
+        ref = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10)).result()
+        # stop token: emitted, then the stream ends
+        out = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10,
+                                        stop_tokens=(ref[2],))).result()
+        assert out == ref[:3]
+        # per-request eos override ends the stream the same way
+        out = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10,
+                                        eos_id=ref[2])).result()
+        assert out == ref[:3]
+
+    def test_ignore_eos_overrides_engine_default(self, tiny_lm):
+        model, params = tiny_lm
+        ref = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10)).result()
+        eng = _engine(model, params, eos_id=int(ref[2]))
+        assert eng.submit(_prompt(12),
+                          SamplingParams(max_new_tokens=10)).result() \
+            == ref[:3]
+        eng2 = _engine(model, params, eos_id=int(ref[2]))
+        out = eng2.submit(_prompt(12), SamplingParams(
+            max_new_tokens=10, ignore_eos=True)).result()
+        assert out == ref                   # ran through the engine eos
+
+
+class TestFork:
+    def test_fork_shares_all_prefork_blocks_stored_once(self, tiny_lm):
+        """Acceptance: at the fork point pool occupancy is UNCHANGED —
+        every pre-fork block (incl. the partial tail) is shared, not
+        copied — and COW copies appear only on divergent writes."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=3)
+        base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=10))
+        _pump_until(eng, lambda: len(base.out_tokens) >= 3)
+        before = eng.kv_stats["blocks_in_use"]
+        forks = base.fork(2)
+        assert eng.kv_stats["blocks_in_use"] == before      # stored once
+        assert eng.kv_stats["blocks_shared"] > 0
+        assert eng.kv.pool.stats()["cow_copies"] == 0
+        eng.drain()
+        # greedy forks with inherited params reproduce the parent stream
+        ref = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10)).result()
+        assert base.out_tokens == ref
+        assert all(f.out_tokens == ref for f in forks)
+        assert eng.kv.pool.stats()["cow_copies"] > 0        # diverged rows
+        assert eng.kv_stats["blocks_in_use"] == 0           # refcounts -> 0
+        assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+
+    def test_forks_diverge_after_fork_point(self, tiny_lm):
+        """Per-fork SamplingParams (temperature + distinct seeds) make
+        forked streams diverge AFTER the fork point while the pre-fork
+        prefix stays shared."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=3)
+        base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=12))
+        _pump_until(eng, lambda: len(base.out_tokens) >= 4)
+        k = len(base.out_tokens)
+        f1, = base.fork(1, params=SamplingParams(
+            max_new_tokens=12, temperature=1.5, seed=11))
+        f2, = base.fork(1, params=SamplingParams(
+            max_new_tokens=12, temperature=1.5, seed=222))
+        eng.drain()
+        assert f1.out_tokens[:k] == f2.out_tokens[:k] \
+            == base.out_tokens[:k]                  # shared pre-fork
+        assert f1.out_tokens != f2.out_tokens       # diverged post-fork
+        assert eng.kv_stats["blocks_in_use"] == 0
+
+    def test_cancel_one_fork_leaves_siblings_intact(self, tiny_lm):
+        model, params = tiny_lm
+        ref = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=10)).result()
+        eng = _engine(model, params, slots=3)
+        base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=10))
+        _pump_until(eng, lambda: len(base.out_tokens) >= 3)
+        forks = base.fork(2)
+        eng.step()
+        forks[0].cancel()
+        eng.drain()
+        assert forks[0].status == "cancelled"
+        assert base.out_tokens == ref
+        assert forks[1].out_tokens == ref
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+
+    def test_fork_is_atomic_on_slot_shortage(self, tiny_lm):
+        """Regression: fork(n) with fewer than n free slots raises
+        BEFORE creating any child — no orphaned half-tree keeps slots
+        or blocks."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=2)
+        base = eng.submit(_prompt(10), SamplingParams(max_new_tokens=8))
+        _pump_until(eng, lambda: len(base.out_tokens) >= 2)
+        with pytest.raises(ForkError, match="free slot"):
+            base.fork(2)                    # only 1 slot free
+        assert eng.kv.n_free == 1           # nothing was placed
+        eng.drain()
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.last_stats["forks"] == 0
+
+    def test_cow_pool_exhaustion_writer_yields(self, tiny_lm):
+        """Regression: when a divergent write needs a COW copy but the
+        pool is empty and every other stream has equal priority, the
+        WRITER is preempted (snapshot + re-queue) instead of displacing
+        an equal-priority sibling or crashing — and both streams still
+        finish bit-exact."""
+        model, params = tiny_lm
+        ref = _engine(model, params).submit(
+            _prompt(12), SamplingParams(max_new_tokens=12)).result()
+        # parent reserves ceil((12+12)/8)=3 blocks = the WHOLE pool;
+        # fork shares them, so the first divergent write finds 0 free
+        eng = _engine(model, params, slots=2, num_blocks=3)
+        base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=12))
+        _pump_until(eng, lambda: len(base.out_tokens) >= 3)
+        fork, = base.fork(1)
+        eng.drain()
+        assert base.out_tokens == ref
+        assert fork.out_tokens == ref
+        assert base.preemptions + fork.preemptions >= 1
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+
+    def test_fork_errors_are_typed(self, tiny_lm):
+        model, params = tiny_lm
+        # dense layout has no COW substrate
+        dense = _engine(model, params, layout="dense")
+        hd = dense.submit(_prompt(8), SamplingParams(max_new_tokens=6))
+        _pump_until(dense, lambda: len(hd.out_tokens) >= 1)
+        with pytest.raises(ForkError, match="paged"):
+            hd.fork(1)
+        dense.drain()
+        # queued (non-decode) stream cannot fork
+        eng = _engine(model, params, slots=1)
+        h1 = eng.submit(_prompt(8), SamplingParams(max_new_tokens=6))
+        h2 = eng.submit(_prompt(9), SamplingParams(max_new_tokens=6))
+        _pump_until(eng, lambda: len(h1.out_tokens) >= 1)
+        with pytest.raises(ForkError, match="decode"):
+            h2.fork(1)
+        # no free slot
+        with pytest.raises(ForkError, match="slot"):
+            h1.fork(1)
+        eng.drain()
+        # budget larger than the parent's reserved span
+        eng2 = _engine(model, params, slots=2)
+        h3 = eng2.submit(_prompt(8), SamplingParams(max_new_tokens=6))
+        _pump_until(eng2, lambda: len(h3.out_tokens) >= 1)
+        with pytest.raises(ForkError, match="reserved"):
+            h3.fork(1, params=SamplingParams(max_new_tokens=40))
+        eng2.drain()
+
+
+class TestPreemption:
+    def test_equal_priority_is_never_preempted(self, tiny_lm):
+        """Same-priority traffic waits (FIFO) instead of displacing live
+        streams — the no-livelock guarantee."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=2, num_blocks=4)
+        hs = [eng.submit(_prompt(12 + i), SamplingParams(max_new_tokens=8))
+              for i in range(4)]
+        eng.drain()
+        assert all(h.status == "done" for h in hs)
+        assert all(h.preemptions == 0 for h in hs)
+        assert eng.last_stats["preemptions"] == 0
+        assert eng.last_stats["block_waits"] > 0
+
+    def test_lowest_progress_victim_is_chosen(self, tiny_lm):
+        """Among lower-priority live streams, the one with the fewest
+        emitted tokens is snapshotted first."""
+        model, params = tiny_lm
+        eng = _engine(model, params, slots=2, num_blocks=8)
+        ahead = eng.submit(_prompt(10), SamplingParams(max_new_tokens=12),
+                           priority=5)
+        _pump_until(eng, lambda: len(ahead.out_tokens) >= 4)
+        behind = eng.submit(_prompt(11), SamplingParams(max_new_tokens=12),
+                            priority=5)
+        _pump_until(eng, lambda: len(behind.out_tokens) >= 1)
+        hp = eng.submit(_prompt(9), SamplingParams(max_new_tokens=8),
+                        priority=0)
+        eng.drain()
+        assert hp.status == "done"
+        assert behind.preemptions >= 1
+        assert ahead.preemptions == 0
+        assert eng.last_stats["preemptions"] >= 1
+
+    def test_preempt_mid_prefill_victim_restores(self, tiny_lm):
+        """A victim still prefilling its prompt (progress 0) can be
+        preempted and restored; its stream stays exact."""
+        model, params = tiny_lm
+        ref = _engine(model, params, slots=1).submit(
+            _prompt(40), SamplingParams(max_new_tokens=6)).result()
+        eng = _engine(model, params, slots=1)
+        vic = eng.submit(_prompt(40), SamplingParams(max_new_tokens=6),
+                         priority=5)
+        eng.step()
+        eng.step()                      # mid-prefill (40 tokens, chunk 8)
+        assert vic.status == "prefill" and not vic.out_tokens
+        hp = eng.submit(_prompt(9), SamplingParams(max_new_tokens=4),
+                        priority=0)
+        eng.drain()
+        assert vic.preemptions >= 1
+        assert hp.status == "done"
+        assert vic.out_tokens == ref
+
+    def test_preempt_release_does_not_finalize_attached_blocks(self,
+                                                               tiny_lm):
+        """kv-level regression: preempting a consumer that attached a
+        producer's not-yet-written blocks must NOT flag those blocks
+        content-final — the written flag belongs to the producer's
+        lifecycle (it gates the consumer-takeover path)."""
+        from repro.serve.kv_manager import PagedKVManager
+        model, _ = tiny_lm
+        kv = PagedKVManager(model, 3, MAX_LEN, block_size=8)
+        prompt = _prompt(26)
+        consumer_prompt = np.concatenate(
+            [prompt, (np.arange(5) * 13 % VOCAB).astype(np.int32)])
+        kv.admit(prompt, 6)             # producer registers 3 blocks
+        b = kv.admit(consumer_prompt, 6)
+        assert kv.shared_len(b) == 24   # attached the 3 producer blocks
+        bid = int(kv.block_tables[b][0])
+        kv.preempt_release(b, consumer_prompt, int(kv.pos[b]))
+        assert not kv.pool.is_written(bid)
+
+    def test_rescind_only_demotes_orphaned_blocks(self, tiny_lm):
+        """kv-level regression: the takeover pass is scoped to the
+        released slot's own orphaned blocks — a consumer attached to a
+        STILL-LIVE producer is not demoted by unrelated churn."""
+        from repro.serve.kv_manager import PagedKVManager
+        model, _ = tiny_lm
+        kv = PagedKVManager(model, 3, MAX_LEN, block_size=8)
+        prompt = _prompt(26)
+        consumer_prompt = np.concatenate(
+            [prompt, (np.arange(5) * 13 % VOCAB).astype(np.int32)])
+        kv.admit(prompt, 6)                 # live producer, mid-prefill
+        b = kv.admit(consumer_prompt, 6)
+        assert kv.shared_len(b) == 24
+        bid = int(kv.block_tables[b][0])
+        # unrelated release: none of the consumer's blocks orphaned
+        assert kv.rescind_unwritten_shared(b, orphaned={999}) == 24
+        assert kv.shared_len(b) == 24       # untouched
+        # the producer itself releases: now the takeover fires
+        assert kv.rescind_unwritten_shared(b, orphaned={bid}) == 0
+        assert kv.shared_len(b) == 0
+
+    def test_producer_cancel_rescinds_unwritten_shared_blocks(self,
+                                                              tiny_lm):
+        """A consumer that attached a cancelled producer's
+        never-written prefix blocks takes over writing them — its
+        stream stays exact (no garbage attended)."""
+        model, params = tiny_lm
+        shared = _prompt(26)
+        tail = (np.arange(6) * 13 % VOCAB).astype(np.int32)
+        consumer_prompt = np.concatenate([shared, tail])
+        ref = _engine(model, params, slots=1).submit(
+            consumer_prompt, SamplingParams(max_new_tokens=6)).result()
+        eng = _engine(model, params, slots=2)
+        producer = eng.submit(shared, SamplingParams(max_new_tokens=6))
+        consumer = eng.submit(consumer_prompt,
+                              SamplingParams(max_new_tokens=6))
+        eng.step()                      # one producer chunk written
+        assert producer.status == "prefill"
+        producer.cancel()               # registered blocks never written
+        eng.drain()
+        assert consumer.out_tokens == ref
+        assert eng.kv_stats["blocks_in_use"] == 0
+
+
+@pytest.mark.slow
+class TestPreemptRestoreBitIdentical:
+    """The acceptance criterion: a preempted-then-restored greedy stream
+    is bit-identical to its unpreempted baseline, across backend x
+    kv_layout (quantized weights; dense preempts on slot pressure,
+    paged on block pressure)."""
+
+    @pytest.mark.parametrize("backend", ["reference", "quantized"])
+    @pytest.mark.parametrize("layout", ["dense", "paged"])
+    def test_restored_stream_bit_identical(self, quantized_lm, backend,
+                                           layout):
+        model, qparams = quantized_lm
+        kw = (dict(slots=2, num_blocks=5) if layout == "paged"
+              else dict(slots=1))
+        base = _engine(model, qparams, layout=layout, backend=backend, **kw)
+        ref = base.submit(_prompt(20),
+                          SamplingParams(max_new_tokens=12)).result()
+        assert len(ref) == 12
+
+        eng = _engine(model, qparams, layout=layout, backend=backend, **kw)
+        vic = eng.submit(_prompt(20), SamplingParams(max_new_tokens=12),
+                         priority=5)
+        _pump_until(eng, lambda: len(vic.out_tokens) >= 3)
+        hp = eng.submit(_prompt(10, stride=11),
+                        SamplingParams(max_new_tokens=6), priority=0)
+        eng.drain()
+        assert vic.preemptions >= 1, "traffic failed to force preemption"
+        assert hp.status == "done" and len(hp.out_tokens) == 6
+        assert vic.out_tokens == ref        # bit-identical restore
+        if layout == "paged":
+            assert eng.kv_stats["blocks_in_use"] == 0
+
+    def test_compile_contract_under_session_traffic(self, quantized_lm):
+        """submit/fork/cancel/preempt traffic keeps the PR 2-4 compile
+        contract: 1 decode dispatch per step, prefill compiles bounded
+        by buckets."""
+        model, qparams = quantized_lm
+        eng = ServeEngine(model, qparams, batch_slots=3, max_len=MAX_LEN,
+                          chunk_buckets=(8, 32), backend="quantized",
+                          kv_layout="paged", block_size=BLOCK,
+                          num_blocks=16)
+        vic = eng.submit(_prompt(20), SamplingParams(max_new_tokens=10),
+                         priority=5)
+        _pump_until(eng, lambda: len(vic.out_tokens) >= 2)
+        forks = vic.fork(1)
+        eng.submit(_prompt(30, stride=11), SamplingParams(max_new_tokens=8),
+                   priority=0)
+        eng.step()
+        forks[0].cancel()
+        eng.submit(_prompt(6), SamplingParams(max_new_tokens=4))
+        eng.drain()
+        st = eng.last_stats
+        assert st["dispatches_per_step"] == 1.0
+        assert st["prefill_compiles"] <= 2
+        assert eng.kv_stats["blocks_in_use"] == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
