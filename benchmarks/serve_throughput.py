@@ -60,6 +60,12 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_PATH = os.path.join(_ROOT, "experiments", "serve", "throughput.json")
 BASELINE_PATH = os.path.join(_ROOT, "BENCH_serve.json")
 BASELINE_TOLERANCE = 0.20       # fail the gate below (1 - tol) * baseline
+# the machine-independent quantized/reference ratio gets a TIGHTER gate
+# than the absolute tok/s cells (same-machine noise mostly cancels;
+# cross-run drift does not hit both cells perfectly evenly, hence not
+# 0), and it is RATCHETED: --update-baseline refuses to write a lower
+# ratio than the committed one (docs/ci.md "Perf-regression gate")
+RATIO_TOLERANCE = 0.10
 
 
 def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
@@ -84,10 +90,11 @@ def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
 
 def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len,
              backend="reference", kv_layout="dense", block_size=32,
-             shared_prefix=0):
+             shared_prefix=0, kernel_interpret=None):
     engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len,
                          backend=backend, kv_layout=kv_layout,
-                         block_size=block_size)
+                         block_size=block_size,
+                         kernel_interpret=kernel_interpret)
     # warmup compiles outside the timed window: decode (1), one prefill
     # per chunk bucket (bounded — NOT one per distinct prompt length)
     engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
@@ -120,7 +127,7 @@ def _fmt_row(label, slots, st):
             f" w{st['block_waits']} p{st['preemptions']}")
 
 
-def run(quick: bool = False, block_size: int = 16):
+def run(quick: bool = False, block_size: int = 16, kernel_interpret=None):
     # kv_chunk=block_size keeps the flash-decode kernel's chunk split
     # identical across layouts, so dense and paged streams stay
     # bit-identical (docs/serving.md "Paged KV cache")
@@ -154,7 +161,8 @@ def run(quick: bool = False, block_size: int = 16):
             st = _measure(model, p, cfg.vocab_size, slots=slots,
                           n_requests=n_requests, max_new=max_new,
                           max_len=128, backend=backend, kv_layout=layout,
-                          block_size=block_size, shared_prefix=40)
+                          block_size=block_size, shared_prefix=40,
+                          kernel_interpret=kernel_interpret)
             rec = {"variant": label, "backend": backend,
                    "kv_layout": layout, **st,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
@@ -231,7 +239,8 @@ def _session_smoke(model, qparams, vocab, block_size: int) -> dict:
 
 
 def tiny_smoke(baseline_path: str = BASELINE_PATH,
-               update_baseline: bool = False, block_size: int = 16) -> dict:
+               update_baseline: bool = False, block_size: int = 16,
+               kernel_interpret=None) -> dict:
     """CI serve-smoke lane: seconds-scale run of BOTH backends x BOTH
     KV layouts over the same quantized weights, asserting the serving
     invariants (module docstring), greedy-stream parity across every
@@ -256,17 +265,26 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             gate = backend if layout == "dense" else f"{backend}-paged"
             engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
                                  chunk_buckets=(8, 32), backend=backend,
-                                 kv_layout=layout, block_size=block_size)
+                                 kv_layout=layout, block_size=block_size,
+                                 kernel_interpret=kernel_interpret)
             # warmup so decode_tokens_per_sec measures steady state, not jit
             engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
                                       long_every=3, long_len=100))
-            # 8 requests x 32 new tokens: a decode window long enough that
-            # the perf gate measures steady state, not timer noise
+            # 8 requests x 32 new tokens per repeat; the serve itself is
+            # ~0.1 s (the run cost is all jit compiles), so one timing is
+            # scheduler-noise — repeat on the warm engine and gate the
+            # BEST decode rate (min-time convention: interference only
+            # ever slows a run down; ~1 s extra, greedy repeats identical)
             t0 = time.perf_counter()
-            done = engine.generate(_requests(8, cfg.vocab_size, 32, seed=0,
-                                             **traffic))
+            reps = []
+            for _ in range(5):
+                done = engine.generate(_requests(8, cfg.vocab_size, 32,
+                                                 seed=0, **traffic))
+                reps.append((dict(engine.last_stats), done))
             dt = time.perf_counter() - t0
-            st = dict(engine.last_stats)
+            assert all(r[1] == done for r in reps), \
+                "greedy streams diverged across repeats"
+            st = max(reps, key=lambda r: r[0]["decode_tokens_per_sec"])[0]
             assert len(done) == 8 and all(len(v) > 0 for v in done.values())
             assert st["dispatches_per_step"] == 1.0, st
             assert st["prefill_compiles"] <= \
@@ -279,6 +297,22 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
                 assert kv["blocks_saved_by_sharing"] > 0, kv
                 assert kv["blocks_in_use"] == 0, kv     # all freed
                 assert st["shared_prefix_tokens"] > 0, st
+            if backend == "quantized":
+                # the fused-projection contract: decode serves MORE
+                # source linears than it pays kernel dispatches for
+                # (QKV and gate/up slot-batched into single GEMVs), and
+                # activation quantization never runs as its own
+                # dispatch (it is fused into the GEMV grid)
+                tc = engine.runner.trace_counts.get("decode", {})
+                assert tc.get("decode_act_quant", 0) == 0, tc
+                assert 0 < tc["decode_gemv"] < tc["decode_linears"], tc
+                assert engine.packed_stats["fused_projections"] > 0, \
+                    engine.packed_stats
+                print(f"  serve-smoke[{gate}] decode trace: "
+                      f"{tc['decode_gemv']} fused GEMV dispatches serve "
+                      f"{tc['decode_linears']} linears "
+                      f"({engine.packed_stats['fused_projections']} "
+                      "slot-batched projections)")
             streams[(backend, layout)] = done
             records.append({"variant": f"tiny-smoke/{gate}",
                             "backend": backend, "kv_layout": layout,
@@ -287,8 +321,10 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             extra = ""
             if engine.packed_stats is not None:
                 ps = engine.packed_stats
+                mode = "interpret" if ps["kernel_interpret"] else "compiled"
                 extra = (f", {ps['packed_linears']} packed linears "
-                         f"({ps['packed_bytes'] / 2**10:.0f} KiB)")
+                         f"({ps['packed_bytes'] / 2**10:.0f} KiB), "
+                         f"kernels {mode} on {ps['kernel_backend']}")
             print(f"  serve-smoke[{gate}] OK: {st['tokens']} tokens in "
                   f"{dt:.1f}s, {st['decode_tokens_per_sec']:.1f} decode "
                   f"tok/s, {st['dispatches_per_step']:.0f} dispatch/step, "
@@ -324,6 +360,18 @@ def _gate_baseline(records, path: str, *, update: bool = False):
                 for r in records if r.get("gate")}
     ratio = measured["quantized"] / measured["reference"]
     if update:
+        # RATCHET: the machine-independent ratio may only climb.  A
+        # baseline refresh that would LOWER it is refused — a real
+        # kernel-path regression must be fixed (or the old baseline
+        # consciously deleted), never silently re-baselined away.
+        if os.path.exists(path):
+            prev = json.load(open(path)).get("quantized_to_reference_ratio")
+            if prev and round(ratio, 3) < prev:
+                raise SystemExit(
+                    f"baseline ratchet: measured quantized/reference ratio "
+                    f"{ratio:.3f} < committed {prev:.3f} — refusing to "
+                    f"lower the bar; fix the kernel-path regression (or "
+                    f"delete {os.path.relpath(path)} to consciously reset)")
         # KV memory snapshot rides in the baseline so the paged win
         # (pool MiB, sharing) is a committed, reviewable number too
         kv_stats = {r["gate"]: {k: r["kv"][k] for k in
@@ -331,10 +379,12 @@ def _gate_baseline(records, path: str, *, update: bool = False):
                                  "blocks_peak_in_use",
                                  "blocks_saved_by_sharing")
                                 if k in r["kv"]}
-                    for r in records if r.get("kv_layout") == "paged"}
+                    for r in records
+                    if r.get("gate") and r.get("kv_layout") == "paged"}
         json.dump({
             "bench": "serve_throughput --tiny",
             "tolerance": BASELINE_TOLERANCE,
+            "ratio_tolerance": RATIO_TOLERANCE,
             "decode_tokens_per_sec": {k: round(v, 1)
                                       for k, v in measured.items()},
             # machine-independent: survives runner-hardware changes that
@@ -347,7 +397,8 @@ def _gate_baseline(records, path: str, *, update: bool = False):
                            "--update-baseline"),
         }, open(path, "w"), indent=1)
         print(f"  wrote baseline {os.path.relpath(path)}: "
-              + ", ".join(f"{k}={v:.1f}" for k, v in measured.items()))
+              + ", ".join(f"{k}={v:.1f}" for k, v in measured.items())
+              + f", ratio={ratio:.3f}")
         return
     if not os.path.exists(path):
         raise SystemExit(
@@ -371,15 +422,19 @@ def _gate_baseline(records, path: str, *, update: bool = False):
                 f"(baseline {want:.1f} - {tol:.0%})")
     want_ratio = base.get("quantized_to_reference_ratio")
     if want_ratio:
+        # same-machine noise cancels in the ratio, so it gets the
+        # tighter ratcheted tolerance (older baselines without the
+        # field fall back to the loose absolute one)
+        tolr = float(base.get("ratio_tolerance", tol))
         delta = (ratio - want_ratio) / want_ratio
-        verdict = "OK" if ratio >= want_ratio * (1.0 - tol) else "REGRESSION"
+        verdict = "OK" if ratio >= want_ratio * (1.0 - tolr) else "REGRESSION"
         print(f"  perf gate[ratio]: quantized/reference {ratio:.3f} vs "
               f"baseline {want_ratio:.3f} ({delta:+.1%}, tolerance "
-              f"-{tol:.0%}) {verdict}  [machine-independent]")
+              f"-{tolr:.0%}) {verdict}  [machine-independent, ratcheted]")
         if verdict != "OK":
             failures.append(
                 f"quantized/reference ratio {ratio:.3f} < "
-                f"{(1 - tol) * want_ratio:.3f}")
+                f"{(1 - tolr) * want_ratio:.3f}")
     if failures:
         raise SystemExit("perf gate FAILED: " + "; ".join(failures))
 
@@ -406,10 +461,17 @@ if __name__ == "__main__":
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged-layout block size; small values force "
                          "multi-block sequences (CI uses 16)")
+    ap.add_argument("--kernel-interpret", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="Pallas execution for the quantized backend: "
+                         "auto = compiled on TPU/GPU, interpret on CPU "
+                         "(the default); on/off force interpret mode")
     args = ap.parse_args()
+    interp = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
     if args.tiny:
         tiny_smoke(baseline_path=args.baseline,
                    update_baseline=args.update_baseline,
-                   block_size=args.block_size)
+                   block_size=args.block_size, kernel_interpret=interp)
     else:
-        run(quick=args.quick, block_size=args.block_size)
+        run(quick=args.quick, block_size=args.block_size,
+            kernel_interpret=interp)

@@ -40,8 +40,10 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gptq import QuantizedLinear
+from repro.kernels.dispatch import resolve_interpret
 
 # ---------------------------------------------------------------------------
 # Serving kernel mode (trace-time context)
@@ -54,19 +56,22 @@ _CTX = threading.local()
 class KernelMode:
     """Active serving execution mode, captured at jit-trace time."""
     mode: str                 # "decode" | "prefill"
-    interpret: bool = True    # Pallas interpret mode (True on CPU)
+    interpret: bool = True    # Pallas interpret mode (resolved, not None)
 
 
 @contextlib.contextmanager
-def kernel_serving(mode: str, *, interpret: bool = True):
+def kernel_serving(mode: str, *, interpret: bool | None = None):
     """Enter serving kernel mode around a jit trace.  Every ``dot`` on a
     ``PackedLinear`` (and the decode attention) traced inside dispatches
-    to the Pallas kernel for ``mode``."""
+    to the Pallas kernel for ``mode``.
+
+    ``interpret=None`` (the default) resolves from the device backend:
+    compiled on TPU/GPU, interpret on CPU (kernels/dispatch.py)."""
     if mode not in ("decode", "prefill"):
         raise ValueError(f"kernel mode must be 'decode' or 'prefill', "
                          f"got {mode!r}")
     prev = getattr(_CTX, "km", None)
-    _CTX.km = KernelMode(mode, interpret)
+    _CTX.km = KernelMode(mode, resolve_interpret(interpret))
     try:
         yield
     finally:
@@ -75,6 +80,40 @@ def kernel_serving(mode: str, *, interpret: bool = True):
 
 def current_kernel_mode() -> KernelMode | None:
     return getattr(_CTX, "km", None)
+
+
+# ---------------------------------------------------------------------------
+# Trace-time dispatch counters (serving observability)
+# ---------------------------------------------------------------------------
+#
+# ``packed_dot`` bumps these while a jitted serving function is being
+# TRACED, so after ``runner`` traces its decode step the counts say how
+# many Pallas dispatches one step costs — the number the fused-QKV /
+# fused-GEMV work is supposed to shrink.  CI's serve-smoke lane asserts
+# on them (benchmarks/serve_throughput.py).  Keys:
+#   decode_gemv    — fused act_quant+popcount GEMV pallas_calls traced
+#   decode_linears — source linears served by those calls (>= gemv when
+#                    QKV / gate-up projections are slot-batched into one)
+#   decode_act_quant — standalone act_quant dispatches (0 when fused)
+
+_TRACE_COUNTS = threading.local()
+
+
+def reset_kernel_trace_counts() -> None:
+    _TRACE_COUNTS.counts = {"decode_gemv": 0, "decode_linears": 0,
+                            "decode_act_quant": 0, "prefill_gemm": 0}
+
+
+def kernel_trace_counts() -> dict:
+    counts = getattr(_TRACE_COUNTS, "counts", None)
+    if counts is None:
+        reset_kernel_trace_counts()
+        counts = _TRACE_COUNTS.counts
+    return counts
+
+
+def _bump(key: str, by: int = 1) -> None:
+    kernel_trace_counts()[key] += by
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +126,7 @@ def current_kernel_mode() -> KernelMode | None:
         "qp", "mp", "centers", "w8", "w8_scale",
         "perm", "act_gamma", "row_sum", "bias",
     ),
-    meta_fields=("group_size", "c_in", "c_out", "n_outlier"),
+    meta_fields=("group_size", "c_in", "c_out", "n_outlier", "splits"),
 )
 @dataclass
 class PackedLinear:
@@ -97,6 +136,13 @@ class PackedLinear:
     lossless) with the bit-planes pre-blocked to the kernels' group
     layout.  Fields may carry leading stack dims (scan-over-layers);
     ``packed_dot`` consumes the unstacked per-layer view.
+
+    ``splits`` non-empty marks a slot-batched projection built by
+    ``fuse_packed`` (e.g. QKV or gate/up): the C_out axis concatenates
+    the member projections in order and the tuple records their widths.
+    The decode GEMV then serves all members in ONE kernel dispatch; the
+    model layer splits the output (attention.qkv_project / layers-level
+    swiglu routing).
     """
 
     qp: jnp.ndarray          # uint32 [.., C_out, G, B/32]  sign planes
@@ -112,6 +158,7 @@ class PackedLinear:
     c_in: int = 0
     c_out: int = 0
     n_outlier: int = 0
+    splits: tuple[int, ...] = ()
 
     @property
     def c_norm(self) -> int:
@@ -147,7 +194,10 @@ def pack_linear(q: QuantizedLinear) -> PackedLinear:
 
 
 def unpack_linear(p: PackedLinear) -> QuantizedLinear:
-    """Exact inverse of ``pack_linear`` (bit-for-bit round trip)."""
+    """Exact inverse of ``pack_linear`` (bit-for-bit round trip).  A
+    fused container unpacks to ONE wide ``QuantizedLinear`` — correct
+    for every consumer (reference dot / prefill GEMM), the caller splits
+    the output columns."""
     words = p.c_norm // 32
     return QuantizedLinear(
         q_packed=p.qp.reshape(*p.qp.shape[:-2], words),
@@ -158,39 +208,72 @@ def unpack_linear(p: PackedLinear) -> QuantizedLinear:
         n_outlier=p.n_outlier)
 
 
+def fuse_packed(parts: list[PackedLinear]) -> PackedLinear | None:
+    """Slot-batch sibling projections of the SAME input (QKV; gate/up)
+    into one wide ``PackedLinear`` by concatenating along C_out.
+
+    Sound only when the members agree on everything that depends on the
+    input side: channel permutation, plane scales (act_gamma), group
+    size and outlier split — GPTQ derives all of these from the shared
+    input activations, so same-input projections normally match.  Any
+    mismatch (or a biased member, or < 2 parts) returns ``None`` and the
+    caller keeps the unfused layout — fusion is an optimization, never a
+    semantics change.
+    """
+    if len(parts) < 2:
+        return None
+    head = parts[0]
+    for p in parts[1:]:
+        if (p.group_size != head.group_size or p.c_in != head.c_in
+                or p.n_outlier != head.n_outlier or p.splits or head.splits):
+            return None
+        if not np.array_equal(np.asarray(p.perm), np.asarray(head.perm)):
+            return None
+        if not np.array_equal(np.asarray(p.act_gamma),
+                              np.asarray(head.act_gamma)):
+            return None
+    if any(p.bias is not None for p in parts):
+        return None
+    cat = lambda name, axis: jnp.concatenate(
+        [getattr(p, name) for p in parts], axis=axis)
+    return PackedLinear(
+        qp=cat("qp", -3), mp=cat("mp", -3), centers=cat("centers", -3),
+        w8=cat("w8", -2), w8_scale=cat("w8_scale", -2),
+        perm=head.perm, act_gamma=head.act_gamma,
+        row_sum=cat("row_sum", -1), bias=None,
+        group_size=head.group_size, c_in=head.c_in,
+        c_out=sum(p.c_out for p in parts), n_outlier=head.n_outlier,
+        splits=tuple(p.c_out for p in parts))
+
+
 # ---------------------------------------------------------------------------
 # Dispatching linear application
 # ---------------------------------------------------------------------------
 
 def _matvec_path(xf: jnp.ndarray, p: PackedLinear, interpret: bool):
-    """Decode hot loop: fused act_quant bit-plane pack + popcount GEMV.
-
-    Activation quantization (RTN-INT4 → 4x packed INT1 planes with the
-    error-aware gamma-smoothed plane scales) runs in the ``act_quant``
-    Pallas kernel; the binary contraction in ``bwa_matvec``; per-token
-    (mu, z) and the shift plane land in the epilogue (Eq. 5-7).
+    """Decode hot loop: ONE fused Pallas dispatch per (possibly
+    slot-batched) projection — RTN-INT4 quantize, bit-plane pack,
+    popcount contraction and the (mu, z, row_sum) epilogue all run in
+    VMEM in a single grid (``kernels/bwa_fused``), killing the packed-
+    plane HBM round-trip of the old act_quant → bwa_matvec pair.  Only
+    the INT8 outlier correction and bias stay outside (Eq. 5-7).
     """
-    from repro.kernels.act_quant.ops import act_quant_pack
+    from repro.kernels.bwa_fused.ops import bwa_fused_gemv
     from repro.kernels.bwa_matvec.ops import (
-        bwa_matvec_planes,
         centers_to_cd,
         int8_outlier_correction,
         plane_weights,
     )
 
-    B = p.group_size
-    g = p.c_norm // B
+    _bump("decode_gemv")
+    _bump("decode_linears", max(1, len(p.splits)))
     xp = jnp.take(xf, p.perm, axis=-1)
     xn, xo = xp[..., : p.c_norm], xp[..., p.c_norm:]
 
-    planes, mu, z = act_quant_pack(xn.astype(jnp.float32),
-                                   n_planes=4, interpret=interpret)
-    planes = planes.reshape(planes.shape[0], 4, g, B // 32)
     cd = centers_to_cd(p.centers)
     pw = plane_weights(p.act_gamma)
-
-    acc = bwa_matvec_planes(p.qp, p.mp, cd, planes, pw, interpret=interpret)
-    y = mu * acc - (mu * z) * p.row_sum
+    y = bwa_fused_gemv(xn.astype(jnp.float32), p.qp, p.mp, cd, pw,
+                       p.row_sum, interpret=interpret)
 
     if p.n_outlier:
         y = y + int8_outlier_correction(xo, p.w8, p.w8_scale)
@@ -205,6 +288,7 @@ def _matmul_path(xf: jnp.ndarray, p: PackedLinear, interpret: bool):
     prefill GEMM entry on the unpacked (reshape-only) view so the
     epilogue math exists in exactly one place."""
     from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
+    _bump("prefill_gemm")
     return bwa_matmul_dequant(unpack_linear(p), xf, interpret=interpret)
 
 
@@ -250,8 +334,29 @@ def _count_quantized(tree) -> int:
     return n
 
 
+def _fuse_into(tree: dict, fused_name: str, names: tuple[str, ...],
+               stats: dict):
+    """Try to slot-batch ``names`` (all packed, same input) into one
+    fused leaf; on success the members are REPLACED by ``fused_name``
+    and the byte accounting is adjusted to the fused layout."""
+    parts = [tree.get(n) for n in names]
+    if not all(isinstance(p, PackedLinear) for p in parts):
+        return
+    fused = fuse_packed(parts)
+    if fused is None:
+        return          # mismatched perm/gamma/bias: keep unfused layout
+    tree[fused_name] = fused
+    for n in names:
+        del tree[n]
+    stats["fused_projections"] += 1
+    stats["packed_bytes"] += (fused.packed_bytes()
+                              - sum(p.packed_bytes() for p in parts))
+
+
 def _pack_sub(sub: dict, kind: str, ffn_kind, stats: dict):
-    """Pack one sub-layer's covered leaves in place (on a copied tree)."""
+    """Pack one sub-layer's covered leaves in place (on a copied tree),
+    then slot-batch same-input projections (QKV; swiglu gate/up) into
+    single wide containers so decode serves them in one dispatch."""
     from repro.config.model_config import FFNKind
     from repro.models.transformer import KERNEL_COVERED_KINDS
 
@@ -266,6 +371,7 @@ def _pack_sub(sub: dict, kind: str, ffn_kind, stats: dict):
                 mix[name] = pl
                 stats["packed_linears"] += 1
                 stats["packed_bytes"] += pl.packed_bytes()
+        _fuse_into(mix, "wqkv", ("wq", "wk", "wv"), stats)
     ffn = sub.get("ffn")
     if isinstance(ffn, dict) and ffn_kind in (FFNKind.SWIGLU, FFNKind.GELU):
         for name in _FFN_PACK:
@@ -275,6 +381,8 @@ def _pack_sub(sub: dict, kind: str, ffn_kind, stats: dict):
                 ffn[name] = pl
                 stats["packed_linears"] += 1
                 stats["packed_bytes"] += pl.packed_bytes()
+        if ffn_kind == FFNKind.SWIGLU:
+            _fuse_into(ffn, "w_gateup", ("w_gate", "w_up"), stats)
 
 
 def pack_model_params(model, params: dict) -> tuple[dict, dict]:
@@ -290,6 +398,7 @@ def pack_model_params(model, params: dict) -> tuple[dict, dict]:
     stats = {
         "packed_linears": 0,
         "packed_bytes": 0,
+        "fused_projections": 0,
         "quantized_linears_total": _count_quantized(params),
     }
     new_params = _copy_tree(params)

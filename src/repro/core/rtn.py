@@ -25,8 +25,14 @@ def rtn_params(x: jnp.ndarray, bits: int, symmetric: bool = False):
     else:
         lo = jnp.min(x, axis=-1, keepdims=True)
         hi = jnp.max(x, axis=-1, keepdims=True)
-        mu = jnp.maximum((hi - lo) / levels, _EPS)
-        z = -jnp.round(lo / mu)
+        # degenerate rows (hi == lo: constant/all-zero): the generic
+        # formula collapses mu to _EPS and z = -round(lo/1e-8) blows past
+        # float32 integer precision into garbage codes.  Emit the exact
+        # encoding instead: xq = 0 everywhere (round(x) - x in [-.5, .5]
+        # clips/truncates to 0), mu = 1, z = -lo, so mu * (xq - z) == lo.
+        degen = hi == lo
+        mu = jnp.where(degen, 1.0, jnp.maximum((hi - lo) / levels, _EPS))
+        z = jnp.where(degen, -lo, -jnp.round(lo / mu))
     return mu, z
 
 

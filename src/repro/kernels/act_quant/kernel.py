@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 _EPS = 1e-8
 
 
@@ -22,8 +24,12 @@ def _kernel(x_ref, planes_ref, mu_ref, z_ref, *, n_planes: int):
     lo = jnp.min(x, axis=-1, keepdims=True)
     hi = jnp.max(x, axis=-1, keepdims=True)
     levels = float(2**n_planes - 1)
-    mu = jnp.maximum((hi - lo) / levels, _EPS)
-    z = -jnp.round(lo / mu)
+    # degenerate rows (hi == lo): mu = _EPS would make z = -round(lo/mu)
+    # overflow float32 integer precision into garbage codes.  mu = 1,
+    # z = -lo encodes the row exactly as xq = 0 (matches core.rtn).
+    degen = hi == lo
+    mu = jnp.where(degen, 1.0, jnp.maximum((hi - lo) / levels, _EPS))
+    z = jnp.where(degen, -lo, -jnp.round(lo / mu))
     xq = jnp.clip(jnp.round(x / mu) + z, 0, levels).astype(jnp.uint32)
 
     w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
@@ -38,7 +44,8 @@ def _kernel(x_ref, planes_ref, mu_ref, z_ref, *, n_planes: int):
 @functools.partial(jax.jit, static_argnames=("n_planes", "block_t",
                                               "interpret"))
 def act_quant_kernel(x, *, n_planes: int = 4, block_t: int = 64,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     t, c = x.shape
     assert c % 32 == 0
     bt = min(block_t, t)

@@ -11,7 +11,7 @@ from repro.kernels.act_quant.kernel import act_quant_kernel
 @functools.partial(jax.jit, static_argnames=("n_planes", "block_t",
                                               "interpret"))
 def act_quant_pack(x, *, n_planes: int = 4, block_t: int = 64,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """x [T, C] -> (planes_packed [T, A, C/32] uint32, mu [T,1], z [T,1])."""
     return act_quant_kernel(x, n_planes=n_planes, block_t=block_t,
                             interpret=interpret)

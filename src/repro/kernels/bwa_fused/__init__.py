@@ -1,0 +1,1 @@
+from repro.kernels.bwa_fused.ops import bwa_fused_gemv

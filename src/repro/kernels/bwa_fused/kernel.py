@@ -1,0 +1,143 @@
+"""Fused decode GEMV: act-quant + bit-plane pack + popcount contraction
+in ONE Pallas kernel (the decode latency tentpole).
+
+The unfused decode path pays two ``pallas_call`` dispatches per linear —
+``act_quant`` writes the packed planes to HBM, ``bwa_matvec`` reads them
+straight back.  Fusing removes that HBM round-trip AND the dispatch: the
+grid is (T, C_out/BO) with the out-tile axis fastest, so at ``oi == 0``
+each token row is RTN-INT4 quantized and packed into a VMEM scratch
+once, then every out-tile step reuses the scratch planes for the
+popcount contraction and applies the (mu, z, row_sum) epilogue in-kernel.
+
+Numerics contract: the quantize/pack/contract/epilogue float op
+sequences are copied verbatim from ``act_quant._kernel`` and
+``bwa_matvec._kernel`` + the ``_matvec_path`` epilogue, so the fused
+result is BIT-IDENTICAL to the unfused two-kernel path (asserted in
+tests/test_fused_decode.py).
+
+Layouts (same conventions as bwa_matvec):
+  x        : f32    [T, C]             permuted normal-channel activations
+  q_packed : uint32 [C_out, G, Wg]     sign planes (Wg = group_size/32)
+  m_packed : uint32 [C_out, G, Wg]     fine-group bitmap
+  cd       : f32    [C_out, G, 4]      (lo0, hi0-lo0, lo1, hi1-lo1)
+  pw       : f32    [A]                2^a * gamma_a
+  row_sum  : f32    [C_out]            per-row weight sums (shift plane)
+  out      : f32    [T, C_out]         mu*acc - (mu*z)*row_sum
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import resolve_interpret
+
+_EPS = 1e-8
+
+
+def _kernel(x_ref, q_ref, m_ref, cd_ref, pw_ref, rs_ref, o_ref,
+            planes_ref, muz_ref, *, n_planes: int):
+    oi = pl.program_id(1)
+
+    @pl.when(oi == 0)
+    def _quant_pack():
+        # --- fused act_quant: RTN-INT4 + plane pack, scratch-resident ---
+        # (identical float sequence to kernels/act_quant/_kernel)
+        x = x_ref[...].astype(jnp.float32)           # [1, C]
+        lo = jnp.min(x, axis=-1, keepdims=True)
+        hi = jnp.max(x, axis=-1, keepdims=True)
+        levels = float(2**n_planes - 1)
+        degen = hi == lo
+        mu = jnp.where(degen, 1.0, jnp.maximum((hi - lo) / levels, _EPS))
+        z = jnp.where(degen, -lo, -jnp.round(lo / mu))
+        xq = jnp.clip(jnp.round(x / mu) + z, 0, levels).astype(jnp.uint32)
+
+        w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+        _, g, wg = planes_ref.shape
+        xq_w = xq.reshape(g, wg, 32)
+        for a in range(n_planes):                    # static unroll (A = 4)
+            bits = (xq_w >> jnp.uint32(a)) & jnp.uint32(1)
+            planes_ref[a, :, :] = jnp.sum(bits * w, axis=-1).astype(jnp.uint32)
+        muz_ref[...] = jnp.concatenate([mu, z], axis=-1)
+
+    # --- popcount contraction over the scratch planes -------------------
+    # (identical float sequence to kernels/bwa_matvec/_kernel)
+    q = q_ref[...]                   # [BO, G, Wg] uint32
+    m = m_ref[...]
+    cd = cd_ref[...]                 # [BO, G, 4] f32
+    pw = pw_ref[...]                 # [A] f32
+    nm = ~m
+    lo0 = cd[..., 0]
+    d0 = cd[..., 1]
+    lo1 = cd[..., 2]
+    d1 = cd[..., 3]
+
+    acc = jnp.zeros((q.shape[0],), jnp.float32)
+    for a in range(n_planes):
+        b = planes_ref[a]            # [G, Wg] uint32
+        e = q & b[None]
+        v1 = jnp.sum(jax.lax.population_count(e & m).astype(jnp.int32), -1)
+        v0 = jnp.sum(jax.lax.population_count(e & nm).astype(jnp.int32), -1)
+        bm = b[None] & m
+        bn = b[None] & nm
+        r1 = jnp.sum(jax.lax.population_count(bm).astype(jnp.int32), -1)
+        r0 = jnp.sum(jax.lax.population_count(bn).astype(jnp.int32), -1)
+        t = (lo0 * r0.astype(jnp.float32) + d0 * v0.astype(jnp.float32)
+             + lo1 * r1.astype(jnp.float32) + d1 * v1.astype(jnp.float32))
+        acc = acc + pw[a] * jnp.sum(t, axis=-1)
+
+    # --- in-kernel epilogue: y = mu*acc - (mu*z)*row_sum ----------------
+    mu = muz_ref[0, 0]
+    z = muz_ref[0, 1]
+    o_ref[0, :] = mu * acc - (mu * z) * rs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_planes", "block_out", "interpret"))
+def bwa_fused_gemv_kernel(x, q_packed, m_packed, cd, pw, row_sum, *,
+                          n_planes: int = 4, block_out: int = 256,
+                          interpret: bool | None = None):
+    """y [T, C_out] = fused quantize+pack+popcount GEMV (+ mu/z epilogue).
+
+    Any T works (the grid walks token rows).  C_out not divisible by the
+    tile follows the repo-wide zero-pad+slice contract: padded weight
+    rows are all-zero words with cd == 0 and row_sum == 0, so both the
+    contraction and the epilogue contribute an exact 0.0 there and the
+    slice is lossless.
+    """
+    interpret = resolve_interpret(interpret)
+    t, c = x.shape
+    c_out, g, wg = q_packed.shape
+    assert c == g * wg * 32, (c, g, wg)
+    bo = min(block_out, c_out)
+    pad = (-c_out) % bo
+    if pad:
+        q_packed = jnp.pad(q_packed, ((0, pad), (0, 0), (0, 0)))
+        m_packed = jnp.pad(m_packed, ((0, pad), (0, 0), (0, 0)))
+        cd = jnp.pad(cd, ((0, pad), (0, 0), (0, 0)))
+        row_sum = jnp.pad(row_sum, ((0, pad),))
+        c_out += pad
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, n_planes=n_planes),
+        grid=(t, c_out // bo),       # out-tile axis fastest: scratch
+        in_specs=[                   # planes persist across oi per token
+            pl.BlockSpec((1, c), lambda ti, oi: (ti, 0)),
+            pl.BlockSpec((bo, g, wg), lambda ti, oi: (oi, 0, 0)),
+            pl.BlockSpec((bo, g, wg), lambda ti, oi: (oi, 0, 0)),
+            pl.BlockSpec((bo, g, 4), lambda ti, oi: (oi, 0, 0)),
+            pl.BlockSpec((n_planes,), lambda ti, oi: (0,)),
+            pl.BlockSpec((bo,), lambda ti, oi: (oi,)),
+        ],
+        out_specs=pl.BlockSpec((1, bo), lambda ti, oi: (ti, oi)),
+        out_shape=jax.ShapeDtypeStruct((t, c_out), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n_planes, g, wg), jnp.uint32),
+            pltpu.VMEM((1, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, q_packed, m_packed, cd, pw, row_sum)
+    return y[:, : c_out - pad] if pad else y

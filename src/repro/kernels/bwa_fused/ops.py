@@ -1,0 +1,21 @@
+"""jit'd wrapper: fused decode GEMV from PackedLinear-layout operands."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bwa_fused.kernel import bwa_fused_gemv_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_planes", "block_out", "interpret"))
+def bwa_fused_gemv(x, qp, mp, cd, pw, row_sum, *, n_planes: int = 4,
+                   block_out: int = 256, interpret: bool | None = None):
+    """y [T, C_out] from normal-channel activations x [T, C_nrm] and the
+    kernel-native group-blocked weights (see bwa_fused.kernel for the
+    layout table).  One pallas_call per linear; the outlier correction
+    and bias stay in the caller's epilogue."""
+    return bwa_fused_gemv_kernel(x, qp, mp, cd, pw, row_sum,
+                                 n_planes=n_planes, block_out=block_out,
+                                 interpret=interpret)

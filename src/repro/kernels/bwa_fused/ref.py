@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: composed act_quant + popcount refs + epilogue."""
+from __future__ import annotations
+
+from repro.kernels.act_quant.ref import act_quant_pack_ref
+from repro.kernels.bwa_matvec.ref import bwa_matvec_ref
+
+
+def bwa_fused_gemv_ref(x, qp, mp, cd, pw, row_sum, n_planes: int = 4):
+    """Same contract as bwa_fused_gemv_kernel via the unfused oracles."""
+    c_out, g, wg = qp.shape
+    planes, mu, z = act_quant_pack_ref(x, n_planes)
+    planes = planes.reshape(planes.shape[0], n_planes, g, wg)
+    acc = bwa_matvec_ref(qp, mp, cd, planes, pw)
+    return mu * acc - (mu * z) * row_sum

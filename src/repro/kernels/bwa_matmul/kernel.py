@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
+
 
 def _unpack_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
     """[BN, BK/32] uint32 -> [BN, BK] f32 {0,1}."""
@@ -68,7 +70,8 @@ def _kernel(x_ref, q_ref, m_ref, cd_ref, o_ref, acc_ref, *, bk: int,
     "group", "block_t", "block_n", "block_k", "interpret"))
 def bwa_matmul_kernel(x, q_packed, m_packed, cd, *, group: int = 128,
                       block_t: int = 128, block_n: int = 128,
-                      block_k: int = 256, interpret: bool = True):
+                      block_k: int = 256, interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     t, c_in = x.shape
     c_out = q_packed.shape[0]
     assert c_in % group == 0 and c_in % 32 == 0

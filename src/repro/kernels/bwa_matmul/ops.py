@@ -18,7 +18,7 @@ from repro.kernels.bwa_matmul.kernel import bwa_matmul_kernel
 def bwa_matmul_dequant(q: QuantizedLinear, x: jnp.ndarray, *,
                        quantize_acts: bool = True, block_t: int = 128,
                        block_n: int = 128, block_k: int = 256,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: bool | None = None) -> jnp.ndarray:
     """Prefill-shape BWA linear: y [T, C_out] = x @ What^T (+outliers).
 
     Activations go through the paper's 1x4 fake-quant (cheap, elementwise)

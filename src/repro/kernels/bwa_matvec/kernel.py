@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 
 def _kernel(q_ref, m_ref, cd_ref, planes_ref, pw_ref, o_ref, *, n_planes):
     q = q_ref[...]                  # [BO, G, Wg] uint32
@@ -55,14 +57,25 @@ def _kernel(q_ref, m_ref, cd_ref, planes_ref, pw_ref, o_ref, *, n_planes):
 
 @functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
 def bwa_matvec_kernel(q_packed, m_packed, cd, planes, pw, *,
-                      block_out: int = 256, interpret: bool = True):
-    """acc [T, C_out] = binary-plane contraction (scales in epilogue)."""
+                      block_out: int = 256, interpret: bool | None = None):
+    """acc [T, C_out] = binary-plane contraction (scales in epilogue).
+
+    C_out not divisible by the tile follows the repo-wide zero-pad+slice
+    contract: padded weight rows are all-zero words with cd == 0, so
+    their contribution is an exact 0.0 and the slice is lossless.
+    """
+    interpret = resolve_interpret(interpret)
     c_out, g, wg = q_packed.shape
     t, n_planes = planes.shape[:2]
     bo = min(block_out, c_out)
-    assert c_out % bo == 0
+    pad = (-c_out) % bo
+    if pad:
+        q_packed = jnp.pad(q_packed, ((0, pad), (0, 0), (0, 0)))
+        m_packed = jnp.pad(m_packed, ((0, pad), (0, 0), (0, 0)))
+        cd = jnp.pad(cd, ((0, pad), (0, 0), (0, 0)))
+        c_out += pad
 
-    return pl.pallas_call(
+    acc = pl.pallas_call(
         functools.partial(_kernel, n_planes=n_planes),
         grid=(t, c_out // bo),
         in_specs=[
@@ -76,3 +89,4 @@ def bwa_matvec_kernel(q_packed, m_packed, cd, planes, pw, *,
         out_shape=jax.ShapeDtypeStruct((t, c_out), jnp.float32),
         interpret=interpret,
     )(q_packed, m_packed, cd, planes, pw)
+    return acc[:, : c_out - pad] if pad else acc

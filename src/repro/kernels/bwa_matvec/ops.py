@@ -49,31 +49,23 @@ def int8_outlier_correction(xo, w8, w8_scale) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
 def bwa_matvec_planes(qp, mp, cd, planes, pw, *, block_out: int = 256,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool | None = None) -> jnp.ndarray:
     """Batched-slot kernel entry: acc [T, C_out] from pre-packed weights
     and pre-packed activation bit-planes (the serving decode hot path —
     T = live serving slots).
 
     Ragged shapes follow the zero-pad+slice convention: any T works (the
     grid iterates tokens), and C_out not divisible by the tile is padded
-    with zero weight rows (cd == 0 ⇒ exact zero contribution) and
-    sliced after.
+    inside the kernel wrapper with zero weight rows (cd == 0 ⇒ exact
+    zero contribution) and sliced after.
     """
-    c_out = qp.shape[0]
-    bo = min(block_out, c_out)
-    pad = (-c_out) % bo
-    if pad:
-        qp = jnp.pad(qp, ((0, pad), (0, 0), (0, 0)))
-        mp = jnp.pad(mp, ((0, pad), (0, 0), (0, 0)))
-        cd = jnp.pad(cd, ((0, pad), (0, 0), (0, 0)))
-    acc = bwa_matvec_kernel(qp, mp, cd, planes, pw, block_out=bo,
-                            interpret=interpret)
-    return acc[:, :c_out] if pad else acc
+    return bwa_matvec_kernel(qp, mp, cd, planes, pw, block_out=block_out,
+                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_out", "interpret"))
 def bwa_matvec(q: QuantizedLinear, x: jnp.ndarray, *, block_out: int = 256,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """y = BWA_linear(x) with the binary inner loop in the Pallas kernel.
 
     x [T, C_in] (original channel order).  Matches bwa_apply_planes.

@@ -1,0 +1,26 @@
+"""Device-aware Pallas execution mode.
+
+Every kernel wrapper takes ``interpret: bool | None = None``.  ``None``
+resolves from the runtime backend: CPU runs the kernel bodies in Pallas
+interpret mode (pure-jnp emulation — the only option there), while
+TPU/GPU compile them.  The old hard-coded ``interpret=True`` silently
+pinned real hardware to the emulator; a mis-set flag is now impossible
+by default and visible when explicit (serving logs the effective mode
+in ``packed_stats``).
+"""
+from __future__ import annotations
+
+import jax
+
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """True when the runtime backend needs Pallas interpret mode (CPU);
+    False on accelerators, where the kernels compile."""
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> the device-aware default; a concrete bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -119,7 +121,7 @@ def _paged_kernel(len_ref, bt_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
 def kv4_paged_decode_attention_kernel(q, k_packed, k_scales, v_packed,
                                       v_scales, kv_len, block_tables, *,
                                       s_chunk: int = 512,
-                                      interpret: bool = True):
+                                      interpret: bool | None = None):
     """Paged flash-decode: q [B, H, D] attends a POOL cache through
     per-row block tables.
 
@@ -138,6 +140,7 @@ def kv4_paged_decode_attention_kernel(q, k_packed, k_scales, v_packed,
     ``s_chunk`` must divide BS (block-table walking needs chunks that
     never straddle a page boundary).  Returns [B, H, D] f32.
     """
+    interpret = resolve_interpret(interpret)
     b, h, d = q.shape
     bs, hkv = k_packed.shape[1], k_packed.shape[2]
     g = h // hkv
@@ -199,12 +202,13 @@ def kv4_paged_decode_attention_kernel(q, k_packed, k_scales, v_packed,
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
 def kv4_decode_attention_kernel(q, k_packed, k_scales, v_packed, v_scales,
                                 kv_len, *, s_chunk: int = 512,
-                                interpret: bool = True):
+                                interpret: bool | None = None):
     """q [B, H, D]; packed caches [B, S, Hkv, D/2]; scales [B, S, Hkv, 2];
     kv_len int32 — scalar (all rows at the same fill) or [B] per-row
     valid lengths (slot-parallel batched decode: each batch row of a
     shared slot-indexed cache sits at its own position).
     Returns [B, H, D] f32."""
+    interpret = resolve_interpret(interpret)
     b, h, d = q.shape
     s_max, hkv = k_packed.shape[1], k_packed.shape[2]
     g = h // hkv

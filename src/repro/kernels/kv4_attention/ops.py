@@ -13,7 +13,7 @@ from repro.kernels.kv4_attention.kernel import (
 
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
 def kv4_decode_attention(q, cache, kv_len, *, s_chunk: int = 512,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q [B, H, D]; cache: repro.models.attention.KVCache (int4 layout).
 
     Batched-slot entry: ``kv_len`` may be a scalar or a [B] vector of
@@ -27,7 +27,7 @@ def kv4_decode_attention(q, cache, kv_len, *, s_chunk: int = 512,
 
 @functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
 def kv4_paged_decode_attention(q, cache, kv_len, block_tables, *,
-                               s_chunk: int = 512, interpret: bool = True):
+                               s_chunk: int = 512, interpret: bool | None = None):
     """Paged-pool entry: ``cache`` leaves are ``[NB+1, BS, ...]`` (one
     shared block pool, id 0 = null block) and ``block_tables`` [B, n_bt]
     maps each batch row's logical blocks to pool blocks.  The kernel

@@ -40,6 +40,11 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged pool size (default: fully provisioned "
                          "slots * ceil(max_len / block_size))")
+    ap.add_argument("--kernel-interpret", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="Pallas execution for the quantized backend: "
+                         "auto = compiled on TPU/GPU, interpret on CPU "
+                         "(the default); on/off force interpret mode")
     ap.add_argument("--prompt", action="append", default=None)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-stream sampling temperature (0 = greedy)")
@@ -74,16 +79,21 @@ def main():
                                            QuantConfig(group_size=32))
 
     prompts = args.prompt or ["def main(", "import ", "class "]
+    interpret = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
     engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512,
                          backend=args.backend, kv_layout=args.kv_layout,
                          block_size=args.block_size,
-                         num_blocks=args.num_blocks)
+                         num_blocks=args.num_blocks,
+                         kernel_interpret=interpret)
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
               f"packed to kernel-native W(1+1) "
               f"({ps['packed_bytes'] / 2**20:.2f} MiB), "
-              f"{ps['reference_linears']} on the reference fallback")
+              f"{ps['fused_projections']} slot-batched projections, "
+              f"{ps['reference_linears']} on the reference fallback; "
+              f"kernels {'interpret' if ps['kernel_interpret'] else 'compiled'}"
+              f" on {ps['kernel_backend']}")
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature)
     handles = [engine.submit(

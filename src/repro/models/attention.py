@@ -164,10 +164,20 @@ def attend_full(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0,
 
 def qkv_project(params: dict[str, Any], x: jnp.ndarray, n_heads: int,
                 n_kv: int, head_dim: int):
-    """Project to q/k/v heads (+ optional bias, e.g. qwen2)."""
-    q = dot(x, params["wq"])
-    k = dot(x, params["wk"])
-    v = dot(x, params["wv"])
+    """Project to q/k/v heads (+ optional bias, e.g. qwen2).
+
+    A serving-packed tree may carry the slot-batched ``wqkv`` container
+    (core.packed_linear.fuse_packed) instead of wq/wk/wv: one wide dot
+    — ONE decode kernel dispatch — then split at the q/k head boundary.
+    """
+    if "wqkv" in params:
+        qkv = dot(x, params["wqkv"])
+        q, k, v = jnp.split(
+            qkv, (n_heads * head_dim, (n_heads + n_kv) * head_dim), axis=-1)
+    else:
+        q = dot(x, params["wq"])
+        k = dot(x, params["wk"])
+        v = dot(x, params["wv"])
     if "bq" in params:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -332,7 +342,11 @@ def attention_prefill(params, x, *, n_heads, n_kv, head_dim, rope_theta,
     if rope_theta:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
-    cache = init_kv_cache(b, max_len, n_kv, head_dim, kv_bits=kv_bits)
+    # kv_bits=16: store at the model compute dtype — a hardcoded bf16
+    # buffer would silently round an f32 model's K/V, breaking the
+    # cached-vs-cacheless exactness the kv16 layout exists to provide
+    cache = init_kv_cache(b, max_len, n_kv, head_dim, kv_bits=kv_bits,
+                          dtype=k.dtype)
     cache = _store(cache, k, v, 0, kv_bits)
     # attend only the s written rows: the max_len-s masked tail columns
     # contribute exact zeros to the softmax, so dropping them is

@@ -376,7 +376,8 @@ class LanguageModel:
         def one(kind):
             if kind in ("attention", "crossdec"):
                 c = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
-                                           hd, kv_bits=self.kv_bits)
+                                           hd, kv_bits=self.kv_bits,
+                                           dtype=jnp.dtype(cfg.dtype))
                 c = c._replace(length=jnp.asarray(fill_len, jnp.int32))
                 if kind == "crossdec":
                     enc = (jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
@@ -388,7 +389,8 @@ class LanguageModel:
             if kind == "local":
                 c = attn_lib.init_kv_cache(batch, cfg.rglru.window,
                                            cfg.n_kv_heads, hd,
-                                           kv_bits=self.kv_bits)
+                                           kv_bits=self.kv_bits,
+                                           dtype=jnp.dtype(cfg.dtype))
                 return c._replace(
                     length=jnp.asarray(min(fill_len, cfg.rglru.window),
                                        jnp.int32))
@@ -434,7 +436,8 @@ class LanguageModel:
         hd = cfg.resolved_head_dim
         base = attn_lib.init_kv_cache(num_blocks + 1, block_size,
                                       cfg.n_kv_heads, hd,
-                                      kv_bits=self.kv_bits)
+                                      kv_bits=self.kv_bits,
+                                      dtype=jnp.dtype(cfg.dtype))
 
         def stack(n, tree):
             return jax.tree.map(

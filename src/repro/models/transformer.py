@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.model_config import ArchConfig, BlockKind, FFNKind
+from repro.core.quant_container import dot
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -250,6 +251,10 @@ def _apply_ffn(cfg: ArchConfig, sub, x):
         return None, 0.0
     f = sub["ffn"]
     if cfg.ffn_kind == FFNKind.SWIGLU:
+        if "w_gateup" in f:   # serving-packed slot-batched gate/up:
+            gu = dot(x, f["w_gateup"])  # one wide dot, one decode dispatch
+            g, u = jnp.split(gu, 2, axis=-1)
+            return dot(jax.nn.silu(g) * u, f["w_down"]), 0.0
         return swiglu(x, f["w_gate"], f["w_up"], f["w_down"]), 0.0
     if cfg.ffn_kind == FFNKind.GELU:
         return gelu_mlp(x, f["w1"], f["b1"], f["w2"], f["b2"]), 0.0
@@ -374,7 +379,8 @@ def _fill_cache(cfg: ArchConfig, kv, window: int, max_len: int | None,
     k, v = kv
     b, s, hkv, hd = k.shape
     max_len = window if window else (max_len or cfg.max_seq_len)
-    cache = attn.init_kv_cache(b, max_len, hkv, hd, kv_bits=kv_bits)
+    cache = attn.init_kv_cache(b, max_len, hkv, hd, kv_bits=kv_bits,
+                               dtype=k.dtype)
     if window:
         keep = min(window, s)
         k, v = k[:, -keep:], v[:, -keep:]

@@ -71,7 +71,8 @@ class ServeEngine:
                  max_len: int = 512, eos_id: int | None = None,
                  seed: int = 0, chunk_buckets=DEFAULT_CHUNK_BUCKETS,
                  overflow_policy: str = "truncate",
-                 backend: str = "reference", kernel_interpret: bool = True,
+                 backend: str = "reference",
+                 kernel_interpret: bool | None = None,
                  kv_layout: str = "dense", block_size: int = 32,
                  num_blocks: int | None = None):
         if batch_slots < 1:

@@ -51,7 +51,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packed_linear import kernel_serving, pack_model_params
+from repro.core.packed_linear import (
+    kernel_serving,
+    kernel_trace_counts,
+    pack_model_params,
+    reset_kernel_trace_counts,
+)
+from repro.kernels.dispatch import resolve_interpret
 from repro.serve.kv_manager import write_slot_row
 from repro.serve.sampler import sample_tokens_batched
 
@@ -75,7 +81,8 @@ def _copy_block(caches, src, dst):
 class ModelRunner:
     def __init__(self, model, params, *, max_len: int,
                  chunk_buckets=DEFAULT_CHUNK_BUCKETS,
-                 backend: str = "reference", kernel_interpret: bool = True,
+                 backend: str = "reference",
+                 kernel_interpret: bool | None = None,
                  paged: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -83,7 +90,10 @@ class ModelRunner:
         self.model = model
         self.backend = backend
         self.paged = paged
-        self.kernel_interpret = kernel_interpret
+        # None = device-aware default: compiled on TPU/GPU, interpret on
+        # CPU (kernels/dispatch.py).  The resolved value is logged into
+        # pack_stats so the effective mode is always observable.
+        self.kernel_interpret = resolve_interpret(kernel_interpret)
         self.pack_stats = None
         if backend == "quantized":
             params, stats = pack_model_params(model, params)
@@ -92,6 +102,8 @@ class ModelRunner:
                     "backend='quantized' needs W(1+1)A(1x4)-quantized "
                     "params (run quantize_model_sequential first); got a "
                     "pure-fp tree")
+            stats["kernel_interpret"] = self.kernel_interpret
+            stats["kernel_backend"] = jax.default_backend()
             self.pack_stats = stats
         self.params = params
         self.max_len = max_len
@@ -122,19 +134,28 @@ class ModelRunner:
 
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+        # per-mode kernel dispatch counts captured at trace time (the
+        # python body of a jitted fn runs only on compile):
+        # {"decode": {"decode_gemv": ..., "decode_linears": ...}, ...}
+        self.trace_counts: dict[str, dict] = {}
 
     def _traced(self, fn, mode: str):
         """Backend shim: on the quantized backend the function is traced
         inside the serving kernel mode, baking the Pallas-kernel routing
         into the jitted computation; the reference backend traces it
         bare.  Pure trace-time — the per-call overhead is one context
-        check."""
+        check.  Each trace also snapshots the kernel dispatch counters
+        into ``self.trace_counts[mode]`` (how many Pallas calls one step
+        costs — the fused-projection win, asserted by serve-smoke)."""
         if self.backend != "quantized":
             return fn
 
         def traced(*args):
+            reset_kernel_trace_counts()
             with kernel_serving(mode, interpret=self.kernel_interpret):
-                return fn(*args)
+                out = fn(*args)
+            self.trace_counts[mode] = dict(kernel_trace_counts())
+            return out
         return traced
 
     # ---------------- compile-cache observability ----------------

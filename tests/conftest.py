@@ -22,6 +22,20 @@ def _node_seed(request) -> int:
     return zlib.crc32(request.node.nodeid.encode()) % (2**31)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jit_caches():
+    """Drop compiled executables between test modules.
+
+    One pytest process compiles thousands of jitted programs over the
+    full suite; the live executable caches pin JIT code/data mappings,
+    and on hosts with the default ``vm.max_map_count`` (65530) the
+    process can run out of mmap slots late in the run — XLA's compiler
+    then segfaults instead of raising.  Module-scoped fixtures re-jit
+    after the clear, so this only bounds growth, never correctness."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def rng(request) -> np.random.Generator:
     """Seeded numpy Generator; stable per test node."""

@@ -1,0 +1,208 @@
+"""Fused decode path: the single-dispatch act_quant+popcount GEMV
+kernel (kernels/bwa_fused), slot-batched projection fusion
+(``fuse_packed`` / ``pack_model_params``), and the trace-time dispatch
+counters serve-smoke asserts on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.packed_linear import (
+    PackedLinear,
+    fuse_packed,
+    kernel_serving,
+    kernel_trace_counts,
+    pack_linear,
+    pack_model_params,
+    packed_dot,
+    reset_kernel_trace_counts,
+)
+from repro.core.quant_container import dot, quantized_dot
+from repro.kernels.act_quant.ops import act_quant_pack
+from repro.kernels.bwa_fused.ops import bwa_fused_gemv
+from repro.kernels.bwa_fused.ref import bwa_fused_gemv_ref
+from repro.kernels.bwa_matvec.ops import bwa_matvec_planes, centers_to_cd, \
+    plane_weights
+from repro.models.model import build_model
+
+from test_packed_linear import random_qlinear
+
+
+def _rand_operands(rng, t, c, c_out, group=32):
+    g, wg = c // group, group // 32
+    x = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32))
+    qp = jnp.asarray(rng.integers(0, 2**32, (c_out, g, wg), dtype=np.uint32))
+    mp = jnp.asarray(rng.integers(0, 2**32, (c_out, g, wg), dtype=np.uint32))
+    cd = jnp.asarray(rng.normal(size=(c_out, g, 4)).astype(np.float32) * 0.1)
+    pw = jnp.asarray((2.0 ** np.arange(4) *
+                      (1 + 0.02 * rng.normal(size=4))).astype(np.float32))
+    rs = jnp.asarray(rng.normal(size=c_out).astype(np.float32))
+    return x, qp, mp, cd, pw, rs
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("t,c,c_out,bo", [
+        (1, 32, 16, 16),     # single decode token
+        (4, 64, 48, 16),     # multi-slot batch
+        (3, 128, 40, 16),    # ragged C_out (40 % 16 != 0): zero-pad+slice
+        (5, 64, 7, 256),     # C_out smaller than the tile
+    ])
+    def test_matches_ref(self, rng, t, c, c_out, bo):
+        ops = _rand_operands(rng, t, c, c_out)
+        y = bwa_fused_gemv(*ops, block_out=bo)
+        assert y.shape == (t, c_out)
+        assert_trees_close(y, bwa_fused_gemv_ref(*ops), rtol=2e-5, atol=2e-5)
+
+    def test_matches_unfused_two_kernel_path(self, rng):
+        """The fused grid reproduces act_quant -> bwa_matvec -> epilogue
+        (tight tolerance: the only divergence allowed is FMA contraction
+        in the in-kernel epilogue)."""
+        t, c, c_out, group = 4, 96, 56, 32
+        x, qp, mp, cd, pw, rs = _rand_operands(rng, t, c, c_out, group)
+        y = bwa_fused_gemv(x, qp, mp, cd, pw, rs, block_out=16)
+        planes, mu, z = act_quant_pack(x)
+        planes = planes.reshape(t, 4, c // group, group // 32)
+        acc = bwa_matvec_planes(qp, mp, cd, planes, pw, block_out=16)
+        want = mu * acc - (mu * z) * rs
+        # the accumulator itself is bit-identical; check through mu
+        np.testing.assert_array_equal(
+            np.asarray(bwa_fused_gemv(x, qp, mp, cd, pw,
+                                      jnp.zeros_like(rs), block_out=16)),
+            np.asarray(mu * acc))
+        assert_trees_close(y, want, rtol=1e-6, atol=1e-6)
+
+    def test_degenerate_rows_exact(self, rng):
+        """hi == lo rows (constant / all-zero) encode exactly via the
+        mu=1, z=-lo special case — no garbage codes, finite output,
+        ref agreement."""
+        c, c_out = 64, 24
+        _, qp, mp, cd, pw, rs = _rand_operands(rng, 1, c, c_out)
+        x = jnp.stack([
+            jnp.zeros((c,)),                      # all-zero row
+            jnp.full((c,), 7.5),                  # constant positive
+            jnp.full((c,), -3.25),                # constant negative
+            jnp.full((c,), 1e-30),                # constant denormal-ish
+            jnp.asarray(rng.normal(size=c).astype(np.float32)),  # control
+        ]).astype(jnp.float32)
+        y = bwa_fused_gemv(x, qp, mp, cd, pw, rs)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert_trees_close(y, bwa_fused_gemv_ref(x, qp, mp, cd, pw, rs),
+                           rtol=2e-5, atol=2e-5)
+
+
+class TestFusePacked:
+    def _parts(self, rng, c_outs=(48, 16, 16), *, c_in=96, n_outlier=32):
+        """Sibling projections of the same input: shared perm/gamma."""
+        head = random_qlinear(rng, c_in, c_outs[0], n_outlier=n_outlier)
+        parts = [head] + [
+            dataclasses.replace(
+                random_qlinear(rng, c_in, co, n_outlier=n_outlier),
+                perm=head.perm, act_gamma=head.act_gamma)
+            for co in c_outs[1:]]
+        return parts
+
+    def test_fused_dot_matches_parts_on_every_path(self, rng):
+        parts = self._parts(rng)
+        fused = fuse_packed([pack_linear(q) for q in parts])
+        assert fused is not None
+        assert fused.splits == (48, 16, 16) and fused.c_out == 80
+        x = jnp.asarray(rng.normal(size=(3, 96)).astype(np.float32))
+        want = jnp.concatenate([quantized_dot(x, q) for q in parts], -1)
+        # no-mode: bit-identical reference routing on the wide container
+        assert_trees_close(dot(x, fused), want, rtol=2e-5, atol=2e-5)
+        for mode in ("decode", "prefill"):
+            with kernel_serving(mode):
+                got = jax.jit(packed_dot)(x, fused)
+            assert_trees_close(got, want, rtol=2e-4, atol=2e-4,
+                               err_msg=mode)
+
+    def test_mismatch_falls_back(self, rng):
+        a, b = (pack_linear(random_qlinear(rng, 64, 32)) for _ in range(2))
+        assert not np.array_equal(np.asarray(a.perm), np.asarray(b.perm))
+        assert fuse_packed([a, b]) is None          # different perm
+        assert fuse_packed([a]) is None             # nothing to batch
+        pb = pack_linear(random_qlinear(rng, 64, 32, bias=True))
+        pb = dataclasses.replace(pb, perm=a.perm, act_gamma=a.act_gamma)
+        assert fuse_packed([a, pb]) is None         # biased member
+        already = fuse_packed([a, dataclasses.replace(
+            b, perm=a.perm, act_gamma=a.act_gamma)])
+        assert already is not None
+        assert fuse_packed([already, a]) is None    # no re-fusing fused
+
+    def test_stacked_layer_dims(self, rng):
+        """Scan-over-layers trees fuse along the C_out axis, not the
+        stack axis."""
+        from repro.core.quantize_model import _stack_qlinears
+        stacks = []
+        for c_out in (32, 16):
+            qs = self._parts(rng, (c_out, c_out, c_out), c_in=64,
+                             n_outlier=0)
+            stacks.append(pack_linear(_stack_qlinears(qs)))
+        fused = fuse_packed([dataclasses.replace(
+            stacks[1], perm=stacks[0].perm, act_gamma=stacks[0].act_gamma)
+            if i else stacks[0] for i in range(2)])
+        assert fused is not None
+        assert fused.qp.shape == (3, 48, 2, 1)      # [units, C_out, G, Wg]
+        assert fused.splits == (32, 16)
+
+    def test_trace_counters(self, rng):
+        parts = self._parts(rng, (32, 16, 16))
+        fused = fuse_packed([pack_linear(q) for q in parts])
+        single = pack_linear(parts[0])
+        x = jnp.asarray(rng.normal(size=(2, 96)).astype(np.float32))
+        reset_kernel_trace_counts()
+        with kernel_serving("decode"):
+            packed_dot(x, fused)
+            packed_dot(x, single)
+        counts = kernel_trace_counts()
+        assert counts["decode_gemv"] == 2           # one dispatch each
+        assert counts["decode_linears"] == 4        # ...serving 3 + 1
+        assert counts["decode_act_quant"] == 0      # fused into the GEMV
+
+
+class TestModelFusion:
+    @pytest.mark.slow
+    def test_pack_model_params_slot_batches(self):
+        """A dense tiny model packs with QKV and gate/up slot-batched:
+        wqkv / w_gateup replace the member leaves, stats count both the
+        source linears AND the fusions, and the packed tree still
+        matches the reference quantized forward."""
+        from repro.core.quantize_model import quantize_model_sequential
+        cfg = tiny_variant(get_arch("llama1-7b"), n_layers=2).replace(
+            vocab_size=64, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0, 64)
+        qparams = quantize_model_sequential(
+            model, params, toks,
+            QuantConfig(group_size=32, n_outlier_groups=0, em_iters=2,
+                        calib_tokens=64))
+        packed, stats = pack_model_params(model, qparams)
+        # source-linear accounting is unchanged by fusion
+        assert stats["packed_linears"] == stats["quantized_linears_total"]
+        assert stats["fused_projections"] == 2      # wqkv + w_gateup
+        for sub in (packed["blocks"]["sub_0"],):
+            mix = sub["mix"]
+            assert isinstance(mix["wqkv"], PackedLinear)
+            assert mix["wqkv"].splits and len(mix["wqkv"].splits) == 3
+            assert not any(k in mix for k in ("wq", "wk", "wv"))
+            ffn = sub["ffn"]
+            assert isinstance(ffn["w_gateup"], PackedLinear)
+            assert ffn["w_gateup"].splits == (cfg.d_ff, cfg.d_ff)
+            assert "w_gate" not in ffn and "w_up" not in ffn
+        # fused tree still computes the same function (reference mode)
+        x = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, 64)
+        want = model.apply(qparams, x)
+        got = model.apply(packed, x)
+        assert_trees_close(got, want, rtol=2e-4, atol=2e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

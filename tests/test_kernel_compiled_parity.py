@@ -1,0 +1,112 @@
+"""Interpret-vs-compiled parity for every Pallas kernel family.
+
+On CPU there is nothing to compare — interpret mode IS the only
+execution mode — so the whole module skips.  On a TPU/GPU runner it
+pins down that the compiled lowering computes the same function the
+interpret-mode tests validate against the pure-JAX references, i.e.
+that `--kernel-interpret auto` (compiled on accelerators) serves the
+same streams CI verified on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_trees_close
+
+from repro.core.kvquant import kv_quantize
+from repro.kernels.act_quant.ops import act_quant_pack
+from repro.kernels.bwa_fused.ops import bwa_fused_gemv
+from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
+from repro.kernels.bwa_matvec.ops import bwa_matvec_planes
+from repro.kernels.dispatch import default_interpret, resolve_interpret
+from repro.kernels.kv4_attention.kernel import kv4_decode_attention_kernel
+
+from test_packed_linear import random_qlinear
+
+pytestmark = pytest.mark.skipif(
+    jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm"),
+    reason="interpret-vs-compiled parity needs an accelerator backend")
+
+
+def _both(fn):
+    """Run ``fn(interpret=...)`` in both modes; also pins the auto
+    default (None) to the compiled path on accelerators."""
+    assert default_interpret() is False
+    assert resolve_interpret(None) is False
+    return fn(interpret=True), fn(interpret=False)
+
+
+class TestCompiledParity:
+    def test_act_quant(self, rng):
+        x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32) *
+                        np.logspace(-3, 3, 8)[:, None])
+        (pi, mi, zi), (pc, mc, zc) = _both(
+            lambda interpret: act_quant_pack(x, interpret=interpret))
+        assert_trees_close(mi, mc, rtol=1e-6, atol=0)
+        # 1-ULP division differences between lowerings can flip a
+        # round-half tie: same ±1-level tolerance the ref tests use
+        assert np.abs(np.asarray(zi) - np.asarray(zc)).max() <= 1
+        bits_i = np.asarray(pi)[..., None] >> np.arange(32) & 1
+        bits_c = np.asarray(pc)[..., None] >> np.arange(32) & 1
+        lv = lambda b: (b.reshape(8, 4, -1) *
+                        (2 ** np.arange(4))[None, :, None]).sum(1)
+        assert np.abs(lv(bits_i) - lv(bits_c)).max() <= 1
+
+    def test_bwa_matvec(self, rng):
+        t, c, c_out, group = 4, 128, 40, 32
+        qp = jnp.asarray(rng.integers(0, 2**32, (c_out, c // group,
+                                                 group // 32),
+                                      dtype=np.uint32))
+        mp = jnp.asarray(rng.integers(0, 2**32, qp.shape, dtype=np.uint32))
+        cd = jnp.asarray(rng.normal(size=(c_out, c // group, 4))
+                         .astype(np.float32) * 0.1)
+        planes = jnp.asarray(rng.integers(0, 2**32,
+                                          (t, 4, c // group, group // 32),
+                                          dtype=np.uint32))
+        pw = jnp.asarray((2.0 ** np.arange(4)).astype(np.float32))
+        yi, yc = _both(lambda interpret: bwa_matvec_planes(
+            qp, mp, cd, planes, pw, block_out=16, interpret=interpret))
+        assert_trees_close(yi, yc, rtol=1e-5, atol=1e-5)
+
+    def test_bwa_fused_gemv(self, rng):
+        t, c, c_out, group = 3, 96, 56, 32
+        x = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32))
+        qp = jnp.asarray(rng.integers(0, 2**32, (c_out, c // group,
+                                                 group // 32),
+                                      dtype=np.uint32))
+        mp = jnp.asarray(rng.integers(0, 2**32, qp.shape, dtype=np.uint32))
+        cd = jnp.asarray(rng.normal(size=(c_out, c // group, 4))
+                         .astype(np.float32) * 0.1)
+        pw = jnp.asarray((2.0 ** np.arange(4)).astype(np.float32))
+        rs = jnp.asarray(rng.normal(size=c_out).astype(np.float32))
+        yi, yc = _both(lambda interpret: bwa_fused_gemv(
+            x, qp, mp, cd, pw, rs, block_out=16, interpret=interpret))
+        assert_trees_close(yi, yc, rtol=2e-5, atol=2e-5)
+
+    def test_bwa_matmul(self, rng):
+        q = random_qlinear(rng, 128, 48, n_outlier=32)
+        x = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+        yi, yc = _both(lambda interpret: bwa_matmul_dequant(
+            q, x, block_t=8, block_n=16, block_k=64, interpret=interpret))
+        assert_trees_close(yi, yc, rtol=2e-4, atol=2e-4)
+
+    def test_kv4_attention(self, rng):
+        b, s_max, h, hkv, d = 2, 256, 4, 2, 32
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s_max, hkv, d))
+                        .astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s_max, hkv, d))
+                        .astype(np.float32))
+        kp, kmu, kz = kv_quantize(k, 4)
+        vp, vmu, vz = kv_quantize(v, 4)
+        ks = jnp.concatenate([kmu, kz], -1)
+        vs = jnp.concatenate([vmu, vz], -1)
+        kv_len = jnp.asarray(100, jnp.int32)
+        yi, yc = _both(lambda interpret: kv4_decode_attention_kernel(
+            q, kp, ks, vp, vs, kv_len, s_chunk=64, interpret=interpret))
+        assert_trees_close(yi, yc, rtol=2e-4, atol=2e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

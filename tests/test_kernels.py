@@ -215,6 +215,109 @@ class TestOddShapeParity:
         assert diff.max() <= 1        # round-half ties flip one level
         assert (diff > 0).mean() < 0.01
 
+    @pytest.mark.parametrize("c_out,block_out", [
+        (40, 16),      # ragged: 40 % 16 != 0 (used to hit a bare assert)
+        (7, 256),      # C_out below the tile
+        (100, 64),     # one full tile + ragged tail
+    ])
+    def test_bwa_matvec_ragged_c_out(self, rng, c_out, block_out):
+        """The GEMV kernel entry itself zero-pads C_out and slices —
+        serving-shaped head dims never need tile alignment."""
+        g, wg, t = 2, 1, 3
+        q = jnp.asarray(rng.integers(0, 2**32, (c_out, g, wg),
+                                     dtype=np.uint32))
+        m = jnp.asarray(rng.integers(0, 2**32, (c_out, g, wg),
+                                     dtype=np.uint32))
+        cd = jnp.asarray(rng.normal(size=(c_out, g, 4)).astype(np.float32)
+                         * 0.1)
+        planes = jnp.asarray(rng.integers(0, 2**32, (t, 4, g, wg),
+                                          dtype=np.uint32))
+        pw = jnp.asarray([1.0, 2.0, 4.0, 8.0], jnp.float32)
+        got = bwa_matvec_kernel(q, m, cd, planes, pw, block_out=block_out)
+        want = bwa_matvec_ref(q, m, cd, planes, pw)
+        assert got.shape == (t, c_out)
+        assert_trees_close(got, want, rtol=1e-5, atol=1e-4)
+
+
+class TestActQuantDegenerate:
+    """RTN-INT4 degenerate / extreme rows: hi == lo used to collapse mu
+    to eps and z to -round(lo/eps) — garbage codes far past float32
+    integer precision.  The special case (xq = 0, mu = 1, z = -lo)
+    encodes such rows EXACTLY, identically in the kernel and in
+    core.rtn (cross-backend bit parity)."""
+
+    _ROWS = {
+        "zeros": lambda c: np.zeros(c),
+        "const_pos": lambda c: np.full(c, 3.25),
+        "const_neg": lambda c: np.full(c, -17.0),
+        "const_large": lambda c: np.full(c, 6.1e8),
+        "const_tiny": lambda c: np.full(c, 1e-30),
+        "huge_range": lambda c: np.linspace(-1e8, 1e8, c),
+        "tiny_range": lambda c: 5.0 + np.linspace(0, 1e-6, c),
+        "one_outlier": lambda c: np.r_[np.zeros(c - 1), 1e6],
+    }
+
+    @staticmethod
+    def _levels(planes):
+        """[T, 4, C/32] plane words -> [T, C] int levels."""
+        t = planes.shape[0]
+        bits = np.asarray(planes)[..., None] >> np.arange(32) & 1
+        vals = bits.reshape(t, 4, -1)
+        return (vals * (2 ** np.arange(4))[None, :, None]).sum(1)
+
+    def _check(self, x):
+        """Kernel vs ref: exact on degenerate rows, the repo-wide ±1-
+        level tie tolerance elsewhere (1-ULP division differences can
+        flip a round-half tie — same class TestActQuantKernel allows)."""
+        planes, mu, z = act_quant_pack(x)
+        rplanes, rmu, rz = act_quant_pack_ref(x)
+        assert bool(jnp.all(jnp.isfinite(mu))) and \
+            bool(jnp.all(jnp.isfinite(z)))
+        assert_trees_close(mu, rmu, rtol=1e-6, atol=0)
+        assert np.abs(np.asarray(z) - np.asarray(rz)).max() <= 1
+        assert np.abs(self._levels(planes) - self._levels(rplanes)).max() <= 1
+        xr = np.asarray(x)
+        degen = xr.max(-1) == xr.min(-1)
+        if degen.any():     # degenerate rows: EXACT, both paths
+            np.testing.assert_array_equal(np.asarray(mu)[degen, 0], 1.0)
+            np.testing.assert_array_equal(np.asarray(z)[degen],
+                                          np.asarray(rz)[degen])
+            np.testing.assert_array_equal(self._levels(planes)[degen], 0)
+            # dequant mu * (xq - z) reconstructs the constant exactly
+            np.testing.assert_array_equal(
+                (np.asarray(mu) * (self._levels(planes)
+                                   - np.asarray(z)))[degen],
+                xr[degen])
+        return planes, mu, z
+
+    @pytest.mark.parametrize("name", sorted(_ROWS))
+    def test_curated_rows(self, name):
+        c = 64
+        row = self._ROWS[name](c).astype(np.float32)
+        self._check(jnp.asarray(np.stack([row, np.linspace(-1, 1, c)])
+                                .astype(np.float32)))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_seeded_extreme_sweep(self, seed):
+        """Seeded stand-in for a hypothesis sweep (hypothesis is a
+        dev-only extra): random mixes of degenerate, huge-dynamic-range
+        and ordinary rows stay finite and kernel ≈ ref."""
+        r = np.random.default_rng(seed)
+        c = int(r.choice([32, 64, 128]))
+        rows = []
+        for _ in range(int(r.integers(2, 7))):
+            kind = r.integers(4)
+            if kind == 0:
+                rows.append(np.full(
+                    c, r.normal() * 10.0 ** float(r.integers(-20, 20))))
+            elif kind == 1:
+                rows.append(np.zeros(c))
+            elif kind == 2:
+                rows.append(r.normal(size=c) * 10 ** r.integers(0, 9))
+            else:
+                rows.append(r.normal(size=c))
+        self._check(jnp.asarray(np.stack(rows).astype(np.float32)))
+
 
 if __name__ == "__main__":
     pytest.main([__file__, "-x", "-q"])
