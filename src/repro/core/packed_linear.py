@@ -126,7 +126,8 @@ def _bump(key: str, by: int = 1) -> None:
         "qp", "mp", "centers", "w8", "w8_scale",
         "perm", "act_gamma", "row_sum", "bias",
     ),
-    meta_fields=("group_size", "c_in", "c_out", "n_outlier", "splits"),
+    meta_fields=("group_size", "c_in", "c_out", "n_outlier", "splits",
+                 "shard", "tp"),
 )
 @dataclass
 class PackedLinear:
@@ -143,6 +144,29 @@ class PackedLinear:
     The decode GEMV then serves all members in ONE kernel dispatch; the
     model layer splits the output (attention.qkv_project / layers-level
     swiglu routing).
+
+    ``shard`` / ``tp`` mark a tensor-parallel pack layout built by
+    ``shard_packed`` (meta only — the arrays stay global-size until a
+    ``shard_map`` slices them by the specs in
+    ``distributed/sharding.py``):
+
+    - ``"out"`` (column-parallel; wqkv / w_gateup / unfused members):
+      the C_out rows are RE-ORDERED so every contiguous 1/tp slice is a
+      complete local fused projection (member widths interleaved
+      per-shard), then sharded on the C_out axis.  No comms — the input
+      is replicated, so the kernel's per-token act-quant stats stay
+      global and each output row is bit-identical to the unsharded run.
+    - ``"in"`` (row-parallel; w_o / w_down): the PERMUTED normal-channel
+      groups are zero-padded to a multiple of tp group-blocks (group
+      blocks never straddle shards) and sharded on the group axis;
+      outlier columns likewise.  ``row_sum`` stays the GLOBAL full-row
+      value, replicated: the decode path psums the raw pre-epilogue
+      accumulators and applies the (mu, z, row_sum) epilogue once on
+      the summed result — bit-identical to the tp=1 fused kernel.
+
+    A tp>1 container is serving-runner internal: outside ``tp_serving``
+    its reordered/padded layout no longer matches the reference
+    consumers, so ``packed_dot`` refuses to run it there.
     """
 
     qp: jnp.ndarray          # uint32 [.., C_out, G, B/32]  sign planes
@@ -159,6 +183,8 @@ class PackedLinear:
     c_out: int = 0
     n_outlier: int = 0
     splits: tuple[int, ...] = ()
+    shard: str = ""              # "" | "out" | "in" (tensor-parallel)
+    tp: int = 1                  # model-axis size the layout was built for
 
     @property
     def c_norm(self) -> int:
@@ -198,6 +224,12 @@ def unpack_linear(p: PackedLinear) -> QuantizedLinear:
     fused container unpacks to ONE wide ``QuantizedLinear`` — correct
     for every consumer (reference dot / prefill GEMM), the caller splits
     the output columns."""
+    if p.shard == "in" and p.tp > 1:
+        # the group axis is zero-padded to the shard grid; the flat
+        # [C_out, c_norm//32] reference layout no longer exists
+        raise ValueError(
+            "cannot unpack a row-parallel (shard='in') PackedLinear — "
+            "tp-sharded containers are serving-runner internal")
     words = p.c_norm // 32
     return QuantizedLinear(
         q_packed=p.qp.reshape(*p.qp.shape[:-2], words),
@@ -247,6 +279,110 @@ def fuse_packed(parts: list[PackedLinear]) -> PackedLinear | None:
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel pack-time layouts
+# ---------------------------------------------------------------------------
+
+def _col_shard_order(widths: tuple[int, ...], tp: int) -> np.ndarray:
+    """C_out row order for a column-parallel shard layout: shard ``s``'s
+    contiguous 1/tp slice holds the ``s``-th fraction of EVERY member
+    (``[q_s, k_s, v_s]`` for wqkv), so a shard-local slice is a complete
+    local fused projection and the model's local-width splits line up."""
+    offs = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+    order = []
+    for s in range(tp):
+        for w, o in zip(widths, offs):
+            per = w // tp
+            order.extend(range(o + s * per, o + (s + 1) * per))
+    return np.asarray(order, np.int32)
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
+    cur = x.shape[axis]
+    if cur == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis % x.ndim] = (0, to - cur)
+    return jnp.pad(x, pads)
+
+
+def shard_packed(p: PackedLinear, shard: str, tp: int) -> PackedLinear:
+    """Re-lay a packed container for a ``tp``-way model axis.
+
+    ``"out"`` (column-parallel) re-orders the C_out rows into per-shard
+    member-interleaved blocks; every member width must divide ``tp``.
+    ``"in"`` (row-parallel) zero-pads the quant-group axis (and the
+    outlier columns) to a multiple of ``tp`` so group blocks never
+    straddle shards — padded groups have all-zero centers, which the
+    kernels contract to exactly 0.0.  ``row_sum`` stays the GLOBAL
+    full-row value (replicated across shards): the decode path psums the
+    raw pre-epilogue accumulators and applies the ``(mu, z, row_sum)``
+    epilogue ONCE on the summed result, so no per-shard partial sums
+    exist anywhere.  Arrays stay global-size here;
+    ``distributed/sharding.py`` supplies the PartitionSpecs that slice
+    them.
+    """
+    if tp <= 1:
+        return p
+    if shard == "out":
+        widths = p.splits or (p.c_out,)
+        bad = [w for w in widths if w % tp != 0]
+        if bad:
+            raise ValueError(
+                f"column-parallel shard: member widths {tuple(widths)} "
+                f"must each divide tp={tp}")
+        order = jnp.asarray(_col_shard_order(tuple(widths), tp))
+        return PackedLinear(
+            qp=jnp.take(p.qp, order, axis=-3),
+            mp=jnp.take(p.mp, order, axis=-3),
+            centers=jnp.take(p.centers, order, axis=-3),
+            w8=jnp.take(p.w8, order, axis=-2),
+            w8_scale=jnp.take(p.w8_scale, order, axis=-2),
+            perm=p.perm, act_gamma=p.act_gamma,
+            row_sum=jnp.take(p.row_sum, order, axis=-1),
+            bias=(None if p.bias is None
+                  else jnp.take(p.bias, order, axis=-1)),
+            group_size=p.group_size, c_in=p.c_in, c_out=p.c_out,
+            n_outlier=p.n_outlier, splits=p.splits, shard="out", tp=tp)
+    if shard == "in":
+        g = p.c_norm // p.group_size
+        g_pad = -(-g // tp) * tp
+        k = p.n_outlier
+        k_pad = -(-k // tp) * tp if k else 0
+        return PackedLinear(
+            qp=_pad_axis(p.qp, -2, g_pad),
+            mp=_pad_axis(p.mp, -2, g_pad),
+            centers=_pad_axis(p.centers, -2, g_pad),
+            w8=_pad_axis(p.w8, -1, k_pad),
+            w8_scale=p.w8_scale, perm=p.perm, act_gamma=p.act_gamma,
+            row_sum=p.row_sum, bias=p.bias,
+            group_size=p.group_size, c_in=p.c_in, c_out=p.c_out,
+            n_outlier=p.n_outlier, splits=p.splits, shard="in", tp=tp)
+    raise ValueError(f"shard must be 'out' or 'in', got {shard!r}")
+
+
+def packed_bytes_per_device(p: PackedLinear) -> int:
+    """Per-device packed bytes under the container's shard layout (same
+    fp16/fp32 accounting convention as ``packed_bytes``): sharded fields
+    divide by tp, replicated fields (perm / act_gamma, plus the
+    output-side scales and bias of a row shard) count in full."""
+    if p.tp <= 1 or not p.shard:
+        return p.packed_bytes()
+    tp = p.tp
+    n = (p.qp.size * 4 + p.mp.size * 4 + p.centers.size * 2) // tp
+    n += 4 * 4 + p.perm.size * 4                    # act_gamma + perm
+    if p.shard == "out":
+        n += (p.w8.size + p.w8_scale.size * 2 + p.row_sum.size * 2) // tp
+        if p.bias is not None:
+            n += p.bias.size * 2 // tp
+    else:
+        n += p.w8.size // tp + p.w8_scale.size * 2
+        n += p.row_sum.size * 2                     # replicated (global)
+        if p.bias is not None:
+            n += p.bias.size * 2
+    return int(n)
+
+
+# ---------------------------------------------------------------------------
 # Dispatching linear application
 # ---------------------------------------------------------------------------
 
@@ -292,22 +428,176 @@ def _matmul_path(xf: jnp.ndarray, p: PackedLinear, interpret: bool):
     return bwa_matmul_dequant(unpack_linear(p), xf, interpret=interpret)
 
 
+def _row_parallel_input(xf: jnp.ndarray, p: PackedLinear, ctx, mode: str):
+    """Shared front half of both row-parallel paths: re-assemble the
+    head-/F-sharded input into the full row (the importance permutation
+    scatters ORIGINAL channels across shards, and the per-token dynamic
+    activation quantization needs GLOBAL row statistics — neither
+    survives a local slice), then permute and split it exactly like the
+    unsharded paths do.  The gather moves exact bytes, so every float
+    computed from it matches the unsharded sequence bit-for-bit."""
+    from repro.distributed.tp import tp_all_gather
+    xg = tp_all_gather(xf, ctx, mode)           # [T, c_in]
+    xp = jnp.take(xg, p.perm, axis=-1)
+    return xp[..., : p.c_norm], xp[..., p.c_norm:]
+
+
+def _local_slice(x: jnp.ndarray, ctx, per_shard: int):
+    """Zero-pad the last axis to ``tp * per_shard`` and take this
+    shard's slice (padding is exact: padded columns meet all-zero weight
+    groups / outlier columns)."""
+    x = _pad_axis(x, -1, ctx.tp * per_shard)
+    s = jax.lax.axis_index(ctx.axis)
+    return jax.lax.dynamic_slice_in_dim(x, s * per_shard, per_shard,
+                                        axis=x.ndim - 1)
+
+
+def _matvec_row_parallel(xf: jnp.ndarray, p: PackedLinear, ctx,
+                         interpret: bool):
+    """Row-parallel decode: all-gather the sharded input, quantize the
+    FULL permuted row in XLA (``quantize_act_int4_planes`` runs the
+    identical float sequence to the fused kernel's in-grid quant), slice
+    this shard's packed plane groups, contract them through the existing
+    ``bwa_matvec_planes`` popcount kernel, ``psum`` the RAW pre-epilogue
+    accumulators once, then apply the (mu, z, row_sum) epilogue and the
+    outlier correction ONCE on the summed result.
+
+    The epilogue must come AFTER the psum: f32 multiplication does not
+    distribute over a partition of the sum (``mu*(a0+a1) != mu*a0 +
+    mu*a1`` by ulps), and those ulps flip greedy argmax ties over long
+    decodes.  Summing raw accumulators instead keeps the float sequence
+    identical to the tp=1 fused kernel (the outlier pieces are integers
+    carried in f32 — ``|iacc| < 2^24`` — so their psum is exact; the
+    plane ``acc`` partials are each shard's contiguous group chunk,
+    merged in ring order = the fused kernel's sequential group order
+    for the shipped G-per-linear counts).  All three pieces ride in ONE
+    psum packed along the token axis, so the decode comms budget stays
+    at one all-gather + one psum per row-parallel linear."""
+    from repro.core.act_decompose import quantize_act_int4_planes
+    from repro.distributed.tp import tp_psum
+    from repro.kernels.bwa_matvec.ops import (
+        bwa_matvec_planes,
+        centers_to_cd,
+        int8_outlier_epilogue,
+        int8_outlier_iacc,
+        int8_outlier_stats,
+        pack_planes,
+        plane_weights,
+    )
+
+    _bump("decode_gemv")
+    _bump("decode_linears", max(1, len(p.splits)))
+    xn, xo = _row_parallel_input(xf, p, ctx, "decode")
+    b = p.group_size
+    g = p.c_norm // b
+    gl = p.qp.shape[-2]                          # local (padded) groups
+
+    planes, mu, z = quantize_act_int4_planes(xn.astype(jnp.float32), 4)
+    packed = pack_planes(planes, g, b)           # [T, 4, G, B/32]
+    packed = _pad_axis(packed, -2, gl * ctx.tp)
+    s = jax.lax.axis_index(ctx.axis)
+    packed_l = jax.lax.dynamic_slice_in_dim(packed, s * gl, gl, axis=-2)
+
+    acc = bwa_matvec_planes(
+        p.qp, p.mp, centers_to_cd(p.centers), packed_l,
+        plane_weights(p.act_gamma),
+        block_out=min(256, p.qp.shape[-3]), interpret=interpret)
+    t = acc.shape[0]
+    parts = [acc]
+    if p.n_outlier:
+        x8, mu8, z8 = int8_outlier_stats(xo)     # global stats, replicated
+        x8_l = _local_slice(x8, ctx, p.w8.shape[-1])
+        iacc, w8_rowsum = int8_outlier_iacc(x8_l, p.w8)
+        parts += [iacc, w8_rowsum[None, :]]
+    summed = tp_psum(jnp.concatenate(parts, axis=0), ctx, "decode")
+    y = mu * summed[:t] - (mu * z) * p.row_sum
+    if p.n_outlier:
+        y = y + int8_outlier_epilogue(summed[t:2 * t], summed[2 * t],
+                                      mu8, z8, p.w8_scale)
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
+def _matmul_row_parallel(xf: jnp.ndarray, p: PackedLinear, ctx,
+                         interpret: bool):
+    """Row-parallel prefill chunk: fake-quantize the gathered FULL row
+    (global per-token stats, same float sequence as the unsharded GEMM
+    entry), slice this shard's channels, and run the dequant GEMM on an
+    identity-permutation local view with ``quantize_acts=False`` —
+    the epilogue math stays in ``bwa_matmul_dequant``."""
+    from repro.core.act_decompose import fake_quant_act_1x4
+    from repro.distributed.tp import tp_psum
+    from repro.kernels.bwa_matmul.ops import bwa_matmul_dequant
+    from repro.kernels.bwa_matvec.ops import int8_outlier_stats
+
+    _bump("prefill_gemm")
+    xn, xo = _row_parallel_input(xf, p, ctx, "prefill")
+    b = p.group_size
+    gl = p.qp.shape[-2]
+    kl = p.w8.shape[-1]
+    c_norm_l = gl * b
+
+    xnq = fake_quant_act_1x4(xn.astype(jnp.float32), p.act_gamma)
+    x_l = _local_slice(xnq, ctx, c_norm_l)
+    if p.n_outlier:
+        x8, mu8, z8 = int8_outlier_stats(xo)
+        xoq = mu8 * (x8.astype(jnp.float32) - z8)
+        x_l = jnp.concatenate([x_l, _local_slice(xoq, ctx, kl)], axis=-1)
+    ql = QuantizedLinear(
+        q_packed=p.qp.reshape(*p.qp.shape[:-2], gl * (b // 32)),
+        m_packed=p.mp.reshape(*p.mp.shape[:-2], gl * (b // 32)),
+        centers=p.centers, w8=p.w8, w8_scale=p.w8_scale,
+        perm=jnp.arange(c_norm_l + kl, dtype=jnp.int32),
+        act_gamma=p.act_gamma, row_sum=p.row_sum, bias=None,
+        group_size=b, c_in=c_norm_l + kl, c_out=p.c_out, n_outlier=kl)
+    y = bwa_matmul_dequant(ql, x_l, quantize_acts=False,
+                           interpret=interpret)
+    y = tp_psum(y, ctx, "prefill")
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
 def packed_dot(x: jnp.ndarray, p: PackedLinear) -> jnp.ndarray:
     """y = BWA_linear(x) through the Pallas kernel selected by the
     active serving kernel mode (module docstring).  Outside any mode the
     result is bit-identical to ``quantized_dot`` on the unpacked
-    container."""
+    container.
+
+    Tensor-parallel containers (``p.tp > 1``, traced under
+    ``tp_serving`` inside a shard_map body) keep ALL collectives inside
+    this function: column-parallel shards run the plain local paths (no
+    comms), row-parallel shards gather the input and ``psum`` the
+    partial output — one all-gather + one psum per half-block.
+    """
     km = current_kernel_mode()
+    sharded = bool(p.shard) and p.tp > 1
     if km is None:
+        if sharded:
+            raise ValueError(
+                "tp-sharded PackedLinear outside serving kernel mode — "
+                "sharded containers only run inside the TP runner")
         from repro.core.quant_container import quantized_dot
         return quantized_dot(x, unpack_linear(p))
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    if km.mode == "decode":
+    if sharded and p.shard == "in":
+        from repro.distributed.tp import current_tp
+        ctx = current_tp()
+        if ctx is None or ctx.tp != p.tp:
+            raise ValueError(
+                f"row-parallel PackedLinear (tp={p.tp}) traced outside a "
+                f"matching tp_serving context")
+        if km.mode == "decode":
+            y = _matvec_row_parallel(xf, p, ctx, km.interpret)
+        else:
+            y = _matmul_row_parallel(xf, p, ctx, km.interpret)
+    elif km.mode == "decode":
         y = _matvec_path(xf, p, km.interpret)
     else:
         y = _matmul_path(xf, p, km.interpret)
-    return y.reshape(*lead, p.c_out).astype(x.dtype)
+    return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -344,7 +634,10 @@ def _fuse_into(tree: dict, fused_name: str, names: tuple[str, ...],
         return
     fused = fuse_packed(parts)
     if fused is None:
-        return          # mismatched perm/gamma/bias: keep unfused layout
+        # mismatched perm/gamma/bias: keep unfused layout — but say so
+        # (each member costs its own decode dispatch)
+        stats["unfused_linears"] += len(parts)
+        return
     tree[fused_name] = fused
     for n in names:
         del tree[n]
@@ -385,21 +678,52 @@ def _pack_sub(sub: dict, kind: str, ffn_kind, stats: dict):
             _fuse_into(ffn, "w_gateup", ("w_gate", "w_up"), stats)
 
 
-def pack_model_params(model, params: dict) -> tuple[dict, dict]:
+# shard mode per packed leaf name: projections that READ the replicated
+# residual stream shard their output rows (column-parallel, no comms);
+# projections that WRITE the residual stream shard their input channels
+# (row-parallel, one psum each — w_o and w_down, i.e. <= 2 all-reduces
+# per scan unit on decode)
+_SHARD_MODE = {
+    "wqkv": "out", "wq": "out", "wk": "out", "wv": "out", "wo": "in",
+    "w_gateup": "out", "w_gate": "out", "w_up": "out",
+    "w_down": "in", "w1": "out", "w2": "in",
+}
+
+
+def _shard_sub(sub: dict, tp: int) -> None:
+    for part in ("mix", "ffn"):
+        d = sub.get(part)
+        if not isinstance(d, dict):
+            continue
+        for name, mode in _SHARD_MODE.items():
+            w = d.get(name)
+            if isinstance(w, PackedLinear):
+                d[name] = shard_packed(w, mode, tp)
+
+
+def pack_model_params(model, params: dict, tp: int = 1) -> tuple[dict, dict]:
     """One-time weight packing for the quantized serving backend.
 
     Returns ``(packed_params, stats)``: a new param tree where every
     kernel-covered ``QuantizedLinear`` (QKV/O + dense FFN of global-
     attention sub-layers, main stack and tail) is replaced by its
     ``PackedLinear``, everything else shared by reference.  ``stats``
-    records the coverage split and packed byte count so the serving
-    layer can report memory use honestly.
+    records the coverage split, packed byte counts (global and
+    per-device under ``tp``) and the unfused-sibling count so the
+    serving layer can report memory use and dispatch cost honestly.
+
+    ``tp > 1`` additionally re-lays every packed leaf for a ``tp``-way
+    model mesh axis (``_SHARD_MODE``: column-parallel for the
+    residual-stream readers, row-parallel for the writers) — see
+    ``shard_packed``.
     """
     stats = {
         "packed_linears": 0,
         "packed_bytes": 0,
         "fused_projections": 0,
+        "unfused_linears": 0,
         "quantized_linears_total": _count_quantized(params),
+        "tp": int(tp),
     }
     new_params = _copy_tree(params)
     for stack_name, kinds in (("blocks", model.kinds),
@@ -412,6 +736,14 @@ def pack_model_params(model, params: dict) -> tuple[dict, dict]:
             sub = stack.get(f"sub_{si}")
             if isinstance(sub, dict):
                 _pack_sub(sub, kind, model.cfg.ffn_kind, stats)
+                if tp > 1:
+                    _shard_sub(sub, tp)
     stats["reference_linears"] = (stats["quantized_linears_total"]
                                   - stats["packed_linears"])
+    per_dev = 0
+    for leaf in jax.tree.leaves(
+            new_params, is_leaf=lambda x: isinstance(x, PackedLinear)):
+        if isinstance(leaf, PackedLinear):
+            per_dev += packed_bytes_per_device(leaf)
+    stats["packed_bytes_per_device"] = per_dev
     return new_params, stats

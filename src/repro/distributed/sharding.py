@@ -141,3 +141,110 @@ def named_shardings(pspecs, mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspecs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving-path rules (tensor-parallel quantized serving, 'model' axis)
+# ---------------------------------------------------------------------------
+#
+# The serving runner shards PACKED containers whose layout was re-built
+# for the mesh by ``core.packed_linear.shard_packed`` — the specs here
+# must mirror that layout exactly (see the PackedLinear docstring):
+#
+#   shard="out" (column-parallel)    shard="in" (row-parallel)
+#   qp/mp/centers: C_out (axis -3)   qp/mp/centers: groups (axis -2)
+#   w8/w8_scale:   C_out (axis -2)   w8: outlier cols (axis -1)
+#   row_sum/bias:  C_out (axis -1)   row_sum (global), w8_scale, bias,
+#   perm/act_gamma: replicated         perm, act_gamma replicated
+
+def _repl(leaf) -> P:
+    return P(*([None] * leaf.ndim))
+
+
+def _shard_at(leaf, axis_from_end: int) -> P:
+    spec = [None] * leaf.ndim
+    spec[leaf.ndim - axis_from_end] = "model"
+    return P(*spec)
+
+
+def packed_leaf_pspecs(p):
+    """PartitionSpec-valued container mirroring a (possibly tp-sharded)
+    ``PackedLinear`` — same pytree structure (meta carried over), each
+    array leaf replaced by its spec."""
+    import dataclasses
+
+    if p.shard == "out" and p.tp > 1:
+        return dataclasses.replace(
+            p, qp=_shard_at(p.qp, 3), mp=_shard_at(p.mp, 3),
+            centers=_shard_at(p.centers, 3), w8=_shard_at(p.w8, 2),
+            w8_scale=_shard_at(p.w8_scale, 2), perm=_repl(p.perm),
+            act_gamma=_repl(p.act_gamma), row_sum=_shard_at(p.row_sum, 1),
+            bias=None if p.bias is None else _shard_at(p.bias, 1))
+    if p.shard == "in" and p.tp > 1:
+        return dataclasses.replace(
+            p, qp=_shard_at(p.qp, 2), mp=_shard_at(p.mp, 2),
+            centers=_shard_at(p.centers, 2), w8=_shard_at(p.w8, 1),
+            w8_scale=_repl(p.w8_scale), perm=_repl(p.perm),
+            act_gamma=_repl(p.act_gamma), row_sum=_repl(p.row_sum),
+            bias=None if p.bias is None else _repl(p.bias))
+    return dataclasses.replace(
+        p, **{f: _repl(getattr(p, f)) for f in
+              ("qp", "mp", "centers", "w8", "w8_scale", "perm",
+               "act_gamma", "row_sum")},
+        bias=None if p.bias is None else _repl(p.bias))
+
+
+# plain bias leaves added on the OUTPUT of a column-parallel projection
+# (qkv_project / gelu_mlp add them to the local activation, so they must
+# follow the same C_out split); everything else on the serving path is
+# replicated — the residual stream is replicated by construction.
+_SERVING_SHARDED_BIASES = frozenset({"bq", "bk", "bv", "b1"})
+
+
+def serving_param_pspecs(params, tp: int):
+    """PartitionSpec pytree for a serving (packed) param tree on a
+    1-D ('model',) mesh: packed containers by their pack-time shard
+    layout, column-parallel bias vectors split with their projection,
+    everything else replicated."""
+    from repro.core.gptq import QuantizedLinear
+    from repro.core.packed_linear import PackedLinear
+    import dataclasses
+
+    def spec(kp, leaf):
+        if isinstance(leaf, PackedLinear):
+            return packed_leaf_pspecs(leaf)
+        if isinstance(leaf, QuantizedLinear):
+            return dataclasses.replace(
+                leaf, **{f: _repl(getattr(leaf, f)) for f in
+                         ("q_packed", "m_packed", "centers", "w8",
+                          "w8_scale", "perm", "act_gamma", "row_sum")},
+                bias=None if leaf.bias is None else _repl(leaf.bias))
+        name = kp[-1].key if hasattr(kp[-1], "key") else str(kp[-1])
+        if (tp > 1 and name in _SERVING_SHARDED_BIASES
+                and leaf.shape[-1] % tp == 0):
+            return _shard_at(leaf, 1)
+        return _repl(leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        spec, params,
+        is_leaf=lambda x: isinstance(x, (PackedLinear, QuantizedLinear)))
+
+
+def cache_head_pspecs(caches, tp: int):
+    """Serving KV caches on the model axis: every cache layout in this
+    repo — dense ``[L, slots, max_len, Hkv, ...]`` and paged
+    ``[L, NB+1, BS, Hkv, ...]`` (values and int4 scale planes alike) —
+    carries the head axis at position 3, so one rule shards them all:
+    axis 3 over 'model' when divisible.  Everything else (per-slot
+    lengths, block metadata) is replicated — one block table serves the
+    whole mesh."""
+    def spec(leaf):
+        nd = leaf.ndim
+        if (tp > 1 and nd >= 4 and leaf.shape[3] >= tp
+                and leaf.shape[3] % tp == 0):
+            s = [None] * nd
+            s[3] = "model"
+            return P(*s)
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec, caches)

@@ -1,0 +1,113 @@
+"""Tensor-parallel serving context + trace-time comms accounting.
+
+Mirrors the *serving kernel mode* pattern of ``core/packed_linear.py``:
+the model runner enters ``tp_serving(tp)`` around its jitted trace (the
+body of a ``shard_map``), and every layer that must know the mesh —
+``packed_dot``'s row-parallel gather/reduce, ``apply_sublayer``'s local
+head counts — consults ``current_tp()`` at trace time.  Zero per-call
+overhead: outside the context the serving path is byte-identical to the
+single-device build.
+
+Comms counters work exactly like the kernel dispatch counters
+(PR 6): ``packed_dot`` bumps them while the jitted serving function is
+being TRACED, so after the runner traces its decode step the counts say
+how many collectives one step costs.  Because ``scan`` traces its body
+once, the decode-trace totals ARE the per-scan-unit totals (plus one
+extra body for a tail stack, when present).  Keys:
+
+  decode_psum / prefill_psum            — all-reduces (one per
+                                          row-parallel linear: w_o and
+                                          w_down, i.e. 2 per unit)
+  decode_all_gather / prefill_all_gather — input regathers feeding the
+                                          row-parallel linears (see
+                                          docs/serving.md: per-token
+                                          dynamic act-quant needs the
+                                          FULL permuted row, so the
+                                          head-sharded input is
+                                          gathered before quantizing)
+
+CI's TP parity tests assert the decode all-reduce budget (<= 2 psums
+per scan unit) on these counters.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_CTX = threading.local()
+
+
+@dataclass(frozen=True)
+class TPContext:
+    """Active tensor-parallel serving mesh, captured at jit-trace time."""
+    tp: int                   # model-axis size (>= 2 inside the context)
+    axis: str = "model"       # mesh axis name the shard_map body runs over
+
+
+@contextlib.contextmanager
+def tp_serving(tp: int, *, axis: str = "model"):
+    """Enter tensor-parallel serving mode around a shard_map jit trace.
+    ``tp <= 1`` is a no-op context (the single-device path stays
+    untouched — no collectives are ever traced)."""
+    if tp <= 1:
+        yield
+        return
+    prev = getattr(_CTX, "tp", None)
+    _CTX.tp = TPContext(int(tp), axis)
+    try:
+        yield
+    finally:
+        _CTX.tp = prev
+
+
+def current_tp() -> TPContext | None:
+    return getattr(_CTX, "tp", None)
+
+
+# ---------------------------------------------------------------------------
+# Trace-time comms counters
+# ---------------------------------------------------------------------------
+
+_TRACE_COUNTS = threading.local()
+
+_KEYS = ("decode_psum", "decode_all_gather",
+         "prefill_psum", "prefill_all_gather")
+
+
+def reset_comms_trace_counts() -> None:
+    _TRACE_COUNTS.counts = {k: 0 for k in _KEYS}
+
+
+def comms_trace_counts() -> dict:
+    counts = getattr(_TRACE_COUNTS, "counts", None)
+    if counts is None:
+        reset_comms_trace_counts()
+        counts = _TRACE_COUNTS.counts
+    return counts
+
+
+def _bump(key: str) -> None:
+    comms_trace_counts()[key] += 1
+
+
+# ---------------------------------------------------------------------------
+# The two collectives the serving path is allowed to use
+# ---------------------------------------------------------------------------
+
+def tp_all_gather(x: jnp.ndarray, ctx: TPContext, mode: str) -> jnp.ndarray:
+    """Re-assemble a last-axis-sharded activation into the full row.
+    ``tiled=True`` concatenates shards in mesh order, which matches the
+    contiguous per-shard slices the column-parallel pack layout emits —
+    the gathered row is byte-identical to the unsharded one."""
+    _bump(f"{mode}_all_gather")
+    return jax.lax.all_gather(x, ctx.axis, axis=-1, tiled=True)
+
+
+def tp_psum(x: jnp.ndarray, ctx: TPContext, mode: str) -> jnp.ndarray:
+    """Sum row-parallel partial outputs across the model axis."""
+    _bump(f"{mode}_psum")
+    return jax.lax.psum(x, ctx.axis)

@@ -32,6 +32,45 @@ def plane_weights(act_gamma: jnp.ndarray) -> jnp.ndarray:
     return (2.0 ** jnp.arange(4, dtype=jnp.float32)) * act_gamma
 
 
+def int8_outlier_stats(xo):
+    """Per-token RTN-INT8 stats over the FULL outlier row: ``(x8, mu8,
+    z8)``.  Split out of ``int8_outlier_correction`` so tensor-parallel
+    row sharding can compute the stats globally (on the gathered row)
+    and apply the contraction on each shard's column slice — the float
+    sequence is identical to the fused call."""
+    return rtn_quantize(xo.astype(jnp.float32), 8)
+
+
+def int8_outlier_iacc(x8, w8):
+    """Integer halves of the outlier correction: the centered
+    contraction ``iacc`` and the weight row sum, both as f32-carried
+    exact integers (magnitudes < 2^24 for any realistic outlier count).
+    Split out so tensor-parallel row sharding can compute partials over
+    disjoint column slices and sum them losslessly — integer sums are
+    associative, so partials over a zero-padded column partition add to
+    exactly the full-row values."""
+    x8c = (x8 - 128).astype(jnp.int8)
+    iacc = jnp.einsum("tc,jc->tj", x8c, w8,
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    w8_rowsum = jnp.sum(w8.astype(jnp.int32), axis=1).astype(jnp.float32)
+    return iacc, w8_rowsum
+
+
+def int8_outlier_epilogue(iacc, w8_rowsum, mu8, z8, w8_scale):
+    """Float epilogue over the exact integer pieces — the ONE place the
+    outlier zero-point/row-sum float sequence exists, so the sharded
+    path (which psums the integer pieces first) reproduces the fused
+    call bit-for-bit."""
+    return (mu8 * iacc - (mu8 * (z8 - 128.0)) * w8_rowsum) * w8_scale[:, 0]
+
+
+def int8_outlier_apply(x8, mu8, z8, w8, w8_scale) -> jnp.ndarray:
+    """Centered integer contraction + zero-point/row-sum correction from
+    precomputed stats."""
+    iacc, w8_rowsum = int8_outlier_iacc(x8, w8)
+    return int8_outlier_epilogue(iacc, w8_rowsum, mu8, z8, w8_scale)
+
+
 def int8_outlier_correction(xo, w8, w8_scale) -> jnp.ndarray:
     """Outlier-channel contribution [T, C_out]: RTN-INT8 activations
     against the INT8 outlier weights as a centered integer contraction
@@ -39,12 +78,8 @@ def int8_outlier_correction(xo, w8, w8_scale) -> jnp.ndarray:
     the decode outlier epilogue — shared by ``bwa_matvec``
     (QuantizedLinear entry) and ``packed_dot`` (PackedLinear serving
     path)."""
-    x8, mu8, z8 = rtn_quantize(xo.astype(jnp.float32), 8)
-    x8c = (x8 - 128).astype(jnp.int8)
-    iacc = jnp.einsum("tc,jc->tj", x8c, w8,
-                      preferred_element_type=jnp.int32).astype(jnp.float32)
-    w8_rowsum = jnp.sum(w8.astype(jnp.int32), axis=1).astype(jnp.float32)
-    return (mu8 * iacc - (mu8 * (z8 - 128.0)) * w8_rowsum) * w8_scale[:, 0]
+    x8, mu8, z8 = int8_outlier_stats(xo)
+    return int8_outlier_apply(x8, mu8, z8, w8, w8_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("block_out", "interpret"))

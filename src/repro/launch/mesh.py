@@ -50,3 +50,14 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """Axes that jointly act as the data-parallel dimension."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_serving_mesh(tp: int) -> jax.sharding.Mesh:
+    """1-D tensor-parallel serving mesh ``(tp,)`` over the 'model' axis —
+    the shape ``ServeEngine``/``ModelRunner`` consume.  ``tp`` must not
+    exceed the visible device count (force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for CPU
+    testing)."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    return _mesh((tp,), ("model",))

@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged pool size (default: fully provisioned "
                          "slots * ceil(max_len / block_size))")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh size over the 'model' "
+                         "axis: packed linears column/row-sharded, KV "
+                         "caches head-sharded (needs >= tp devices; CPU "
+                         "testing via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--kernel-interpret", default="auto",
                     choices=("auto", "on", "off"),
                     help="Pallas execution for the quantized backend: "
@@ -84,16 +90,24 @@ def main():
                          backend=args.backend, kv_layout=args.kv_layout,
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
-                         kernel_interpret=interpret)
+                         kernel_interpret=interpret, tp=args.tp)
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
               f"packed to kernel-native W(1+1) "
-              f"({ps['packed_bytes'] / 2**20:.2f} MiB), "
+              f"({ps['packed_bytes'] / 2**20:.2f} MiB total, "
+              f"{ps['packed_bytes_per_device'] / 2**20:.2f} MiB/device "
+              f"at tp={ps['tp']}), "
               f"{ps['fused_projections']} slot-batched projections, "
+              f"{ps['unfused_linears']} unfused (mismatched/biased "
+              f"siblings — one dispatch each), "
               f"{ps['reference_linears']} on the reference fallback; "
               f"kernels {'interpret' if ps['kernel_interpret'] else 'compiled'}"
               f" on {ps['kernel_backend']}")
+    if engine.tp > 1:
+        print(f"[serve] tensor-parallel: tp={engine.tp} over the 'model' "
+              f"axis ({jax.device_count()} devices visible); KV caches "
+              f"head-sharded, one block table for the whole mesh")
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature)
     handles = [engine.submit(

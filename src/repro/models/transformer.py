@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.config.model_config import ArchConfig, BlockKind, FFNKind
 from repro.core.quant_container import dot
+from repro.distributed.tp import current_tp as _current_tp
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -297,6 +298,13 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
     if kind in ("attention", "local", "crossdec"):
         akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
                    rope_theta=cfg.rope_theta)
+        tpc = _current_tp()
+        if tpc is not None and kind in KERNEL_COVERED_KINDS:
+            # tensor-parallel shard_map body: the column-parallel wqkv
+            # emits this shard's heads only, so attention (and the
+            # head-sharded KV cache view) runs on local head counts
+            akw["n_heads"] = cfg.n_heads // tpc.tp
+            akw["n_kv"] = cfg.n_kv_heads // tpc.tp
         self_cache = cache["self"] if kind == "crossdec" and cache else cache
         if kind == "crossdec" and cache:
             enc_kv = cache["enc"]

@@ -74,7 +74,7 @@ class ServeEngine:
                  backend: str = "reference",
                  kernel_interpret: bool | None = None,
                  kv_layout: str = "dense", block_size: int = 32,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, tp: int = 1, mesh=None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if kv_layout not in KV_LAYOUTS:
@@ -88,11 +88,16 @@ class ServeEngine:
         self.model = model
         self.slots = batch_slots
         self.max_len = max_len
+        # tensor parallelism: pass an explicit 1-D ('model',) mesh, or
+        # just tp=N to build one over the first N visible devices
+        if mesh is None and tp > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(tp)
         self.runner = ModelRunner(model, params, max_len=max_len,
                                   chunk_buckets=chunk_buckets,
                                   backend=backend,
                                   kernel_interpret=kernel_interpret,
-                                  paged=kv_layout == "paged")
+                                  paged=kv_layout == "paged", mesh=mesh)
         # the runner's tree, not the constructor arg: on the quantized
         # backend the runner packs covered linears, and pinning the
         # original here would keep BOTH weight copies resident
@@ -100,9 +105,11 @@ class ServeEngine:
         if kv_layout == "paged":
             self.kv = PagedKVManager(model, batch_slots, max_len,
                                      block_size=block_size,
-                                     num_blocks=num_blocks)
+                                     num_blocks=num_blocks,
+                                     place=self.runner.place_caches)
         else:
-            self.kv = KVManager(model, batch_slots, max_len)
+            self.kv = KVManager(model, batch_slots, max_len,
+                                place=self.runner.place_caches)
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
                                    seed=seed, overflow_policy=overflow_policy)
 
@@ -153,6 +160,11 @@ class ServeEngine:
         return "paged" if self.kv.paged else "dense"
 
     @property
+    def tp(self) -> int:
+        """Model-axis size of the serving mesh (1 = single device)."""
+        return self.runner.tp
+
+    @property
     def kv_stats(self) -> dict:
         """KV memory/occupancy: layout + pool bytes, plus (paged) block
         totals, live/peak occupancy, and prefix-sharing counters."""
@@ -162,7 +174,8 @@ class ServeEngine:
     def packed_stats(self) -> dict | None:
         """Packed-weight coverage + memory split for the quantized
         backend (None on reference): packed_linears / reference_linears
-        / packed_bytes / quantized_linears_total."""
+        / unfused_linears / fused_projections / packed_bytes /
+        packed_bytes_per_device / tp / quantized_linears_total."""
         return self.runner.pack_stats
 
     @property

@@ -79,13 +79,16 @@ class KVManager:
 
     paged = False
 
-    def __init__(self, model, slots: int, max_len: int):
+    def __init__(self, model, slots: int, max_len: int, *, place=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         self.model = model
         self.slots = slots
         self.max_len = max_len
         self.caches = None
+        # optional placement hook (ModelRunner.place_caches): pins fresh
+        # trees to the serving mesh (head-axis sharded) before first use
+        self._place = place or (lambda c: c)
         self.pos = np.zeros(slots, np.int32)
         self._free: list[int] = []
         self.reset()
@@ -94,7 +97,8 @@ class KVManager:
         """Fresh cache tree, all slots free, positions zeroed (one serve
         run = one reset; stale rows from a prior run are unreachable
         behind the position masks and overwritten on admission)."""
-        self.caches = self.model.init_caches(self.slots, self.max_len, 0)
+        self.caches = self._place(
+            self.model.init_caches(self.slots, self.max_len, 0))
         self.pos[:] = 0
         self._free = list(range(self.slots))
 
@@ -158,7 +162,8 @@ class PagedKVManager:
     paged = True
 
     def __init__(self, model, slots: int, max_len: int, *,
-                 block_size: int = 32, num_blocks: int | None = None):
+                 block_size: int = 32, num_blocks: int | None = None,
+                 place=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if block_size < 1:
@@ -183,6 +188,9 @@ class PagedKVManager:
         self.num_blocks = (int(num_blocks) if num_blocks is not None
                            else slots * self.blocks_per_slot)
         self.caches = None
+        # placement hook (ModelRunner.place_caches): the pool leaves are
+        # sharded on the head axis so ONE block table serves every shard
+        self._place = place or (lambda c: c)
         self.pos = np.zeros(slots, np.int32)
         self.block_tables = np.zeros((slots, self.blocks_per_slot), np.int32)
         self.pool: BlockPool | None = None
@@ -194,8 +202,8 @@ class PagedKVManager:
     # ---------------- lifecycle ----------------
 
     def reset(self):
-        self.caches = self.model.init_paged_caches(self.num_blocks,
-                                                   self.block_size)
+        self.caches = self._place(
+            self.model.init_paged_caches(self.num_blocks, self.block_size))
         self.pool = BlockPool(self.num_blocks, self.block_size)
         self.block_tables[:] = NULL_BLOCK
         self.pos[:] = 0

@@ -51,11 +51,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core.packed_linear import (
     kernel_serving,
     kernel_trace_counts,
     pack_model_params,
     reset_kernel_trace_counts,
+)
+from repro.distributed.sharding import (
+    cache_head_pspecs,
+    named_shardings,
+    serving_param_pspecs,
+)
+from repro.distributed.tp import (
+    comms_trace_counts,
+    reset_comms_trace_counts,
+    tp_serving,
 )
 from repro.kernels.dispatch import resolve_interpret
 from repro.serve.kv_manager import write_slot_row
@@ -83,20 +95,42 @@ class ModelRunner:
                  chunk_buckets=DEFAULT_CHUNK_BUCKETS,
                  backend: str = "reference",
                  kernel_interpret: bool | None = None,
-                 paged: bool = False):
+                 paged: bool = False, mesh=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
         self.model = model
         self.backend = backend
         self.paged = paged
+        # tensor parallelism: a 1-D ('model',) mesh (launch.mesh.
+        # make_serving_mesh).  The quantized backend runs the jitted
+        # steps as an explicit shard_map over tp-relaid packed params
+        # (every collective lives in packed_dot); the reference backend
+        # keeps its XLA graph and lets GSPMD place replicated params +
+        # head-sharded caches.
+        self.mesh = mesh
+        self.tp = int(dict(mesh.shape).get("model", 1)) if mesh is not None \
+            else 1
+        self._use_shard_map = (mesh is not None and backend == "quantized"
+                               and self.tp > 1)
+        if self._use_shard_map:
+            cfg = model.cfg
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    "tensor-parallel quantized serving requires chunked-"
+                    "prefill support (whole-prompt fallback is not "
+                    "shard_map-wrapped)")
+            if cfg.n_heads % self.tp or cfg.n_kv_heads % self.tp:
+                raise ValueError(
+                    f"n_heads={cfg.n_heads} / n_kv_heads={cfg.n_kv_heads} "
+                    f"must divide tp={self.tp}")
         # None = device-aware default: compiled on TPU/GPU, interpret on
         # CPU (kernels/dispatch.py).  The resolved value is logged into
         # pack_stats so the effective mode is always observable.
         self.kernel_interpret = resolve_interpret(kernel_interpret)
         self.pack_stats = None
         if backend == "quantized":
-            params, stats = pack_model_params(model, params)
+            params, stats = pack_model_params(model, params, tp=self.tp)
             if stats["quantized_linears_total"] == 0:
                 raise ValueError(
                     "backend='quantized' needs W(1+1)A(1x4)-quantized "
@@ -105,6 +139,12 @@ class ModelRunner:
             stats["kernel_interpret"] = self.kernel_interpret
             stats["kernel_backend"] = jax.default_backend()
             self.pack_stats = stats
+        self._param_specs = None
+        self._cache_specs = None
+        if mesh is not None:
+            self._param_specs = serving_param_pspecs(params, self.tp)
+            params = jax.device_put(
+                params, named_shardings(self._param_specs, mesh))
         self.params = params
         self.max_len = max_len
         # clamp buckets to the cache: a chunk window [pos, pos+C) must fit
@@ -117,13 +157,11 @@ class ModelRunner:
 
         # paged layout: block tables ride as an extra fixed-shape input
         # ([slots, n_bt] decode / [n_bt] prefill chunk), so the compile
-        # cache stays 1 decode + 1 prefill per bucket — same contract
-        decode_fn = (
-            (lambda p, tok, caches, pos, bt:
-             model.decode_step(p, tok, caches, pos, block_tables=bt))
-            if paged else model.decode_step)
-        self._decode = jax.jit(self._traced(decode_fn, "decode"),
-                               donate_argnums=(2,))
+        # cache stays 1 decode + 1 prefill per bucket — same contract.
+        # Under a mesh the decode jit needs the cache PartitionSpecs,
+        # which exist only once the engine has built (and placed) its
+        # caches — built lazily on the first decode() instead.
+        self._decode = None if mesh is not None else self._build_decode()
         self._copy_block = jax.jit(_copy_block, donate_argnums=(0,))
         self._write = jax.jit(write_slot_row, donate_argnums=(0,))
         self._sample = jax.jit(sample_tokens_batched)
@@ -145,18 +183,74 @@ class ModelRunner:
         into the jitted computation; the reference backend traces it
         bare.  Pure trace-time — the per-call overhead is one context
         check.  Each trace also snapshots the kernel dispatch counters
-        into ``self.trace_counts[mode]`` (how many Pallas calls one step
-        costs — the fused-projection win, asserted by serve-smoke)."""
+        (and, under tensor parallelism, the comms counters — psums /
+        all-gathers per step) into ``self.trace_counts[mode]`` (how many
+        Pallas calls one step costs — the fused-projection win, asserted
+        by serve-smoke; the all-reduce budget, asserted by the TP parity
+        lane)."""
         if self.backend != "quantized":
             return fn
+        tp = self.tp if self._use_shard_map else 1
 
         def traced(*args):
             reset_kernel_trace_counts()
-            with kernel_serving(mode, interpret=self.kernel_interpret):
+            reset_comms_trace_counts()
+            with kernel_serving(mode, interpret=self.kernel_interpret), \
+                    tp_serving(tp):
                 out = fn(*args)
-            self.trace_counts[mode] = dict(kernel_trace_counts())
+            self.trace_counts[mode] = {**kernel_trace_counts(),
+                                       **comms_trace_counts()}
             return out
         return traced
+
+    # ---------------- tensor-parallel plumbing ----------------
+
+    def _shard_spec_args(self, n_args: tuple):
+        """in_specs for the non-(params, caches) jitted-step operands:
+        every serving-control input (token ids, positions, block tables,
+        scalar chunk geometry) is replicated — one block table serves the
+        whole mesh."""
+        return tuple(P(*([None] * n)) for n in n_args)
+
+    def _shard_wrap(self, fn, arg_ranks: tuple):
+        """Wrap a jitted-step body in ``shard_map`` over the serving
+        mesh: params split by their pack-time layout, caches by the
+        head-axis rule, controls replicated.  ``check_rep=False`` —
+        ``packed_dot`` re-replicates row-parallel outputs itself with
+        the one psum the comms budget allows."""
+        if not self._use_shard_map:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        assert self._cache_specs is not None, \
+            "place_caches must run before the first jitted step builds"
+        ctrl = self._shard_spec_args(arg_ranks)
+        return shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._param_specs, ctrl[0], self._cache_specs)
+            + ctrl[1:],
+            out_specs=(P(None, None), self._cache_specs),
+            check_rep=False)
+
+    def place_caches(self, caches):
+        """Place a fresh cache tree on the serving mesh (head-axis
+        sharded; replicated bookkeeping) and remember its specs for the
+        shard_map-wrapped steps.  Identity without a mesh."""
+        if self.mesh is None:
+            return caches
+        self._cache_specs = cache_head_pspecs(caches, self.tp)
+        return jax.device_put(
+            caches, named_shardings(self._cache_specs, self.mesh))
+
+    def _build_decode(self):
+        decode_fn = (
+            (lambda p, tok, caches, pos, bt:
+             self.model.decode_step(p, tok, caches, pos, block_tables=bt))
+            if self.paged else self.model.decode_step)
+        # decode controls: tokens [slots], pos [slots] (+ bt [slots, n_bt])
+        ranks = (1, 1, 2) if self.paged else (1, 1)
+        return jax.jit(
+            self._traced(self._shard_wrap(decode_fn, ranks), "decode"),
+            donate_argnums=(2,))
 
     # ---------------- compile-cache observability ----------------
 
@@ -210,10 +304,13 @@ class ModelRunner:
                     return self.model.prefill_chunk(
                         p, tokens, caches, None, pos, last_idx,
                         block_table=bt)
+                ranks = (1, 0, 0, 1)    # tokens, pos, last_idx, bt
             else:
                 chunk_fn = self.model.prefill_chunk
+                ranks = (1, 0, 0, 0)    # tokens, slot, pos, last_idx
             fn = self._chunk_fns[c] = jax.jit(
-                self._traced(chunk_fn, "prefill"), donate_argnums=(2,))
+                self._traced(self._shard_wrap(chunk_fn, ranks), "prefill"),
+                donate_argnums=(2,))
         if self.paged:
             logits, caches = fn(self.params, jnp.asarray(buf), caches,
                                 jnp.asarray(start, jnp.int32),
@@ -252,6 +349,8 @@ class ModelRunner:
                block_tables: np.ndarray | None = None):
         """ONE batched decode dispatch over all slots.  Paged layout:
         pass the full [slots, n_bt] ``block_tables``."""
+        if self._decode is None:        # mesh path: built after cache specs
+            self._decode = self._build_decode()
         if self.paged:
             logits, caches = self._decode(
                 self.params, jnp.asarray(tokens), caches, jnp.asarray(pos),

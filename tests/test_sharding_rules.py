@@ -1,0 +1,316 @@
+"""Direct coverage for ``distributed/sharding.py`` + ``launch/mesh.py``:
+the training-side rules (``param_pspecs`` / ``cache_pspecs`` /
+``named_shardings``) and the serving-side rules
+(``packed_leaf_pspecs`` / ``serving_param_pspecs`` /
+``cache_head_pspecs``) over tiny configs, including packed containers
+and scan-stacked leaves.
+
+Rule SHAPE tests run in-process on a degenerate (1, 1) mesh (every dim
+divides an axis of size 1, so the emitted axis names are exactly the
+rule table).  Actual multi-device placement runs in subprocesses with
+forced host devices, as in test_distributed.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout=600):
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        + textwrap.dedent(code)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def _collect(pspecs):
+    """path -> P map over a spec pytree."""
+    from repro.utils.pytree import tree_map_with_path_names
+    out = {}
+    tree_map_with_path_names(lambda p, s: out.update({p: s}) or s, pspecs)
+    return out
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    from repro.config.registry import get_arch
+    from repro.configs.tiny import tiny_variant
+    from repro.models.model import build_model
+    cfg = tiny_variant(get_arch("llama1-7b"))
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def unit_mesh():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh((1, 1), ("data", "model"))
+
+
+class TestTrainRules:
+    """Name-based rule table, resilient to the stacked scan dim."""
+
+    def test_param_pspecs_tensor_parallel_rules(self, tiny_params, unit_mesh):
+        from repro.distributed.sharding import param_pspecs
+        _, _, params = tiny_params
+        specs = _collect(param_pspecs(params, unit_mesh))
+        # column-parallel: output dim on 'model', leading scan dim None
+        assert specs["blocks/sub_0/mix/wq"] == P(None, None, "model")
+        assert specs["blocks/sub_0/ffn/w_up"] == P(None, None, "model")
+        # row-parallel: contraction dim on 'model'
+        assert specs["blocks/sub_0/mix/wo"] == P(None, "model", None)
+        assert specs["blocks/sub_0/ffn/w_down"] == P(None, "model", None)
+        # vocab-parallel embedding / LM head; norms replicated
+        assert specs["embed"] == P("model", None)
+        assert specs["lm_head"] == P(None, "model")
+        assert specs["final_norm"] == P(None)
+        assert specs["blocks/sub_0/norm1"] == P(None, None)
+
+    def test_param_pspecs_fsdp_adds_data_axis(self, tiny_params, unit_mesh):
+        from repro.distributed.sharding import param_pspecs
+        _, _, params = tiny_params
+        specs = _collect(param_pspecs(params, unit_mesh, fsdp=True))
+        assert specs["blocks/sub_0/mix/wq"] == P(None, "data", "model")
+        assert specs["blocks/sub_0/mix/wo"] == P(None, "model", "data")
+        assert specs["embed"] == P("model", "data")
+
+    def test_param_pspecs_structure_matches_params(self, tiny_params,
+                                                   unit_mesh):
+        from repro.distributed.sharding import param_pspecs
+        _, _, params = tiny_params
+        specs = param_pspecs(params, unit_mesh)
+        assert (jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+                == jax.tree.structure(params))
+
+    def test_cache_pspecs_batch_vs_sequence(self, tiny_params, unit_mesh):
+        from repro.distributed.sharding import cache_pspecs
+        caches = {"k": jnp.zeros((2, 4, 16, 2, 8)),
+                  "v": jnp.zeros((2, 4, 16, 2, 8)),
+                  "lengths": jnp.zeros((4,), jnp.int32)}
+        # batch divisible by dp=1: batch-sharded on axis 1
+        specs = _collect(cache_pspecs(caches, unit_mesh, batch=4))
+        assert specs["k"] == P(None, ("data",), None, None, None)
+        assert specs["lengths"] == P(None)
+
+
+class TestServingPackedRules:
+    """Specs must mirror the ``shard_packed`` layouts exactly."""
+
+    @pytest.fixture(scope="class")
+    def packed(self):
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.core.packed_linear import pack_linear
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32))
+        xc = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+        q = quantize_linear(w, xc, QuantConfig(group_size=32,
+                                               n_outlier_groups=1))
+        return pack_linear(q)
+
+    def test_unsharded_container_replicates(self, packed):
+        from repro.distributed.sharding import packed_leaf_pspecs
+        sp = packed_leaf_pspecs(packed)
+        for f in ("qp", "mp", "centers", "w8", "row_sum"):
+            spec = getattr(sp, f)
+            assert all(a is None for a in spec), (f, spec)
+
+    def test_column_parallel_specs(self, packed):
+        from repro.core.packed_linear import shard_packed
+        from repro.distributed.sharding import packed_leaf_pspecs
+        sp = packed_leaf_pspecs(shard_packed(packed, "out", 2))
+        assert sp.qp[-3] == "model" and sp.mp[-3] == "model"
+        assert sp.centers[-3] == "model"
+        assert sp.w8[-2] == "model" and sp.w8_scale[-2] == "model"
+        assert sp.row_sum[-1] == "model"
+        assert all(a is None for a in sp.perm + sp.act_gamma)
+
+    def test_row_parallel_specs(self, packed):
+        from repro.core.packed_linear import shard_packed
+        from repro.distributed.sharding import packed_leaf_pspecs
+        sp = packed_leaf_pspecs(shard_packed(packed, "in", 2))
+        assert sp.qp[-2] == "model" and sp.centers[-2] == "model"
+        assert sp.w8[-1] == "model"           # outlier columns split
+        # global row_sum + epilogue scale + input metadata replicated
+        # (the epilogue runs once on the psummed raw accumulators)
+        assert all(a is None for a in
+                   sp.row_sum + sp.w8_scale + sp.perm + sp.act_gamma)
+
+    def test_scan_stacked_container_keeps_leading_none(self, packed):
+        """Stacked [L, ...] packed leaves: axis-from-end rules leave the
+        scan dim unsharded."""
+        from repro.core.packed_linear import pack_linear, shard_packed
+        from repro.distributed.sharding import packed_leaf_pspecs
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        rng = np.random.default_rng(1)
+        qs = [quantize_linear(
+            jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32)),
+            QuantConfig(group_size=32, n_outlier_groups=1))
+            for _ in range(2)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *qs)
+        ps = shard_packed(pack_linear(stacked), "out", 2)
+        assert ps.qp.ndim == packed.qp.ndim + 1
+        sp = packed_leaf_pspecs(ps)
+        assert sp.qp[0] is None and sp.qp[-3] == "model"
+        assert sp.row_sum[0] is None and sp.row_sum[-1] == "model"
+
+    def test_serving_param_pspecs_bias_rules(self, packed):
+        from repro.core.packed_linear import shard_packed
+        from repro.distributed.sharding import serving_param_pspecs
+        tree = {"mix": {"wqkv": shard_packed(packed, "out", 2),
+                        "bq": jnp.zeros((48,)), "b2": jnp.zeros((48,)),
+                        "norm1": jnp.zeros((64,))}}
+        specs = serving_param_pspecs(tree, tp=2)
+        # column-parallel bias follows its projection's C_out split
+        assert specs["mix"]["bq"] == P("model")
+        # post-psum bias + norms stay replicated
+        assert specs["mix"]["b2"] == P(None)
+        assert specs["mix"]["norm1"] == P(None)
+        assert specs["mix"]["wqkv"].qp[-3] == "model"
+        # indivisible bias replicates rather than erroring
+        odd = serving_param_pspecs({"bq": jnp.zeros((49,))}, tp=2)
+        assert odd["bq"] == P(None)
+        # tp=1: everything replicated
+        one = serving_param_pspecs(tree, tp=1)
+        assert one["mix"]["bq"] == P(None)
+
+    def test_serving_param_pspecs_reference_container_replicates(self):
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.distributed.sharding import serving_param_pspecs
+        rng = np.random.default_rng(0)
+        q = quantize_linear(
+            jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32)),
+            QuantConfig(group_size=32, n_outlier_groups=1))
+        specs = serving_param_pspecs({"w": q}, tp=2)
+        assert all(a is None for a in specs["w"].q_packed)
+        assert all(a is None for a in specs["w"].centers)
+
+    def test_cache_head_pspecs(self):
+        from repro.distributed.sharding import cache_head_pspecs
+        caches = {"k": jnp.zeros((2, 4, 16, 8, 4)),      # head axis 8 % 2
+                  "ks": jnp.zeros((2, 4, 16, 8, 1)),     # scale planes too
+                  "odd": jnp.zeros((2, 4, 16, 3, 4)),    # 3 heads % 2 != 0
+                  "lens": jnp.zeros((4,), jnp.int32),
+                  "table": jnp.zeros((4, 8), jnp.int32)}
+        specs = cache_head_pspecs(caches, tp=2)
+        assert specs["k"] == P(None, None, None, "model", None)
+        assert specs["ks"] == P(None, None, None, "model", None)
+        assert specs["odd"] == P(None, None, None, None, None)
+        assert specs["lens"] == P(None)          # one table, whole mesh
+        assert specs["table"] == P(None, None)
+        # tp=1: no model axis anywhere
+        assert cache_head_pspecs(caches, tp=1)["k"] == P(*[None] * 5)
+
+
+@pytest.mark.slow
+class TestMeshPlacement:
+    """Real multi-device placement (subprocess: forced host devices)."""
+
+    def test_param_pspecs_place_on_test_mesh(self):
+        run_with_devices("""
+        import jax, numpy as np
+        from repro.config.registry import get_arch
+        from repro.configs.tiny import tiny_variant
+        from repro.models.model import build_model
+        from repro.distributed.sharding import (
+            cache_pspecs, named_shardings, param_pspecs)
+        from repro.launch.mesh import make_test_mesh
+
+        cfg = tiny_variant(get_arch("llama1-7b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh = make_test_mesh((2, 2), ("data", "model"))
+        sh = named_shardings(param_pspecs(params, mesh, fsdp=True), mesh)
+        placed = jax.device_put(params, sh)
+        wq = placed["blocks"]["sub_0"]["mix"]["wq"]     # [L, in, out]
+        local = wq.addressable_shards[0].data.shape
+        assert local == (wq.shape[0], wq.shape[1] // 2, wq.shape[2] // 2), local
+
+        # indivisible dims replicate instead of erroring: 3 doesn't
+        # divide model=2, so only the divisible input dim shards
+        import jax.numpy as jnp
+        specs = param_pspecs({"mix": {"wq": jnp.zeros((8, 3))}}, mesh,
+                             fsdp=True)
+        assert specs["mix"]["wq"] == jax.sharding.PartitionSpec("data", None)
+
+        caches = {"attn": {"k": jnp.zeros((2, 3, 16, 2, 8)),
+                           "v": jnp.zeros((2, 3, 16, 2, 8))}}
+        # batch 3 not divisible by data=2 -> sequence-parallel KV
+        sp = cache_pspecs(caches, mesh, batch=3)
+        assert sp["attn"]["k"] == jax.sharding.PartitionSpec(
+            None, None, ("data",), None, None), sp["attn"]["k"]
+        print("train placement OK")
+        """, n_devices=4)
+
+    def test_serving_specs_place_packed_tree(self):
+        run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.core.packed_linear import pack_linear, shard_packed
+        from repro.distributed.sharding import (
+            cache_head_pspecs, named_shardings, serving_param_pspecs)
+        from repro.launch.mesh import make_serving_mesh
+
+        rng = np.random.default_rng(0)
+        qs = [quantize_linear(
+            jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32)),
+            QuantConfig(group_size=32, n_outlier_groups=1))
+            for _ in range(2)]
+        stacked = pack_linear(jax.tree.map(lambda *xs: jnp.stack(xs), *qs))
+        tree = {"wqkv": shard_packed(stacked, "out", 2),
+                "wo": shard_packed(stacked, "in", 2),
+                "bq": jnp.zeros((48,))}
+        mesh = make_serving_mesh(2)
+        sh = named_shardings(serving_param_pspecs(tree, tp=2), mesh)
+        placed = jax.device_put(tree, sh)
+        # column shard: C_out axis (-3 of qp) halves per device
+        q = placed["wqkv"].qp
+        assert q.addressable_shards[0].data.shape[-3] == q.shape[-3] // 2
+        # row shard: padded group axis (-2 of qp) halves per device
+        q = placed["wo"].qp
+        assert q.addressable_shards[0].data.shape[-2] == q.shape[-2] // 2
+        assert placed["bq"].addressable_shards[0].data.shape == (24,)
+
+        caches = {"k": jnp.zeros((2, 4, 16, 8, 4))}
+        csh = named_shardings(cache_head_pspecs(caches, tp=2), mesh)
+        ck = jax.device_put(caches, csh)["k"]
+        assert ck.addressable_shards[0].data.shape[3] == 4
+        print("serving placement OK")
+        """, n_devices=2)
+
+    def test_mesh_constructors(self):
+        run_with_devices("""
+        from repro.launch.mesh import make_serving_mesh, make_test_mesh
+        assert dict(make_test_mesh((2, 2)).shape) == {"data": 2, "model": 2}
+        assert dict(make_test_mesh((4,), ("pod",)).shape) == {"pod": 4}
+        assert dict(make_serving_mesh(4).shape) == {"model": 4}
+        # sub-mesh: tp smaller than the visible device count still works
+        assert dict(make_serving_mesh(2).shape) == {"model": 2}
+        print("mesh constructors OK")
+        """, n_devices=4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

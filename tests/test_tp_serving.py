@@ -1,0 +1,235 @@
+"""Tensor-parallel serving: greedy streams bit-identical across mesh
+shapes {1, 2, 8} x backend x kv_layout at f32 compute (the PR's
+acceptance criterion), the decode comms budget (<= 2 all-reduces per
+scan unit, counted at trace time), the unchanged compile contract
+(1 decode + 1 prefill per bucket per runner), and per-device packed
+memory actually shrinking with the mesh.
+
+Multi-device meshes need ``--xla_force_host_platform_device_count``
+BEFORE jax import, so the mesh cases run in subprocesses (same harness
+as test_distributed.py); validation / layout unit cases run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess meshes: minutes wall clock
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout=900):
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        + textwrap.dedent(code)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# tiny all-attention MHA config: 8 heads so tp=8 shards to 1 head each;
+# group_size=32 over d_model=64 with one outlier group leaves the attn
+# linears at ONE quant group (tp=8 pads the group axis 1 -> 8: the
+# heaviest zero-pad case), while w_down sees G=3 -> 8
+_SETUP = """
+import jax, numpy as np
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.quantize_model import quantize_model_sequential
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+
+VOCAB = 128
+cfg = tiny_variant(get_arch("llama1-7b")).replace(
+    d_model=64, head_dim=8, n_heads=8, n_kv_heads=8, d_ff=128,
+    n_layers=2, vocab_size=VOCAB, dtype="float32")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+calib = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, VOCAB)
+qparams = quantize_model_sequential(
+    model, params, calib,
+    QuantConfig(group_size=32, n_outlier_groups=1, em_iters=2,
+                calib_tokens=256))
+
+rng = np.random.default_rng(0)
+def requests():
+    return [Request(rid=i,
+                    prompt=rng.integers(0, VOCAB, 5 + 3 * i).astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(3)]
+"""
+
+_MESH_SWEEP = _SETUP + """
+backend = {backend!r}
+for layout in ("dense", "paged"):
+    outs = {{}}
+    for tp in (1, 2, 8):
+        rng = np.random.default_rng(0)
+        eng = ServeEngine(model, qparams, batch_slots=3, max_len=64,
+                          chunk_buckets=(8,), backend=backend, tp=tp,
+                          kv_layout=layout, block_size=8)
+        outs[tp] = eng.generate(requests())
+        st = eng.last_stats
+        # compile contract unchanged under any mesh shape
+        assert st["dispatches_per_step"] == 1.0, (backend, layout, tp, st)
+        assert eng.runner.prefill_compiles <= 1, (backend, layout, tp)
+        if backend == "quantized":
+            tc = eng.runner.trace_counts["decode"]
+            if tp > 1:
+                # comms budget: the scan body traces once, so the trace
+                # totals ARE the per-scan-unit totals — exactly one psum
+                # per row-parallel linear (w_o, w_down) and the one
+                # input re-gather each needs
+                assert tc["decode_psum"] == 2, (layout, tp, tc)
+                assert tc["decode_all_gather"] == 2, (layout, tp, tc)
+                ps = eng.packed_stats
+                assert ps["tp"] == tp
+                assert ps["packed_bytes_per_device"] < ps["packed_bytes"]
+            else:
+                assert tc["decode_psum"] == 0, tc
+                assert tc["decode_all_gather"] == 0, tc
+    assert outs[2] == outs[1], (backend, layout, "tp=2 diverged")
+    assert outs[8] == outs[1], (backend, layout, "tp=8 diverged")
+    print(f"parity OK {{backend}}/{{layout}}: tp 1==2==8")
+print("ALL OK")
+"""
+
+
+class TestMeshParity:
+    def test_quantized_streams_bit_identical_across_meshes(self):
+        """shard_map path: packed linears column/row-sharded, every
+        collective inside packed_dot, streams equal at tp {1, 2, 8}."""
+        out = run_with_devices(_MESH_SWEEP.format(backend="quantized"))
+        assert "ALL OK" in out
+
+    def test_reference_streams_bit_identical_across_meshes(self):
+        """GSPMD path: replicated params + head-sharded caches, zero
+        model-code changes, streams equal at tp {1, 2, 8}."""
+        out = run_with_devices(_MESH_SWEEP.format(backend="reference"))
+        assert "ALL OK" in out
+
+
+class TestValidation:
+    def test_tp_needs_devices(self):
+        """tp > visible devices fails loudly at mesh construction (the
+        first thing ``ServeEngine(tp=...)`` does)."""
+        from repro.launch.mesh import make_serving_mesh
+        with pytest.raises((RuntimeError, ValueError), match="devices"):
+            make_serving_mesh(jax.device_count() + 1)
+
+    def test_make_serving_mesh_validates(self):
+        from repro.launch.mesh import make_serving_mesh
+        with pytest.raises(ValueError, match="tp"):
+            make_serving_mesh(0)
+        mesh = make_serving_mesh(1)
+        assert dict(mesh.shape) == {"model": 1}
+
+    def test_sharded_container_refuses_reference_path(self):
+        """A tp-relaid PackedLinear is serving-runner internal: outside
+        the serving kernel mode it must refuse to run (its layout no
+        longer matches the flat reference container)."""
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.core.packed_linear import (
+            pack_linear, packed_dot, shard_packed, unpack_linear)
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32))
+        xc = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+        q = quantize_linear(w, xc, QuantConfig(group_size=32,
+                                               n_outlier_groups=1))
+        p = shard_packed(pack_linear(q), "in", 2)
+        with pytest.raises(ValueError, match="serving"):
+            packed_dot(xc[:2], p)
+        with pytest.raises(ValueError, match="unpack"):
+            unpack_linear(p)
+
+    def test_column_shard_needs_divisible_widths(self):
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.core.packed_linear import pack_linear, shard_packed
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32))
+        xc = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+        q = quantize_linear(w, xc, QuantConfig(group_size=32,
+                                               n_outlier_groups=1))
+        with pytest.raises(ValueError, match="divide"):
+            shard_packed(pack_linear(q), "out", 5)
+
+
+class TestShardLayouts:
+    """Pack-time shard layout math (mesh-free)."""
+
+    @pytest.fixture(scope="class")
+    def packed(self):
+        from repro.config.model_config import QuantConfig
+        from repro.core.gptq import quantize_linear
+        from repro.core.packed_linear import pack_linear
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32))
+        xc = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+        q = quantize_linear(w, xc, QuantConfig(group_size=32,
+                                               n_outlier_groups=1))
+        return pack_linear(q)
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_row_shard_keeps_global_row_sum(self, packed, tp):
+        """A row-parallel shard keeps ``row_sum`` as the GLOBAL full-row
+        value, bitwise unchanged — the decode path psums raw pre-epilogue
+        accumulators and applies the (mu, z, row_sum) epilogue once on
+        the summed result, so no per-shard partial sums may exist (a
+        per-shard epilogue would distribute f32 multiplies over the
+        partition and drift by ulps)."""
+        from repro.core.packed_linear import shard_packed
+        ps = shard_packed(packed, "in", tp)
+        assert ps.row_sum.shape == (packed.c_out,)
+        np.testing.assert_array_equal(np.asarray(ps.row_sum),
+                                      np.asarray(packed.row_sum))
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_row_shard_pads_group_axis(self, packed, tp):
+        from repro.core.packed_linear import shard_packed
+        ps = shard_packed(packed, "in", tp)
+        g = packed.qp.shape[-2]
+        g_pad = -(-g // tp) * tp
+        assert ps.qp.shape[-2] == g_pad
+        # padded groups are all-zero: exact zero kernel contribution
+        assert not np.asarray(ps.centers[..., g:, :]).any()
+
+    def test_column_shard_order_is_permutation(self, packed):
+        from repro.core.packed_linear import _col_shard_order, shard_packed
+        order = _col_shard_order((16, 16, 16), 4)
+        assert sorted(order.tolist()) == list(range(48))
+        # shard 0's slice holds the first 1/tp of EVERY member
+        assert order[:12].tolist() == [*range(0, 4), *range(16, 20),
+                                       *range(32, 36)]
+        ps = shard_packed(packed, "out", 2)
+        assert ps.shard == "out" and ps.tp == 2
+        # single-member column shard: contiguous rows, order unchanged
+        np.testing.assert_array_equal(np.asarray(ps.row_sum),
+                                      np.asarray(packed.row_sum))
+
+    def test_per_device_bytes_shrink(self, packed):
+        from repro.core.packed_linear import (
+            packed_bytes_per_device, shard_packed)
+        full = packed.packed_bytes()
+        for shard in ("out", "in"):
+            for tp in (2, 4):
+                per = packed_bytes_per_device(shard_packed(packed, shard, tp))
+                assert per < full, (shard, tp, per, full)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
