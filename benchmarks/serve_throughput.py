@@ -48,6 +48,11 @@ Extra modes:
   ``kv_chunk``, the bit-parity coupling) over the tiny config and
   prints decode tok/s + the paged/dense ratio per cell — how the
   shipped ``--block-size`` default was chosen.
+- ``--policy speculative`` (with ``--tiny``) adds a speculative-decoding
+  cell: every stream drafts ``--spec-k`` tokens with the ``--draft``
+  substrate and verifies them in one batched dispatch — greedy streams
+  must stay bit-identical to plain decode, and ``accept_rate`` /
+  ``effective_tokens_per_sec`` land in the artifact (never speed-gated).
 - ``--tp N`` records tensor-parallel cells (quantized backend, dense +
   paged, mesh sizes {1, N}) into
   ``experiments/serve/throughput_tp.json`` and asserts greedy-stream
@@ -67,7 +72,9 @@ import numpy as np
 from benchmarks.common import bench_arch, default_qcfg
 from repro.core.quantize_model import quantize_model_sequential
 from repro.models.model import build_model
-from repro.serve.engine import Request, SamplingParams, ServeEngine
+from repro.serve.engine import (EngineConfig, GreedyPolicy, Request,
+                                SamplingParams, ServeEngine,
+                                SpeculativePolicy)
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_PATH = os.path.join(_ROOT, "experiments", "serve", "throughput.json")
@@ -116,10 +123,10 @@ def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
 def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len,
              backend="reference", kv_layout="dense", block_size=32,
              shared_prefix=0, kernel_interpret=None):
-    engine = ServeEngine(model, params, batch_slots=slots, max_len=max_len,
-                         backend=backend, kv_layout=kv_layout,
-                         block_size=block_size,
-                         kernel_interpret=kernel_interpret)
+    engine = ServeEngine(model, params, config=EngineConfig(
+        batch_slots=slots, max_len=max_len, backend=backend,
+        kv_layout=kv_layout, block_size=block_size,
+        kernel_interpret=kernel_interpret))
     # warmup compiles outside the timed window: decode (1), one prefill
     # per chunk bucket (bounded — NOT one per distinct prompt length)
     engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
@@ -225,10 +232,10 @@ def _best_decode_rate(model, qparams, vocab, *, backend, layout,
                       reps: int = 3):
     """Best-of-``reps`` steady-state decode rate on a warm engine (same
     min-time convention as the smoke gate) + the final greedy streams."""
-    engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
-                         chunk_buckets=(8, 32), backend=backend,
-                         kv_layout=layout, block_size=block_size,
-                         kernel_interpret=kernel_interpret, tp=tp)
+    engine = ServeEngine(model, qparams, config=EngineConfig(
+        batch_slots=4, max_len=128, chunk_buckets=(8, 32), backend=backend,
+        kv_layout=layout, block_size=block_size,
+        kernel_interpret=kernel_interpret, tp=tp))
     engine.generate(_requests(4, vocab, 2, seed=123, long_every=3,
                               long_len=100))
     best, done = 0.0, None
@@ -315,10 +322,10 @@ def _session_smoke(model, qparams, vocab, block_size: int) -> dict:
     prompt = lambda n: rng.integers(0, vocab, n).astype(np.int32)
     # 13 blocks of 16: four background streams need 3 each (24 prompt +
     # 24 new), so the high-priority arrival (2 blocks) must preempt
-    eng = ServeEngine(model, qparams, batch_slots=4, max_len=128,
-                      chunk_buckets=(8, 32), kv_layout="paged",
-                      block_size=block_size,
-                      num_blocks=-(-48 // block_size) * 4 + 1)
+    eng = ServeEngine(model, qparams, config=EngineConfig(
+        batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+        kv_layout="paged", block_size=block_size,
+        num_blocks=-(-48 // block_size) * 4 + 1))
     bg = [eng.submit(prompt(24), SamplingParams(max_new_tokens=24),
                      priority=5) for _ in range(4)]
     while sum(len(h.out_tokens) > 0 for h in bg) < 2:
@@ -362,9 +369,64 @@ def _session_smoke(model, qparams, vocab, block_size: int) -> dict:
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
 
+def _policy_smoke(model, qparams, vocab, block_size: int,
+                  draft: str = "tiny", k: int = 3) -> dict:
+    """CI speculative-decoding cell: every stream decoded via
+    draft-and-verify (``SpeculativePolicy``) on the quantized backend's
+    paged engine.  Greedy speculative streams must be BIT-IDENTICAL to
+    the plain decode path (the verify logits are authoritative), the
+    verify step must hold its compile contract (ONE shape under a
+    uniform k), and the draft must produce accepted tokens.  The
+    record's ``effective_tokens_per_sec`` / ``accept_rate`` ride in the
+    artifact but are never speed-gated (draft quality on random tiny
+    weights is not the shipped operating point)."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, vocab, 6 + (i % 5)).astype(np.int32)
+               for i in range(8)]
+
+    def drive(pol):
+        eng = ServeEngine(model, qparams, config=EngineConfig(
+            batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+            backend="quantized", kv_layout="paged",
+            block_size=block_size))
+        outs = [h.result() for h in
+                [eng.submit(p, SamplingParams(max_new_tokens=24,
+                                              policy=pol))
+                 for p in prompts]]
+        return eng, outs
+
+    _, ref = drive(GreedyPolicy())
+    eng, got = drive(SpeculativePolicy(k=k, draft=draft))
+    st = eng.stats()
+    assert got == ref, \
+        "speculative greedy streams diverged from plain decode"
+    assert st.accept_rate is not None and st.accept_rate > 0, st
+    assert st.drafted_tokens > 0 and st.accepted_tokens >= 0, st
+    assert st.verify_dispatches > 0, st
+    assert eng.runner.verify_compiles == 1, eng.runner.verify_compiles
+    assert st.effective_tokens_per_sec is not None \
+        and st.effective_tokens_per_sec > 0, st
+    if draft == "self":       # self-draft on greedy streams ~always wins
+        assert st.accepted_tokens_per_step > 1, st
+    assert eng.kv_stats_typed.blocks_in_use == 0, eng.kv_stats_typed
+    print(f"  serve-smoke[speculative-{draft}] OK: k={k}, "
+          f"accept_rate={st.accept_rate:.2f}, "
+          f"{st.accepted_tokens_per_step:.2f} accepted tok/verify-step, "
+          f"{st.verify_dispatches} verify dispatches "
+          f"({eng.runner.verify_compiles} compile), "
+          f"{st.effective_tokens_per_sec:.1f} effective tok/s, greedy "
+          "streams bit-identical to plain decode")
+    return {"variant": f"tiny-smoke/speculative-{draft}",
+            "backend": "quantized", "kv_layout": "paged",
+            "policy": "speculative", "draft": draft, "spec_k": k,
+            "gate": None, **st.as_dict(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+
+
 def tiny_smoke(baseline_path: str = BASELINE_PATH,
                update_baseline: bool = False, block_size: int = 16,
-               kernel_interpret=None) -> dict:
+               kernel_interpret=None, policy: str = "greedy",
+               draft: str = "tiny", spec_k: int = 3) -> dict:
     """CI serve-smoke lane: seconds-scale run of BOTH backends x BOTH
     KV layouts over the same quantized weights, asserting the serving
     invariants (module docstring), greedy-stream parity across every
@@ -378,10 +440,10 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
     for backend in ("reference", "quantized"):
         for layout in ("dense", "paged"):
             gate = backend if layout == "dense" else f"{backend}-paged"
-            engine = ServeEngine(model, qparams, batch_slots=4, max_len=128,
-                                 chunk_buckets=(8, 32), backend=backend,
-                                 kv_layout=layout, block_size=block_size,
-                                 kernel_interpret=kernel_interpret)
+            engine = ServeEngine(model, qparams, config=EngineConfig(
+                batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+                backend=backend, kv_layout=layout, block_size=block_size,
+                kernel_interpret=kernel_interpret))
             # warmup so decode_tokens_per_sec measures steady state, not jit
             engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
                                       long_every=3, long_len=100))
@@ -395,23 +457,26 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             for _ in range(5):
                 done = engine.generate(_requests(8, cfg.vocab_size, 32,
                                                  seed=0, **traffic))
-                reps.append((dict(engine.last_stats), done))
+                # typed snapshot (ServeStats) — the gate path reads
+                # attributes, the artifact keeps the as_dict() schema
+                reps.append((engine.stats(), done))
             dt = time.perf_counter() - t0
             assert all(r[1] == done for r in reps), \
                 "greedy streams diverged across repeats"
-            st = max(reps, key=lambda r: r[0]["decode_tokens_per_sec"])[0]
+            best = max(reps, key=lambda r: r[0].decode_tokens_per_sec)[0]
+            st = best.as_dict()
             assert len(done) == 8 and all(len(v) > 0 for v in done.values())
-            assert st["dispatches_per_step"] == 1.0, st
-            assert st["prefill_compiles"] <= \
-                len(engine.runner.chunk_buckets), st
-            assert st["interleaved_steps"] > 0, st  # decode kept flowing
-            kv = st["kv"]
+            assert best.dispatches_per_step == 1.0, best
+            assert best.prefill_compiles <= \
+                len(engine.runner.chunk_buckets), best
+            assert best.interleaved_steps > 0, best  # decode kept flowing
             if layout == "paged":
                 # multi-block sequences actually exercised + pool hygiene
-                assert kv["blocks_peak_in_use"] > engine.slots, kv
-                assert kv["blocks_saved_by_sharing"] > 0, kv
-                assert kv["blocks_in_use"] == 0, kv     # all freed
-                assert st["shared_prefix_tokens"] > 0, st
+                kvt = best.kv
+                assert kvt.blocks_peak_in_use > engine.slots, kvt
+                assert kvt.blocks_saved_by_sharing > 0, kvt
+                assert kvt.blocks_in_use == 0, kvt      # all freed
+                assert best.shared_prefix_tokens > 0, best
             if backend == "quantized":
                 # the fused-projection contract: decode serves MORE
                 # source linears than it pays kernel dispatches for
@@ -421,13 +486,12 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
                 tc = engine.runner.trace_counts.get("decode", {})
                 assert tc.get("decode_act_quant", 0) == 0, tc
                 assert 0 < tc["decode_gemv"] < tc["decode_linears"], tc
-                assert engine.packed_stats["fused_projections"] > 0, \
-                    engine.packed_stats
+                pst = engine.packed_stats_typed
+                assert pst.fused_projections > 0, pst
                 print(f"  serve-smoke[{gate}] decode trace: "
                       f"{tc['decode_gemv']} fused GEMV dispatches serve "
                       f"{tc['decode_linears']} linears "
-                      f"({engine.packed_stats['fused_projections']} "
-                      "slot-batched projections)")
+                      f"({pst.fused_projections} slot-batched projections)")
             streams[(backend, layout)] = done
             records.append({"variant": f"tiny-smoke/{gate}",
                             "backend": backend, "kv_layout": layout,
@@ -456,6 +520,11 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
     # (not perf-gated; the record rides along in the artifact)
     records.append(_session_smoke(model, qparams, cfg.vocab_size,
                                   block_size))
+    if policy == "speculative":
+        # speculative decode cell (--policy speculative): parity + the
+        # draft economics ride in the artifact, never speed-gated
+        records.append(_policy_smoke(model, qparams, cfg.vocab_size,
+                                     block_size, draft=draft, k=spec_k))
     by_gate = {r["gate"]: r for r in records}
     ratio = (by_gate["quantized"]["decode_tokens_per_sec"]
              / by_gate["reference"]["decode_tokens_per_sec"])
@@ -603,6 +672,18 @@ if __name__ == "__main__":
                     help="record tensor-parallel cells at this mesh size "
                          "(quantized backend, mesh {1, N}; parity "
                          "asserted, tok/s recorded but never gated)")
+    ap.add_argument("--policy", default="greedy",
+                    choices=("greedy", "speculative"),
+                    help="--tiny only: 'speculative' adds a "
+                         "draft-and-verify cell (greedy parity, "
+                         "accept_rate, effective tok/s in the artifact)")
+    ap.add_argument("--draft", default="tiny", choices=("self", "tiny"),
+                    help="draft substrate for --policy speculative: "
+                         "'self' (same weights) or 'tiny' (first scan "
+                         "unit only)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per verify step for "
+                         "--policy speculative")
     ap.add_argument("--kernel-interpret", default="auto",
                     choices=("auto", "on", "off"),
                     help="Pallas execution for the quantized backend: "
@@ -618,7 +699,9 @@ if __name__ == "__main__":
     elif args.tiny:
         tiny_smoke(baseline_path=args.baseline,
                    update_baseline=args.update_baseline,
-                   block_size=args.block_size, kernel_interpret=interp)
+                   block_size=args.block_size, kernel_interpret=interp,
+                   policy=args.policy, draft=args.draft,
+                   spec_k=args.spec_k)
     else:
         run(quick=args.quick, block_size=args.block_size,
             kernel_interpret=interp)

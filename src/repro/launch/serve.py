@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama1-7b --tiny \
         [--no-quant] [--backend quantized] [--slots 4] [--max-new 32] \
-        [--temperature 0.8] --prompt "def main(" ...
+        [--temperature 0.8] [--policy speculative --spec-k 4] \
+        --prompt "def main(" ...
 
 Each prompt becomes one submitted stream (``engine.submit`` ->
 ``StreamHandle``); draining the engine completes them all with
@@ -55,6 +56,20 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-stream sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="greedy",
+                    choices=("greedy", "speculative", "beam"),
+                    help="decode policy per stream: greedy (one token "
+                         "per batched step), speculative (draft k + "
+                         "verify in one dispatch; greedy output "
+                         "bit-identical), beam (--kv-layout paged, "
+                         "temperature 0)")
+    ap.add_argument("--draft", default="self", choices=("self", "tiny"),
+                    help="speculative draft substrate: same weights "
+                         "('self') or the first scan unit only ('tiny')")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per verify step (speculative)")
+    ap.add_argument("--beam-width", type=int, default=4,
+                    help="beam count for --policy beam")
     args = ap.parse_args()
 
     from repro.config.model_config import QuantConfig
@@ -64,7 +79,9 @@ def main():
     from repro.data.corpus import load_corpus_text
     from repro.data.tokenizer import ByteTokenizer
     from repro.models.model import build_model
-    from repro.serve.engine import SamplingParams, ServeEngine
+    from repro.serve.engine import (BeamSearchPolicy, EngineConfig,
+                                    GreedyPolicy, SamplingParams,
+                                    ServeEngine, SpeculativePolicy)
 
     cfg = get_arch(args.arch)
     if args.tiny:
@@ -86,11 +103,11 @@ def main():
 
     prompts = args.prompt or ["def main(", "import ", "class "]
     interpret = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
-    engine = ServeEngine(model, params, batch_slots=args.slots, max_len=512,
-                         backend=args.backend, kv_layout=args.kv_layout,
-                         block_size=args.block_size,
-                         num_blocks=args.num_blocks,
-                         kernel_interpret=interpret, tp=args.tp)
+    engine = ServeEngine(model, params, config=EngineConfig(
+        batch_slots=args.slots, max_len=512, backend=args.backend,
+        kv_layout=args.kv_layout, block_size=args.block_size,
+        num_blocks=args.num_blocks, kernel_interpret=interpret,
+        tp=args.tp))
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
@@ -108,8 +125,13 @@ def main():
         print(f"[serve] tensor-parallel: tp={engine.tp} over the 'model' "
               f"axis ({jax.device_count()} devices visible); KV caches "
               f"head-sharded, one block table for the whole mesh")
+    policy = {"greedy": lambda: GreedyPolicy(),
+              "speculative": lambda: SpeculativePolicy(
+                  k=args.spec_k, draft=args.draft),
+              "beam": lambda: BeamSearchPolicy(width=args.beam_width),
+              }[args.policy]()
     sp = SamplingParams(max_new_tokens=args.max_new,
-                        temperature=args.temperature)
+                        temperature=args.temperature, policy=policy)
     handles = [engine.submit(
         np.asarray(tok.encode(p), np.int32) % cfg.vocab_size, sp)
         for p in prompts]
@@ -129,6 +151,19 @@ def main():
     print(f"[serve] session: mean queue {st['queue_ms'] or 0:.1f}ms, "
           f"{st['preemptions']} preemptions, {st['cancelled']} cancelled, "
           f"{st['forks']} forks")
+    if st.get("accept_rate") is not None:
+        print(f"[serve] speculative: k={args.spec_k} draft={args.draft}, "
+              f"accept rate {st['accept_rate']:.2f}, "
+              f"{st['accepted_tokens_per_step']:.2f} accepted "
+              f"tok/verify-step over {st['verify_dispatches']} verify "
+              f"dispatches; effective "
+              f"{st['effective_tokens_per_sec']:.1f} tok/s")
+    if args.policy == "beam":
+        for p, h in zip(prompts, handles):
+            hyps = h.beam_hypotheses or []
+            print(f"[serve] beam[{p!r}]: {len(hyps)} hypotheses, best "
+                  f"score {hyps[0][0]:.3f}" if hyps else
+                  f"[serve] beam[{p!r}]: no finished hypotheses")
     kv = st["kv"]
     if kv["layout"] == "paged":
         print(f"[serve] paged KV pool: {kv['pool_bytes'] / 2**20:.2f} MiB, "

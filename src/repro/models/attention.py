@@ -566,6 +566,113 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
     return out, cache
 
 
+def _store_rows(cache: KVCache, k_new, v_new, rows, kv_bits: int) -> KVCache:
+    """Per-row scatter into a slot-indexed dense cache: ``k_new/v_new``
+    [B, T, Hkv, Dh] written at per-(slot, step) row indices ``rows``
+    [B, T].  Unlike ``_store``'s contiguous [B]-vector path (which
+    clamps at the cache boundary), explicit row indices let callers
+    REDIRECT writes — verification points every inactive (riding)
+    slot's T rows at its own current position, whose garbage the
+    serving contract already tolerates.  Duplicate targets only occur
+    among such redirects (all garbage, all masked)."""
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def upd(buf, val):
+        return jax.vmap(
+            lambda b_, v_, r_: b_.at[r_].set(v_.astype(b_.dtype))
+        )(buf, val, rows)
+
+    if kv_bits == 4:
+        kp, vp, ks, vs = _pack_kv(k_new, v_new)
+        return cache._replace(k=upd(cache.k, kp), v=upd(cache.v, vp),
+                              k_scale=upd(cache.k_scale, ks),
+                              v_scale=upd(cache.v_scale, vs))
+    return cache._replace(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
+
+
+def attention_verify(params, x, cache: KVCache, pos, active, *, n_heads,
+                     n_kv, head_dim, rope_theta, kv_bits):
+    """Score T candidate tokens per slot against the live dense cache
+    in one dispatch (speculative verification).
+
+    x [B, T, D] embeds slot b's draft chain at absolute positions
+    [pos[b], pos[b]+T); ``active`` [B] marks verifying slots.  K/V for
+    all T positions are quantized and written first (active slots at
+    their true rows — the scheduler guarantees ``pos + T <= max_len``
+    for them — inactive riding slots redirected to their own current
+    row, which is garbage-tolerated), then every query row t attends
+    under the absolute-position causal mask ``kv_pos <= pos + t`` —
+    for each position exactly the mask the single-token decode step
+    applies, so verify logits match decode logits bit-for-bit at f32.
+    Rejected-draft rows need no cleanup: they sit at positions >= the
+    rolled-back ``pos`` and are rewritten by a later verify/decode at
+    that position before any query can attend them.
+    Returns (out [B, T, D], new_cache).
+    """
+    b, t, _ = x.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_v = pos if pos.ndim else jnp.full((b,), pos, jnp.int32)    # [B]
+    act = jnp.asarray(active, bool)
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    positions = pos_v[:, None] + jnp.arange(t, dtype=jnp.int32)    # [B, T]
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    rows = jnp.where(act[:, None], positions, pos_v[:, None])
+    cache = _store_rows(cache, k, v, rows, kv_bits)
+    kc, vc = _load(cache, kv_bits, x.dtype)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=pos_v)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, t, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
+def attention_verify_paged(params, x, cache: KVCache, pos, active,
+                           block_tables, *, n_heads, n_kv, head_dim,
+                           rope_theta, kv_bits):
+    """Paged-pool twin of ``attention_verify``: the T rows per slot are
+    scattered through the slot's block table (the scheduler's COW pass
+    has made every block overlapping [pos, pos+T) exclusively owned),
+    inactive slots' writes are redirected to the null block's rows,
+    then queries attend the gathered logical rows under the same
+    absolute-position causal mask — bit-identical to the dense verify
+    path by the masked-extra-columns argument.
+    Returns (out [B, T, D], new_cache).
+    """
+    b, t, _ = x.shape
+    bs = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_v = pos if pos.ndim else jnp.full((b,), pos, jnp.int32)    # [B]
+    act = jnp.asarray(active, bool)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    q, k, v = qkv_project(params, x, n_heads, n_kv, head_dim)
+    positions = pos_v[:, None] + jnp.arange(t, dtype=jnp.int32)    # [B, T]
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    # clip only for table indexing: inactive slots may sit near the
+    # ceiling, and their targets are overridden to null-block rows
+    pc = jnp.minimum(positions, bt.shape[1] * bs - 1)
+    blk = jnp.take_along_axis(bt, pc // bs, axis=1)                # [B, T]
+    dst = jnp.where(act[:, None], blk * bs + pc % bs,
+                    jnp.arange(t, dtype=jnp.int32)[None, :] % bs)
+    cache = _paged_store_rows(cache, k.reshape(b * t, n_kv, head_dim),
+                              v.reshape(b * t, n_kv, head_dim),
+                              dst.reshape(-1), kv_bits)
+    row = _paged_gather_rows(cache, bt)              # leaves [B, L, ...]
+    kc, vc = _load(row, kv_bits, x.dtype)
+    q = hint(q, "batch", None, "model", None)
+    ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
+    ve = hint(_expand_kv(vc, n_heads), "batch", None, "model", None)
+    out = attend_full(q, ke, ve, causal=True, q_offset=pos_v)
+    out = hint(out, "batch", None, "model", None)
+    out = dot(out.reshape(b, t, n_heads * head_dim), params["wo"])
+    return out, cache
+
+
 def cross_attention(params, x, enc_kv, *, n_heads, n_kv, head_dim):
     """Decoder cross-attention to a precomputed encoder (k, v)."""
     b, s, _ = x.shape

@@ -364,6 +364,61 @@ class LanguageModel:
         logits = self._logits(params, x)[:, 0]
         return logits, {"main": new_main, "tail": new_tail}
 
+    def verify_step(self, params, tokens, caches, pos, active,
+                    block_tables=None):
+        """Speculative verification: score T candidate tokens per slot
+        against the live serving cache in ONE dispatch.
+
+        ``tokens`` [B, T] int32 is each slot's draft chain starting at
+        its pending token; ``pos`` [B] the slots' current positions;
+        ``active`` [B] bool marks slots actually verifying (the rest
+        ride along masked, exactly like idle rows in ``decode_step``).
+        Row t of the returned logits [B, T, V] is the model's
+        next-token distribution after ``tokens[:, :t+1]`` — identical
+        bits to what T sequential ``decode_step`` calls would produce —
+        so the caller accepts the longest matching draft prefix and
+        rolls the rest back by simply not advancing ``pos`` past it.
+        Requires ``supports_chunked_prefill`` (same all-global-attention
+        contract as chunked prefill).  Paged layout: pass
+        ``block_tables`` [B, n_bt].  Returns (logits [B, T, V],
+        new caches).
+        """
+        if not self.supports_chunked_prefill:
+            raise NotImplementedError(
+                "verify_step needs an all-global-attention model "
+                "(same contract as chunked prefill)")
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)       # [B, T, D]
+        ctx = DecodeCtx(pos=jnp.asarray(pos, jnp.int32),
+                        block_tables=block_tables,
+                        active=jnp.asarray(active))
+
+        def scan_body(h, xs):
+            unit_params, cache = xs
+            new_caches = {}
+            for si, kind in enumerate(self.kinds):
+                h, c, _ = apply_sublayer(
+                    cfg, kind, unit_params[f"sub_{si}"], h, mode="verify",
+                    cache=cache[f"sub_{si}"], ctx=ctx, kv_bits=self.kv_bits)
+                new_caches[f"sub_{si}"] = c
+            return h, new_caches
+
+        x, new_main = self._scan(scan_body, x,
+                                 (params["blocks"], caches["main"]))
+        new_tail = None
+        if self.n_tail:
+            def tail_body(h, xs):
+                up, cache = xs
+                h, c, _ = apply_sublayer(
+                    cfg, self.kinds[0], up["sub_0"], h, mode="verify",
+                    cache=cache["sub_0"], ctx=ctx, kv_bits=self.kv_bits)
+                return h, {"sub_0": c}
+            x, new_tail = self._scan(tail_body, x,
+                                     (params["tail"], caches["tail"]))
+        x = self._final_norm(params, x)
+        logits = self._logits(params, x)                    # [B, T, V]
+        return logits, {"main": new_main, "tail": new_tail}
+
     # ---------------- decode-cache construction ----------------
 
     def init_caches(self, batch: int, max_len: int, fill_len):

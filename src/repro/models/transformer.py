@@ -238,6 +238,9 @@ class DecodeCtx(NamedTuple):
     # paged KV layout: [B, n_bt] int32 (decode) or [n_bt] (one slot's
     # prefill chunk) mapping logical blocks to pool rows.  None selects
     # the dense slot-indexed layout.
+    active: jnp.ndarray | None = None
+    # mode="verify" only: [B] bool marking slots whose T candidate rows
+    # are really scored/written; inactive rows ride along masked.
 
 
 def _norm(cfg, x, g, b=None):
@@ -272,8 +275,15 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
                    enc_kv=None, q_chunk: int = 512,
                    max_len: int | None = None, kv_bits: int = 4,
                    kv_chunk: int = 512):
-    """mode in {train, prefill, prefill_chunk, decode}.
+    """mode in {train, prefill, prefill_chunk, decode, verify}.
     Returns (x, new_cache, aux).
+
+    ``verify`` (global attention only) is the speculative-decoding
+    scorer: x [B, T, D] holds T draft-chain tokens per slot at absolute
+    positions [ctx.pos, ctx.pos+T), written into the live cache and
+    attended under the same per-position masks as T single-token decode
+    steps — one dispatch, bit-identical logits.  ``ctx.active`` masks
+    the slots actually verifying.
 
     ``prefill_chunk`` (global attention only) runs a fixed-size chunk of
     one slot's prompt at absolute positions [ctx.pos, ctx.pos+C) against
@@ -324,6 +334,18 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
                 sub["mix"], h, self_cache, ctx.pos, kv_bits=kv_bits,
                 window=window, kv_chunk=kv_chunk,
                 kernel_ok=kind in KERNEL_COVERED_KINDS, **akw)
+        elif mode == "verify":
+            if kind != "attention":
+                raise NotImplementedError(
+                    f"verify only supports global attention, got {kind!r}")
+            if paged:
+                mix, new_self = attn.attention_verify_paged(
+                    sub["mix"], h, self_cache, ctx.pos, ctx.active,
+                    ctx.block_tables, kv_bits=kv_bits, **akw)
+            else:
+                mix, new_self = attn.attention_verify(
+                    sub["mix"], h, self_cache, ctx.pos, ctx.active,
+                    kv_bits=kv_bits, **akw)
         elif mode == "prefill_chunk":
             if kind != "attention":
                 raise NotImplementedError(
@@ -349,7 +371,7 @@ def apply_sublayer(cfg: ArchConfig, kind: str, sub, x, *, mode: str,
                 **akw)
             if mode == "prefill":
                 new_self = _fill_cache(cfg, kv, window, max_len, kv_bits)
-        if mode in ("prefill", "prefill_chunk", "decode"):
+        if mode in ("prefill", "prefill_chunk", "decode", "verify"):
             new_cache = ({"self": new_self, "enc": enc_kv}
                          if kind == "crossdec" else new_self)
     elif kind == "ssm":

@@ -1,8 +1,13 @@
+from repro.serve.config import EngineConfig
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.handle import StreamHandle
 from repro.serve.kv_manager import KVManager, PagedKVManager
 from repro.serve.params import (ForkError, InvalidParamsError,
                                 SamplingParams)
+from repro.serve.policy import (BeamSearchPolicy, DecodePolicy,
+                                GreedyPolicy, PolicyError,
+                                SpeculativePolicy)
 from repro.serve.runner import ModelRunner
 from repro.serve.sampler import sample_token
 from repro.serve.scheduler import Scheduler
+from repro.serve.stats import KVStats, PackedStats, ServeStats

@@ -1,0 +1,114 @@
+"""Engine construction knobs as one frozen, validated dataclass.
+
+``ServeEngine`` grew 13 loose keyword arguments; ``EngineConfig`` is
+the typed replacement — construct once, validate in ``__post_init__``,
+tweak with ``replace()``, and round-trip to/from plain dicts for CLI
+flags and bench artifacts.  The engine still accepts the old kwargs as
+a deprecated shim that forwards here (and warns).
+
+``mesh`` is the one non-serializable field: an explicit
+``jax.sharding.Mesh`` for tensor-parallel serving.  ``as_dict()``
+omits it (pass ``tp=N`` instead, which the engine resolves to a mesh
+over the first N visible devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+DEFAULT_CHUNK_BUCKETS = (8, 64)
+
+KV_LAYOUTS = ("dense", "paged")
+BACKENDS = ("reference", "quantized")
+OVERFLOW_POLICIES = ("truncate", "reject")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated construction-time configuration for ``ServeEngine``.
+
+    Fields mirror the historical kwargs one-for-one:
+
+    - ``batch_slots``      — concurrent decode slots.
+    - ``max_len``          — per-slot KV ceiling (prompt + generated).
+    - ``eos_id``           — engine-wide eos (per-request override wins).
+    - ``seed``             — engine PRNG seed for seedless sampled streams.
+    - ``chunk_buckets``    — prefill chunk sizes (one compile per bucket).
+    - ``overflow_policy``  — long prompts: ``truncate`` or ``reject``.
+    - ``backend``          — ``reference`` or ``quantized`` (Pallas kernels).
+    - ``kernel_interpret`` — force Pallas interpret mode (None = auto).
+    - ``kv_layout``        — ``dense`` rows or ``paged`` block pool.
+    - ``block_size``       — paged: rows per KV block.
+    - ``num_blocks``       — paged: pool size (None = slots worst case).
+    - ``tp``               — tensor-parallel degree (1 = single device).
+    - ``mesh``             — explicit serving mesh (overrides ``tp``).
+    """
+
+    batch_slots: int = 4
+    max_len: int = 512
+    eos_id: int | None = None
+    seed: int = 0
+    chunk_buckets: tuple[int, ...] = DEFAULT_CHUNK_BUCKETS
+    overflow_policy: str = "truncate"
+    backend: str = "reference"
+    kernel_interpret: bool | None = None
+    kv_layout: str = "dense"
+    block_size: int = 32
+    num_blocks: int | None = None
+    tp: int = 1
+    mesh: Any = None
+
+    def __post_init__(self):
+        if self.batch_slots < 1:
+            raise ValueError(
+                f"batch_slots must be >= 1, got {self.batch_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
+                             f"got {self.kv_layout!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.overflow_policy not in OVERFLOW_POLICIES:
+            raise ValueError(
+                f"overflow_policy must be one of {OVERFLOW_POLICIES}, "
+                f"got {self.overflow_policy!r}")
+        buckets = tuple(int(b) for b in self.chunk_buckets)
+        if not buckets or any(b < 1 for b in buckets):
+            raise ValueError(
+                f"chunk_buckets must be non-empty positive ints, "
+                f"got {self.chunk_buckets!r}")
+        object.__setattr__(self, "chunk_buckets", buckets)
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError(
+                f"num_blocks must be >= 1 or None, got {self.num_blocks}")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+
+    def replace(self, **changes) -> "EngineConfig":
+        """Return a copy with ``changes`` applied (re-validates)."""
+        return dataclasses.replace(self, **changes)
+
+    def as_dict(self) -> dict:
+        """Plain-dict form for JSON artifacts (omits ``mesh``)."""
+        d = dataclasses.asdict(self)
+        d.pop("mesh", None)
+        d["chunk_buckets"] = list(self.chunk_buckets)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineConfig":
+        """Rebuild from ``as_dict()`` output (unknown keys rejected)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown EngineConfig keys: {sorted(unknown)}")
+        kw = dict(d)
+        if "chunk_buckets" in kw:
+            kw["chunk_buckets"] = tuple(kw["chunk_buckets"])
+        return cls(**kw)

@@ -3,23 +3,42 @@
 The public front door is the **session API**: ``submit`` enqueues one
 stream and returns a live ``StreamHandle`` — incremental ``tokens()``
 iteration, ``result()``, ``cancel()`` (frees KV blocks immediately),
-and ``fork(n)`` (copy-free beam/speculative trees over the paged
-pool's copy-on-write ``fork``).  Streams carry per-request
-``SamplingParams`` (temperature, token budget, eos override, stop
-tokens, seed) and an integer ``priority``: lower values run first and
-may PREEMPT strictly-lower-priority live streams when slots or blocks
-run short — the victim is snapshotted to the host, its blocks freed,
-and it resumes later via prefix-sharing-aware re-prefill, bit-identical
-for greedy streams.  ``generate()`` remains as a thin batch-mode compat
-shim (submit + drain + legacy ``Request`` mirroring).
+and ``fork(n)`` (copy-free speculative trees over the paged pool's
+copy-on-write ``fork``).  Streams carry per-request ``SamplingParams``
+(temperature, token budget, eos override, stop tokens, seed, and a
+``DecodePolicy``) and an integer ``priority``: lower values run first
+and may PREEMPT strictly-lower-priority live streams when slots or
+blocks run short — the victim is snapshotted to the host, its blocks
+freed, and it resumes later via prefix-sharing-aware re-prefill,
+bit-identical for greedy streams.  ``generate()`` remains as a thin
+batch-mode compat shim (submit + drain + legacy ``Request`` mirroring).
+
+Engine construction takes a frozen ``EngineConfig``
+(``serve/config.py``)::
+
+    engine = ServeEngine(model, params, config=EngineConfig(
+        batch_slots=8, kv_layout="paged", backend="quantized"))
+
+The historical loose keyword form (``ServeEngine(model, params,
+batch_slots=8, ...)``) still works behind a ``DeprecationWarning`` —
+the kwargs are folded into an ``EngineConfig`` and validated there.
+
+Decode policies (``serve/policy.py``) select the generation strategy
+per request: ``GreedyPolicy`` (default, one token per batched decode
+step), ``SpeculativePolicy`` (draft k tokens on a cheap substrate,
+verify the chain in ONE batched ``runner.verify`` dispatch, accept the
+longest valid prefix — greedy streams bit-identical, sampled streams
+distribution-exact via rejection sampling), and ``BeamSearchPolicy``
+(width-W beams as copy-on-write forks, jointly re-ranked per step —
+paged layout only).
 
 The serving stack is three layers behind this stable API:
 
 - ``serve/scheduler.py`` — priority queue + re-entrant ``step()`` loop,
   admission (overflow truncate/reject, block-granular on paged),
   preemption/cancellation/fork lifecycle, Sarathi-style interleave of
-  prefill chunks with batched decode, streaming ``on_token`` callbacks,
-  TTFT/ITL/queue-time/compile metrics;
+  prefill chunks with batched decode + policy rounds, streaming
+  ``on_token`` callbacks, TTFT/ITL/queue-time/compile metrics;
 - ``serve/kv_manager.py``  — the shared serving cache in one of two
   layouts (``kv_layout=``): ``dense`` slot-indexed rows
   (``model.init_caches``, ``[layers, slots, max_len, ...]``) or the
@@ -30,15 +49,17 @@ The serving stack is three layers behind this stable API:
   snapshot/release, memory that scales with live tokens instead of
   ``slots x max_len``;
 - ``serve/runner.py``     — the only layer that touches ``jax.jit``:
-  one decode compile, one prefill compile per chunk bucket, one block
-  copy (COW) — unchanged by the session API.
+  one decode compile, one prefill compile per chunk bucket, one verify
+  compile per chain length in flight, one block copy (COW) — unchanged
+  by the session API.
 
 Admission streams the prompt as fixed-size, zero-padded chunks written
 DIRECTLY into the slot's rows of the shared cache
 (``model.prefill_chunk``) — no batch=1 side cache, no whole-tree copy,
 and prefill compilations bounded by the chunk-bucket count instead of
 one per distinct prompt length.  Each generation step remains a single
-jitted ``decode_step`` dispatch over all slots.  Models whose states
+jitted ``decode_step`` dispatch over all slots (plus at most one verify
+dispatch when speculative streams are live).  Models whose states
 cannot chunk (sliding-window / SSM / RG-LRU / cross-attention / MoE
 routing) fall back to whole-prompt prefill automatically.
 
@@ -51,67 +72,108 @@ automatic per-sublayer reference fallback — greedy token streams stay
 identical to ``backend="reference"``.  Designed for clarity +
 testability on CPU; the jitted inner fns are the same ones the dry-run
 lowers at production shapes.
+
+Observability: ``engine.stats()`` returns the typed ``ServeStats`` for
+the last closed window (``serve/stats.py``); ``last_stats`` /
+``kv_stats`` / ``packed_stats`` remain as legacy dict views of the
+same numbers.
 """
 from __future__ import annotations
 
+import warnings
+
+from repro.serve.config import EngineConfig
 from repro.serve.handle import StreamHandle
 from repro.serve.kv_manager import KVManager, PagedKVManager
 from repro.serve.params import ForkError, InvalidParamsError, SamplingParams
-from repro.serve.runner import DEFAULT_CHUNK_BUCKETS, ModelRunner
+from repro.serve.policy import (BeamSearchPolicy, DecodePolicy,
+                                DraftSubstrate, GreedyPolicy, PolicyError,
+                                SpeculativePolicy, build_draft_source)
+from repro.serve.runner import ModelRunner
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.stats import KVStats, PackedStats, ServeStats
 
 __all__ = ["Request", "SamplingParams", "StreamHandle", "ServeEngine",
-           "InvalidParamsError", "ForkError"]
-
-KV_LAYOUTS = ("dense", "paged")
+           "EngineConfig", "InvalidParamsError", "ForkError",
+           "DecodePolicy", "GreedyPolicy", "SpeculativePolicy",
+           "BeamSearchPolicy", "PolicyError",
+           "ServeStats", "KVStats", "PackedStats"]
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, eos_id: int | None = None,
-                 seed: int = 0, chunk_buckets=DEFAULT_CHUNK_BUCKETS,
-                 overflow_policy: str = "truncate",
-                 backend: str = "reference",
-                 kernel_interpret: bool | None = None,
-                 kv_layout: str = "dense", block_size: int = 32,
-                 num_blocks: int | None = None, tp: int = 1, mesh=None):
-        if batch_slots < 1:
-            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
-        if kv_layout not in KV_LAYOUTS:
-            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
-                             f"got {kv_layout!r}")
-        if kv_layout == "paged" and not model.supports_chunked_prefill:
+    def __init__(self, model, params, config: EngineConfig | None = None,
+                 **kwargs):
+        if config is not None and kwargs:
+            raise ValueError(
+                f"pass either config=EngineConfig(...) or loose engine "
+                f"kwargs, not both (got config plus {sorted(kwargs)})")
+        if config is None:
+            if kwargs:
+                warnings.warn(
+                    "loose ServeEngine keyword arguments are deprecated; "
+                    "pass config=EngineConfig(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**kwargs)     # validates in __post_init__
+        self.config = config
+        cfg = config
+        if cfg.kv_layout == "paged" and not model.supports_chunked_prefill:
             raise ValueError(
                 "kv_layout='paged' needs a model with chunked-prefill "
                 "support (all-global-attention); window/SSM/RG-LRU/"
                 "cross-attention/MoE models keep the dense layout")
         self.model = model
-        self.slots = batch_slots
-        self.max_len = max_len
+        self.slots = cfg.batch_slots
+        self.max_len = cfg.max_len
         # tensor parallelism: pass an explicit 1-D ('model',) mesh, or
         # just tp=N to build one over the first N visible devices
-        if mesh is None and tp > 1:
+        mesh = cfg.mesh
+        if mesh is None and cfg.tp > 1:
             from repro.launch.mesh import make_serving_mesh
-            mesh = make_serving_mesh(tp)
-        self.runner = ModelRunner(model, params, max_len=max_len,
-                                  chunk_buckets=chunk_buckets,
-                                  backend=backend,
-                                  kernel_interpret=kernel_interpret,
-                                  paged=kv_layout == "paged", mesh=mesh)
+            mesh = make_serving_mesh(cfg.tp)
+        self.runner = ModelRunner(model, params, max_len=cfg.max_len,
+                                  chunk_buckets=cfg.chunk_buckets,
+                                  backend=cfg.backend,
+                                  kernel_interpret=cfg.kernel_interpret,
+                                  paged=cfg.kv_layout == "paged", mesh=mesh)
         # the runner's tree, not the constructor arg: on the quantized
         # backend the runner packs covered linears, and pinning the
         # original here would keep BOTH weight copies resident
         self.params = self.runner.params
-        if kv_layout == "paged":
-            self.kv = PagedKVManager(model, batch_slots, max_len,
-                                     block_size=block_size,
-                                     num_blocks=num_blocks,
+        # ...except as the DRAFT weight source: tp-sharded packed
+        # linears cannot run outside kernel mode, so the quantized-
+        # backend draft substrate (reference, tp=1) needs the original
+        # compact quantized containers.  Kept lazily relevant — the
+        # reference backend aliases self.params (no extra bytes), and
+        # quantized engines pay the second (compact) copy only if
+        # they were constructed from one.
+        self._draft_source = (params if cfg.backend == "quantized"
+                              else self.runner.params)
+        if cfg.kv_layout == "paged":
+            self.kv = PagedKVManager(model, cfg.batch_slots, cfg.max_len,
+                                     block_size=cfg.block_size,
+                                     num_blocks=cfg.num_blocks,
                                      place=self.runner.place_caches)
         else:
-            self.kv = KVManager(model, batch_slots, max_len,
+            self.kv = KVManager(model, cfg.batch_slots, cfg.max_len,
                                 place=self.runner.place_caches)
-        self.scheduler = Scheduler(self.runner, self.kv, eos_id=eos_id,
-                                   seed=seed, overflow_policy=overflow_policy)
+        self.scheduler = Scheduler(self.runner, self.kv, eos_id=cfg.eos_id,
+                                   seed=cfg.seed,
+                                   overflow_policy=cfg.overflow_policy)
+        if model.supports_chunked_prefill:
+            self.scheduler.draft_factory = self._build_draft
+
+    def _build_draft(self, kind: str) -> DraftSubstrate:
+        """Draft-substrate factory for ``SpeculativePolicy`` streams:
+        a reference-backend, dense-cache, tp=1 mirror of this engine
+        (``draft='self'``: same weights; ``'tiny'``: the first scan
+        unit sliced out).  Built lazily on the first speculative
+        stream per draft kind; compile caches and dispatch counters
+        are the substrate's own."""
+        dmodel, dparams = build_draft_source(self.model,
+                                             self._draft_source, kind)
+        return DraftSubstrate(dmodel, dparams, slots=self.slots,
+                              max_len=self.max_len,
+                              chunk_buckets=self.runner.chunk_buckets)
 
     # ---------------- session API ----------------
 
@@ -119,17 +181,19 @@ class ServeEngine:
                priority: int = 0, on_token=None) -> StreamHandle:
         """Enqueue one stream and return its live handle.  ``params``
         defaults to greedy ``SamplingParams()`` and is validated now
-        (``InvalidParamsError``); lower ``priority`` runs first and may
-        preempt strictly-lower-priority live streams.  The handle joins
-        the running batch mid-flight on the next ``step()``."""
+        (``InvalidParamsError``), including the policy/engine fit
+        (beam search needs the paged layout; speculative decoding
+        needs chunked prefill); lower ``priority`` runs first and may
+        preempt strictly-lower-priority live streams.  The handle
+        joins the running batch mid-flight on the next ``step()``."""
         return self.scheduler.submit(prompt, params, priority=priority,
                                      on_token=on_token)
 
     def step(self) -> bool:
         """Advance every live stream by one engine iteration (at most
-        one prefill chunk + one batched decode dispatch).  Returns True
-        while work remains.  Handle accessors (``tokens()`` /
-        ``result()``) pump this for you."""
+        one prefill chunk + one batched decode dispatch + one batched
+        verify dispatch).  Returns True while work remains.  Handle
+        accessors (``tokens()`` / ``result()``) pump this for you."""
         return self.scheduler.step()
 
     def drain(self):
@@ -151,6 +215,13 @@ class ServeEngine:
 
     # ---------------- stable observability surface ----------------
 
+    def stats(self) -> ServeStats | None:
+        """Typed stats for the last closed serving window (None before
+        the first window closes).  ``.kv`` nests the ``KVStats``
+        snapshot; ``.as_dict()`` reproduces the legacy ``last_stats``
+        schema key-for-key."""
+        return self.scheduler.last_stats_typed
+
     @property
     def backend(self) -> str:
         return self.runner.backend
@@ -167,16 +238,29 @@ class ServeEngine:
     @property
     def kv_stats(self) -> dict:
         """KV memory/occupancy: layout + pool bytes, plus (paged) block
-        totals, live/peak occupancy, and prefix-sharing counters."""
+        totals, live/peak occupancy, and prefix-sharing counters.
+        (Legacy dict view; ``stats().kv`` is the typed record.)"""
         return self.kv.stats()
+
+    @property
+    def kv_stats_typed(self) -> KVStats:
+        """Current KV memory/occupancy as a typed ``KVStats``."""
+        return KVStats.from_dict(self.kv.stats())
 
     @property
     def packed_stats(self) -> dict | None:
         """Packed-weight coverage + memory split for the quantized
         backend (None on reference): packed_linears / reference_linears
         / unfused_linears / fused_projections / packed_bytes /
-        packed_bytes_per_device / tp / quantized_linears_total."""
+        packed_bytes_per_device / tp / quantized_linears_total.
+        (Legacy dict view; ``packed_stats_typed`` is the record.)"""
         return self.runner.pack_stats
+
+    @property
+    def packed_stats_typed(self) -> PackedStats | None:
+        if self.runner.pack_stats is None:
+            return None
+        return PackedStats.from_dict(self.runner.pack_stats)
 
     @property
     def decode_steps(self) -> int:
@@ -185,6 +269,10 @@ class ServeEngine:
     @property
     def decode_dispatches(self) -> int:
         return self.runner.decode_dispatches
+
+    @property
+    def verify_dispatches(self) -> int:
+        return self.runner.verify_dispatches
 
     @property
     def last_stats(self) -> dict:

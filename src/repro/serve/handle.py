@@ -59,6 +59,8 @@ class StreamHandle:
         self._slot: int | None = None       # across preemption
         self._key = None                # saved sampler key (np [2] u32)
         self._span = None               # reserved row span (fork bound)
+        self._beam = None               # BeamGroup membership, if any
+        self._forks = 0                 # children forked off this stream
         self._t_submit = time.perf_counter()
         self._t_admit: float | None = None
         self._ttft_s: float | None = None
@@ -136,11 +138,23 @@ class StreamHandle:
         ref-counted ``fork`` + copy-on-write on first divergent write).
         Each fork inherits the emitted-so-far tokens and continues
         independently; ``params``/``priority`` override per fork.
+        Each child's sampler key derives from the parent's chain with
+        the fork index folded in, so sibling forks with inherited
+        ``temperature > 0`` params diverge deterministically.
         Raises ``ForkError`` on the dense layout, on a non-decode-state
-        stream, when no slot is free, or when ``params`` asks for more
-        rows than the parent's reserved span."""
+        stream, on a beam-search member (the group owns its forks),
+        when no slot is free, or when ``params`` asks for more rows
+        than the parent's reserved span."""
         return self._sched.fork_stream(self, n, params=params,
                                        priority=priority)
+
+    @property
+    def beam_hypotheses(self):
+        """Beam-search only: finished hypotheses as (score, tokens),
+        best first (``None`` for non-beam streams)."""
+        if self._beam is None:
+            return None
+        return self._beam.hypotheses
 
     def __repr__(self):
         return (f"StreamHandle(rid={self.rid}, status={self.status!r}, "

@@ -124,6 +124,19 @@ class KVManager:
             raise ValueError(f"slot {slot} already free")
         self._free.append(slot)
 
+    def rollback(self, slot: int, new_pos: int):
+        """Truncate slot ``slot``'s logical length to ``new_pos`` rows —
+        the speculative-rejection path.  A verify dispatch writes T
+        candidate rows at [pos, pos+T); accepting ``m`` emissions simply
+        sets ``pos + m`` here, so the rejected tail rows become ordinary
+        garbage behind the position-derived masks (every row is
+        rewritten by a later verify/decode at that position before any
+        query can attend it).  No cache bytes move."""
+        if not 0 <= new_pos <= self.max_len:
+            raise ValueError(
+                f"rollback to {new_pos} outside [0, {self.max_len}]")
+        self.pos[slot] = new_pos
+
     def stats(self) -> dict:
         leaves = [x for x in jax.tree.leaves(self.caches)
                   if hasattr(x, "nbytes")]
@@ -370,6 +383,23 @@ class PagedKVManager:
         self.pos[slot] = self.pos[src]
         self._shared_len[slot] = self.pos[src]
         return slot
+
+    def rollback(self, slot: int, new_pos: int):
+        """Truncate slot ``slot``'s logical tail to ``new_pos`` rows —
+        the speculative-rejection path, block-table edition.  The
+        rejected candidate rows live in blocks the slot already owns
+        exclusively (the scheduler's COW pass covers the whole verify
+        span before the dispatch) and admission reserved the worst-case
+        table up front, so nothing is freed or reallocated: ``pos``
+        stops short and later verify/decode writes reuse the same rows
+        in place.  Never truncates into the attached shared-prefix
+        region (those rows were never this slot's writes)."""
+        if not int(self._shared_len[slot]) <= new_pos <= self.max_len:
+            raise ValueError(
+                f"rollback to {new_pos} outside "
+                f"[{int(self._shared_len[slot])}, {self.max_len}] "
+                f"for slot {slot}")
+        self.pos[slot] = new_pos
 
     def writable_block(self, slot: int, block_idx: int) -> int:
         """Copy-on-write entry: make the slot's ``block_idx`` table

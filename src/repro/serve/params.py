@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.serve.policy import DecodePolicy, GreedyPolicy, PolicyError
+
 
 class InvalidParamsError(ValueError):
     """A ``SamplingParams`` field (or a submit-time argument such as
@@ -48,6 +50,13 @@ class SamplingParams:
     - ``seed``            per-stream PRNG seed for ``temperature > 0``
       (``None`` draws from the engine's seeded key chain).  Distinct
       seeds are how forked streams diverge under sampling.
+    - ``policy``          decode strategy (``serve/policy.py``):
+      ``GreedyPolicy()`` (default — one token per batched decode step),
+      ``SpeculativePolicy(k, draft)`` (draft-and-verify; greedy streams
+      stay bit-identical, sampled streams keep the exact target
+      distribution via rejection sampling), or
+      ``BeamSearchPolicy(width, length_penalty)`` (paged layout only,
+      requires ``temperature == 0`` and no ``on_token`` callback).
     """
 
     temperature: float = 0.0
@@ -56,6 +65,7 @@ class SamplingParams:
     ignore_eos: bool = False
     stop_tokens: tuple = ()
     seed: int | None = None
+    policy: DecodePolicy = GreedyPolicy()
 
     def validated(self) -> "SamplingParams":
         """Return self after strict validation (raises
@@ -92,4 +102,17 @@ class SamplingParams:
         if not isinstance(self.ignore_eos, bool):
             raise InvalidParamsError(
                 f"ignore_eos must be a bool, got {self.ignore_eos!r}")
+        if not isinstance(self.policy, DecodePolicy):
+            raise InvalidParamsError(
+                f"policy must be a DecodePolicy instance, "
+                f"got {self.policy!r}")
+        try:
+            self.policy.validated()
+        except PolicyError as e:
+            raise InvalidParamsError(str(e)) from e
+        if self.policy.name == "beam" and t > 0:
+            raise InvalidParamsError(
+                "BeamSearchPolicy requires temperature == 0 (beams rank "
+                "by exact log-probability; use SpeculativePolicy or "
+                "fork() for stochastic exploration)")
         return self

@@ -1,0 +1,474 @@
+"""Decode policies: per-request generation strategies over one engine.
+
+A ``DecodePolicy`` rides inside ``SamplingParams`` and selects how a
+stream turns verify/decode dispatches into emitted tokens:
+
+- ``GreedyPolicy``      — the default path, unchanged: one batched
+  decode dispatch per engine step, one token per live stream.
+- ``SpeculativePolicy`` — draft k tokens per step with a cheap draft
+  model (``draft='self'``: the same weights through the reference
+  backend; ``draft='tiny'``: a layer-truncated sibling sharing the
+  first block's weights), then score the whole chain in ONE batched
+  ``runner.verify`` dispatch through the serving backend and accept the
+  longest valid prefix.  Greedy streams are bit-identical to
+  ``GreedyPolicy`` (every emitted token is the target argmax, whether
+  it came from a matched draft or the verify row itself); sampled
+  streams use rejection sampling so the output distribution is exactly
+  the target distribution regardless of draft quality.  Rejected
+  positions roll back by truncating ``kv.pos`` (``kv.rollback``) — the
+  cache rows past the acceptance point are dead weight until rewritten.
+- ``BeamSearchPolicy``  — width-W beam search over copy-on-write forks
+  (paged layout only).  Beams ride the normal batched decode; after
+  each step the group re-ranks the joint (beam x token) candidates,
+  keeps the global top-W (extras fork via the kv-manager's ref-counted
+  ``fork``), prunes out-ranked beams, and collects finished hypotheses.
+  The user-facing handle resolves to the best hypothesis when the
+  group concludes.  ``width=1`` degenerates to exactly the greedy
+  stream (the bit-identity oracle used in tests).
+
+This module is imported by ``params.py`` (the ``policy`` field) and
+``scheduler.py`` (the runtime helpers) — it must not import either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+DRAFT_KINDS = ("self", "tiny")
+
+
+class PolicyError(ValueError):
+    """A ``DecodePolicy`` failed validation (bad field value, or a
+    policy/engine combination the substrate cannot serve — e.g. beam
+    search on the dense KV layout)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePolicy:
+    """Base class for per-request decode strategies.  Frozen (rides
+    inside the frozen ``SamplingParams``); ``name`` identifies the
+    policy for validation/stats without isinstance chains."""
+
+    name = "greedy"
+
+    def validated(self) -> "DecodePolicy":
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyPolicy(DecodePolicy):
+    """One batched decode dispatch per step, one token per stream —
+    the PR 1-7 path, byte-for-byte.  (Despite the name this also covers
+    ``temperature > 0`` sampling; 'greedy' names the dispatch pattern,
+    not the token choice.)"""
+
+    name = "greedy"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativePolicy(DecodePolicy):
+    """Draft ``k`` tokens per step, verify the chain in one batched
+    target dispatch, accept the longest valid prefix.
+
+    - ``k``      draft tokens per round (the verify dispatch scores
+      ``k + 1`` positions: the pending token plus the k drafts).
+    - ``draft``  draft substrate: ``'self'`` runs the engine's own
+      weights through the reference backend on a dense mirror cache
+      (accept rate ~1.0 on greedy streams — the latency win comes from
+      batching k positions into one target dispatch); ``'tiny'`` slices
+      the first transformer block into a 1-unit sibling model (cheap
+      but lossy drafts — the verify step keeps the output exact).
+    """
+
+    name = "speculative"
+    k: int = 4
+    draft: str = "self"
+
+    def validated(self) -> "SpeculativePolicy":
+        if not isinstance(self.k, int) or isinstance(self.k, bool) \
+                or self.k < 1:
+            raise PolicyError(
+                f"SpeculativePolicy.k must be an int >= 1, got {self.k!r}")
+        if self.draft not in DRAFT_KINDS:
+            raise PolicyError(
+                f"SpeculativePolicy.draft must be one of {DRAFT_KINDS}, "
+                f"got {self.draft!r}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamSearchPolicy(DecodePolicy):
+    """Width-W beam search over copy-on-write forks (paged layout).
+
+    - ``width``           beams kept live per step (global top-W over
+      the joint (beam, token) candidates).  ``width=1`` is bit-identical
+      to the greedy stream.
+    - ``length_penalty``  hypothesis score = cum_logprob / len**penalty
+      (0.0 = raw cumulative log-probability).
+
+    Requires ``temperature == 0`` (beam search ranks by exact logprob)
+    and no ``on_token`` callback (intermediate beams are provisional —
+    the final token sequence is chosen at group conclusion).
+    """
+
+    name = "beam"
+    width: int = 4
+    length_penalty: float = 0.0
+
+    def validated(self) -> "BeamSearchPolicy":
+        if not isinstance(self.width, int) or isinstance(self.width, bool) \
+                or self.width < 1:
+            raise PolicyError(
+                f"BeamSearchPolicy.width must be an int >= 1, "
+                f"got {self.width!r}")
+        try:
+            lp = float(self.length_penalty)
+        except (TypeError, ValueError):
+            lp = None
+        if lp is None or lp != lp or lp < 0.0:
+            raise PolicyError(
+                f"BeamSearchPolicy.length_penalty must be a finite "
+                f"float >= 0, got {self.length_penalty!r}")
+        return self
+
+
+# ---------------- host-side distribution helpers ----------------
+#
+# All acceptance/ranking math runs on the host in float64 over logits
+# pulled once per dispatch: numerically stable, and every random draw
+# goes through the stream's own split-chain so outputs stay
+# deterministic per seed under any concurrent traffic.
+
+def softmax(logits: np.ndarray) -> np.ndarray:
+    """Stable float64 softmax over the last axis."""
+    x = np.asarray(logits, np.float64)
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def log_softmax(logits: np.ndarray) -> np.ndarray:
+    """Stable float64 log-softmax over the last axis."""
+    x = np.asarray(logits, np.float64)
+    x = x - x.max(axis=-1, keepdims=True)
+    return x - np.log(np.exp(x).sum(axis=-1, keepdims=True))
+
+
+def top_tokens(logp: np.ndarray, n: int) -> np.ndarray:
+    """Indices of the ``n`` largest entries, ties broken toward the
+    lower token id (stable argsort) — deterministic across runs."""
+    return np.argsort(-logp, kind="stable")[:n]
+
+
+def categorical(probs: np.ndarray, u: float) -> int:
+    """Inverse-CDF draw from ``probs`` at uniform ``u`` in [0, 1)."""
+    cdf = np.cumsum(probs)
+    cdf[-1] = 1.0               # close fp gaps at the top
+    return int(min(np.searchsorted(cdf, u, side="right"),
+                   len(probs) - 1))
+
+
+# ---------------- speculative draft substrate ----------------
+
+def build_draft_source(model, params, kind: str):
+    """Resolve a draft spec to a (model, params) pair.
+
+    ``'self'`` returns the inputs unchanged (same weights, reference
+    backend).  ``'tiny'`` builds a 1-period sibling model (one unit of
+    the scan stack) and tree-slices the stacked block params to match —
+    embed / final norm / lm_head are shared as-is.  Slicing keeps the
+    quantized containers' static metadata, so a ``QuantizedLinear``
+    tree drafts through ``quantized_dot`` exactly like the full model's
+    first block would.
+    """
+    if kind == "self":
+        return model, params
+    if kind != "tiny":
+        raise PolicyError(f"unknown draft kind {kind!r} "
+                          f"(expected one of {DRAFT_KINDS})")
+    period = len(model.kinds)           # sub-layers per scan unit
+    cfg = model.cfg.replace(n_layers=period)
+    tiny = type(model)(cfg, q_chunk=model.q_chunk,
+                       loss_chunk=model.loss_chunk, kv_bits=model.kv_bits,
+                       scan_unroll=model.scan_unroll,
+                       kv_chunk=model.kv_chunk)
+    if tiny.n_tail:
+        raise PolicyError(
+            "draft='tiny' needs a uniform scan stack (no tail units)")
+    tparams = {k: v for k, v in params.items() if k != "blocks"}
+    tparams["blocks"] = jax.tree.map(
+        lambda a: a[:1] if getattr(a, "ndim", 0) else a, params["blocks"])
+    return tiny, tparams
+
+
+class DraftSubstrate:
+    """Reference-backend draft model over a dense mirror cache.
+
+    One substrate per draft kind per engine, sized to the same slot
+    count / max_len as the target so draft slot s mirrors target slot
+    s.  ``fill[s]`` counts the draft-cache rows whose K/V matches the
+    owning stream's sequence prefix; ``owner[s]`` detects slot reuse
+    (admission churn, preemption) — a claim by a different handle
+    resets the fill, and the next spec round re-prefills the history
+    through the draft's own chunk path.
+
+    The draft runner keeps its OWN compile caches and dispatch
+    counters; the target-side compile contract (1 decode + buckets +
+    1 verify shape) is unaffected by drafting.
+    """
+
+    def __init__(self, model, params, *, slots: int, max_len: int,
+                 chunk_buckets):
+        from repro.serve.runner import ModelRunner
+        self.runner = ModelRunner(model, params, max_len=max_len,
+                                  chunk_buckets=chunk_buckets,
+                                  backend="reference", paged=False)
+        self.slots = slots
+        self.caches = model.init_caches(slots, max_len, 0)
+        self.fill = np.zeros(slots, np.int32)
+        self.owner: list = [None] * slots
+
+    def claim(self, s: int, h) -> None:
+        """Bind slot ``s`` to handle ``h``; a new owner starts cold."""
+        if self.owner[s] is not h:
+            self.owner[s] = h
+            self.fill[s] = 0
+
+    def catch_up(self, s: int, seq: np.ndarray, upto: int) -> None:
+        """Prefill draft rows [fill, upto) from ``seq`` through the
+        bucketed chunk path (multiple chunks for a long history)."""
+        src = np.asarray(seq[:upto], np.int32)
+        while int(self.fill[s]) < upto:
+            before = int(self.fill[s])
+            _, self.caches, n_new = self.runner.prefill_chunk(
+                self.caches, src, s, before)
+            if n_new <= 0:      # defensive: chunk path always advances
+                raise RuntimeError("draft catch-up made no progress")
+            self.fill[s] = before + n_new
+
+    def decode(self, tokens: np.ndarray, pos: np.ndarray):
+        """One batched draft decode step; returns device logits."""
+        logits, self.caches = self.runner.decode(tokens, self.caches, pos)
+        return logits
+
+
+# ---------------- beam search runtime ----------------
+
+@dataclasses.dataclass
+class _Beam:
+    h: object                   # StreamHandle occupying the slot
+    cum: float                  # cumulative log-probability
+
+
+class BeamGroup:
+    """One beam-search request: the user handle plus width-1 internal
+    fork handles, re-ranked jointly after every decode step.
+
+    Internal handles are invisible to users: never queued, never
+    preempted (the scheduler's victim scans skip beam members), pruned
+    via slot release when out-ranked.  If the USER handle's beam is the
+    one pruned, the user handle swaps onto the best surviving beam so
+    ``result()`` keeps driving the group.  Finished hypotheses are
+    scored ``cum / len**length_penalty``; at conclusion the best one
+    becomes the user handle's final ``out_tokens``.
+    """
+
+    def __init__(self, user, policy: BeamSearchPolicy):
+        self.user = user
+        self.width = policy.width
+        self.lp = float(policy.length_penalty)
+        self.members: dict[int, _Beam] = {}     # slot -> beam
+        self.done: list = []        # (score, cum, tokens)
+        self.finished = False
+
+    # -- lifecycle --
+
+    def seed(self, sched, h, logits_row: np.ndarray, w) -> None:
+        """Start the group from the prompt-completion logits: the best
+        token stays on the parent slot, the next width-1 fork."""
+        s = h._slot
+        h._beam = self
+        h.status = "decode"
+        logp = log_softmax(logits_row)
+        order = top_tokens(logp, self.width)
+        base_out = list(h.out_tokens)
+        t0 = int(order[0])
+        self.members[s] = _Beam(h, float(logp[t0]))
+        sched.next_tok[s] = t0
+        sched._emit(h, t0)
+        for t in order[1:]:
+            self._spawn(sched, s, h, base_out, int(t), float(logp[t]), w)
+        w["beam_streams"] += 1
+        for s2 in list(self.members):
+            self._maybe_finalize(sched, s2, w)
+        self._maybe_conclude(sched)
+
+    def step(self, sched, lg: np.ndarray, w) -> None:
+        """Re-rank after one decode dispatch.  ``lg`` is the host copy
+        of the step's logits ([slots, vocab]); positions are already
+        advanced, emission for beam slots happens here."""
+        live = [(s, m) for s, m in self.members.items()
+                if sched.active[s] is m.h and m.h.status == "decode"]
+        if not live:
+            self._maybe_conclude(sched)
+            return
+        cands = []                      # (cum, src_slot, token)
+        for s, m in live:
+            logp = log_softmax(lg[s])
+            for t in top_tokens(logp, self.width):
+                cands.append((m.cum + float(logp[t]), s, int(t)))
+        cands.sort(key=lambda c: (-c[0], c[1], c[2]))   # deterministic
+        winners = cands[:self.width]
+        by_src: dict[int, list] = {}
+        for cum, s, t in winners:
+            by_src.setdefault(s, []).append((cum, t))
+        # prune out-ranked beams FIRST so their slots can host forks
+        user_pruned = False
+        for s, m in live:
+            if s in by_src:
+                continue
+            beam = self.members.pop(s)
+            sched._release_slot(beam.h)
+            if beam.h is self.user:
+                user_pruned = True      # swapped onto a survivor below
+            else:
+                sched._finish(beam.h, "cancelled")
+        # winners: best continuation stays in-slot, extras fork
+        touched = []
+        for s, m in live:
+            ws = by_src.get(s)
+            if not ws:
+                continue
+            base_out = list(m.h.out_tokens)
+            cum0, t0 = ws[0]
+            m.cum = cum0
+            sched.next_tok[s] = t0
+            sched._emit(m.h, t0)
+            touched.append(s)
+            for cum, t in ws[1:]:
+                s2 = self._spawn(sched, s, m.h, base_out, t, cum, w)
+                if s2 is not None:
+                    touched.append(s2)
+        if user_pruned:
+            self._adopt_best_survivor(sched)
+        for s in touched:
+            if s in self.members:
+                self._maybe_finalize(sched, s, w)
+        self._maybe_conclude(sched)
+
+    def cancel(self, sched) -> None:
+        """Tear the whole group down (user ``cancel()``)."""
+        self.finished = True
+        for s, m in list(self.members.items()):
+            if m.h._slot is not None:
+                sched._release_slot(m.h)
+            if m.h is not self.user:
+                sched._finish(m.h, "cancelled")
+        self.members.clear()
+        if not self.user.finished:
+            sched._finish(self.user, "cancelled")
+
+    def pressure_prune(self, sched, s: int, w) -> None:
+        """Pool pressure forced beam ``s`` to yield: bank its content
+        as a (partial) hypothesis instead of preempting — beams cannot
+        re-prefill independently of their group."""
+        if s in self.members:
+            self._finalize(sched, s, w)
+            self._maybe_conclude(sched)
+
+    # -- internals --
+
+    def _spawn(self, sched, src_slot, parent, base_out, tok, cum, w):
+        """Fork one beam off ``src_slot`` with continuation ``tok``.
+        Returns the child slot, or None under slot/pool pressure (the
+        effective width shrinks for this step — dropped candidates are
+        the worst-ranked, so the search degrades gracefully)."""
+        from repro.serve.handle import StreamHandle
+        kv = sched.kv
+        s = kv.fork(src_slot) if kv.n_free else None
+        if s is None:
+            return None
+        ch = StreamHandle(sched, sched._auto_rid, parent.prompt,
+                          parent.params, parent.priority)
+        sched._auto_rid += 1
+        ch.truncated = parent.truncated
+        ch.out_tokens = list(base_out)
+        ch.status = "decode"
+        ch._slot = s
+        ch._span = parent._span
+        ch._beam = self
+        ch._t_admit = time.perf_counter()
+        ch.t_first, ch.t_last = parent.t_first, parent.t_last
+        sched.active[s] = ch
+        sched.fill[s] = sched.fill[src_slot]
+        sched.next_tok[s] = tok
+        sched.temps[s] = 0.0
+        self.members[s] = _Beam(ch, cum)
+        sched._emit(ch, tok)
+        return s
+
+    def _maybe_finalize(self, sched, s, w) -> None:
+        """Finish beam ``s`` if its last emitted token ended it."""
+        m = self.members[s]
+        h, p = m.h, m.h.params
+        last = h.out_tokens[-1]
+        eos = sched.eos if p.eos_id is None else p.eos_id
+        if (len(h.out_tokens) >= p.max_new_tokens
+                or (not p.ignore_eos and eos is not None and last == eos)
+                or last in p.stop_tokens
+                or int(sched.kv.pos[s]) + 1 >= sched.kv.max_len):
+            self._finalize(sched, s, w)
+
+    def _finalize(self, sched, s, w) -> None:
+        """Bank beam ``s`` as a finished hypothesis and free its slot.
+        The user handle stays non-terminal until the group concludes
+        (its result is the BEST hypothesis, not necessarily its own)."""
+        m = self.members.pop(s)
+        n = max(1, len(m.h.out_tokens))
+        score = m.cum / (n ** self.lp) if self.lp else m.cum
+        self.done.append((score, m.cum, list(m.h.out_tokens)))
+        sched._release_slot(m.h)
+        if m.h is not self.user:
+            sched._finish(m.h, "done")
+
+    def _adopt_best_survivor(self, sched) -> None:
+        """The user handle's own beam was pruned: move the user handle
+        onto the highest-scoring surviving beam (per-slot engine state
+        follows the SLOT, so only the handle identity moves)."""
+        if not self.members:
+            return                      # conclusion will finish the user
+        s = max(self.members, key=lambda s2: (self.members[s2].cum, -s2))
+        displaced = self.members[s].h
+        u = self.user
+        u.out_tokens = displaced.out_tokens
+        u._slot = s
+        u._span = displaced._span
+        sched.active[s] = u
+        self.members[s].h = u
+        displaced._slot = None
+        sched._finish(displaced, "cancelled")
+
+    def _maybe_conclude(self, sched) -> None:
+        if self.finished or self.members:
+            return
+        self.finished = True
+        u = self.user
+        if self.done:
+            best = max(self.done,
+                       key=lambda d: (d[0], d[1], tuple(d[2])))
+            u.out_tokens = list(best[2])
+        if u._slot is not None:         # defensive; members was empty
+            sched._release_slot(u)
+        if not u.finished:
+            sched._finish(u, "done")
+
+    @property
+    def hypotheses(self) -> list:
+        """Finished hypotheses as (score, tokens), best first."""
+        return [(d[0], list(d[2]))
+                for d in sorted(self.done,
+                                key=lambda d: (d[0], d[1], tuple(d[2])),
+                                reverse=True)]

@@ -169,15 +169,17 @@ class ModelRunner:
             lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         self._chunk_fns: dict[int, object] = {}   # bucket C -> jitted
         self._full_fns: dict[int, object] = {}    # prompt len -> jitted
+        self._verify_fns: dict[int, object] = {}  # draft len T -> jitted
 
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+        self.verify_dispatches = 0
         # per-mode kernel dispatch counts captured at trace time (the
         # python body of a jitted fn runs only on compile):
         # {"decode": {"decode_gemv": ..., "decode_linears": ...}, ...}
         self.trace_counts: dict[str, dict] = {}
 
-    def _traced(self, fn, mode: str):
+    def _traced(self, fn, mode: str, kernel_mode: str | None = None):
         """Backend shim: on the quantized backend the function is traced
         inside the serving kernel mode, baking the Pallas-kernel routing
         into the jitted computation; the reference backend traces it
@@ -187,15 +189,22 @@ class ModelRunner:
         all-gathers per step) into ``self.trace_counts[mode]`` (how many
         Pallas calls one step costs — the fused-projection win, asserted
         by serve-smoke; the all-reduce budget, asserted by the TP parity
-        lane)."""
+        lane).
+
+        ``kernel_mode`` overrides the kernel-routing context while the
+        counts still record under ``mode``: speculative verification
+        traces under the "prefill" kernel mode (its [B, T] token batch
+        is exactly the regime the ``bwa_matmul`` GEMM wins) but reports
+        as ``trace_counts["verify"]``."""
         if self.backend != "quantized":
             return fn
         tp = self.tp if self._use_shard_map else 1
+        kmode = kernel_mode or mode
 
         def traced(*args):
             reset_kernel_trace_counts()
             reset_comms_trace_counts()
-            with kernel_serving(mode, interpret=self.kernel_interpret), \
+            with kernel_serving(kmode, interpret=self.kernel_interpret), \
                     tp_serving(tp):
                 out = fn(*args)
             self.trace_counts[mode] = {**kernel_trace_counts(),
@@ -212,12 +221,14 @@ class ModelRunner:
         whole mesh."""
         return tuple(P(*([None] * n)) for n in n_args)
 
-    def _shard_wrap(self, fn, arg_ranks: tuple):
+    def _shard_wrap(self, fn, arg_ranks: tuple, out_rank: int = 2):
         """Wrap a jitted-step body in ``shard_map`` over the serving
         mesh: params split by their pack-time layout, caches by the
-        head-axis rule, controls replicated.  ``check_rep=False`` —
-        ``packed_dot`` re-replicates row-parallel outputs itself with
-        the one psum the comms budget allows."""
+        head-axis rule, controls replicated.  ``out_rank`` is the rank
+        of the replicated logits output (2 for decode/prefill [B, V],
+        3 for verify [B, T, V]).  ``check_rep=False`` — ``packed_dot``
+        re-replicates row-parallel outputs itself with the one psum the
+        comms budget allows."""
         if not self._use_shard_map:
             return fn
         from jax.experimental.shard_map import shard_map
@@ -228,7 +239,7 @@ class ModelRunner:
             fn, mesh=self.mesh,
             in_specs=(self._param_specs, ctrl[0], self._cache_specs)
             + ctrl[1:],
-            out_specs=(P(None, None), self._cache_specs),
+            out_specs=(P(*([None] * out_rank)), self._cache_specs),
             check_rep=False)
 
     def place_caches(self, caches):
@@ -261,6 +272,14 @@ class ModelRunner:
         path).  For chunked-prefill models this is bounded by
         ``len(chunk_buckets)`` regardless of traffic."""
         return len(self._chunk_fns) + len(self._full_fns)
+
+    @property
+    def verify_compiles(self) -> int:
+        """Distinct verification compilations: one per draft-chain
+        length T = k + 1 seen — bounded by the number of distinct
+        ``SpeculativePolicy.k`` values in traffic (1 under a uniform
+        policy)."""
+        return len(self._verify_fns)
 
     # ---------------- prefill ----------------
 
@@ -359,6 +378,40 @@ class ModelRunner:
             logits, caches = self._decode(self.params, jnp.asarray(tokens),
                                           caches, jnp.asarray(pos))
         self.decode_dispatches += 1
+        return logits, caches
+
+    def verify(self, tokens: np.ndarray, caches, pos: np.ndarray,
+               active: np.ndarray, block_tables: np.ndarray | None = None):
+        """ONE batched verification dispatch: score every slot's
+        [T]-token draft chain against the live cache
+        (``model.verify_step``).  ``tokens`` [slots, T]; ``active``
+        [slots] bool masks the verifying slots (the rest ride along).
+        Compiled once per distinct T and counted in
+        ``verify_dispatches`` — the scheduler's compile contract is
+        <=1 prefill + 1 decode + <=1 verify dispatch per step.
+        Returns (logits [slots, T, V] f32, new caches)."""
+        t = int(np.asarray(tokens).shape[1])
+        fn = self._verify_fns.get(t)
+        if fn is None:
+            if self.paged:
+                def verify_fn(p, toks, caches, pos, act, bt):
+                    return self.model.verify_step(p, toks, caches, pos, act,
+                                                  block_tables=bt)
+                ranks = (2, 1, 1, 2)    # tokens, pos, active, bt
+            else:
+                def verify_fn(p, toks, caches, pos, act):
+                    return self.model.verify_step(p, toks, caches, pos, act)
+                ranks = (2, 1, 1)       # tokens, pos, active
+            fn = self._verify_fns[t] = jax.jit(
+                self._traced(self._shard_wrap(verify_fn, ranks, out_rank=3),
+                             "verify", kernel_mode="prefill"),
+                donate_argnums=(2,))
+        args = [self.params, jnp.asarray(tokens, jnp.int32), caches,
+                jnp.asarray(pos, jnp.int32), jnp.asarray(active, bool)]
+        if self.paged:
+            args.append(jnp.asarray(block_tables, jnp.int32))
+        logits, caches = fn(*args)
+        self.verify_dispatches += 1
         return logits, caches
 
     def copy_blocks(self, caches, copies):

@@ -41,6 +41,17 @@ decode dispatch the scheduler copy-on-writes any live slot whose next
 write lands in a block shared with a sibling (one jitted block copy per
 divergence, drained through ``runner.copy_blocks``).
 
+Decode policies (``serve/policy.py``): each live slot decodes under its
+request's ``SamplingParams.policy``.  Plain streams and beam members
+ride the single batched decode dispatch (beam groups re-rank jointly on
+the host afterwards, forking/pruning through the COW substrate);
+SpeculativePolicy streams instead run a draft+verify round — draft k
+tokens on a cheap substrate, score every chain in ONE batched
+``runner.verify`` dispatch, accept the longest valid prefix, roll the
+rejected tail back via ``kv.rollback``.  The per-step dispatch contract
+becomes: <= 1 prefill chunk + <= 1 decode + <= 1 verify (the decode is
+skipped when only speculative streams are live).
+
 All jitted execution goes through ``serve/runner.py`` (same compile
 contract: 1 decode + 1 prefill per chunk bucket + 1 block copy);
 cache/slot state lives in ``serve/kv_manager.py``; this layer is
@@ -59,6 +70,7 @@ import numpy as np
 
 from repro.serve.handle import StreamHandle
 from repro.serve.params import ForkError, InvalidParamsError, SamplingParams
+from repro.serve.policy import BeamGroup, categorical, softmax
 from repro.serve.sampler import sample_token
 
 
@@ -127,10 +139,16 @@ class Scheduler:
         self._heap: list = []                       # (priority, seq, handle)
         self._seq = 0
         self._auto_rid = 0
+        # speculative decoding: draft substrates built lazily per draft
+        # kind through the engine-provided factory (None = spec streams
+        # are rejected at submit)
+        self.draft_factory: Callable | None = None
+        self._drafts: dict = {}
         # observability: generation steps vs jitted decode dispatches —
         # slot-parallel batching means these stay EQUAL at any slot count
         self.decode_steps = 0
         self.last_stats: dict = {}
+        self.last_stats_typed = None                # ServeStats record
         self._win: dict | None = None               # live stats window
 
     # ---------------- session API ----------------
@@ -149,6 +167,27 @@ class Scheduler:
         if not isinstance(priority, int) or isinstance(priority, bool):
             raise InvalidParamsError(
                 f"priority must be an int, got {priority!r}")
+        pol = params.policy
+        if pol.name == "speculative":
+            if not self.chunked:
+                raise InvalidParamsError(
+                    "SpeculativePolicy needs a chunked-prefill model "
+                    "(verification scores k+1 positions through the "
+                    "prefill attention path)")
+            if self.draft_factory is None:
+                raise InvalidParamsError(
+                    "this scheduler has no draft substrate — submit "
+                    "speculative streams through ServeEngine")
+        elif pol.name == "beam":
+            if not self.paged:
+                raise InvalidParamsError(
+                    "BeamSearchPolicy needs kv_layout='paged' (beams "
+                    "are copy-on-write forks of one prefix)")
+            if on_token is not None:
+                raise InvalidParamsError(
+                    "BeamSearchPolicy streams cannot stream via "
+                    "on_token — beam content is provisional until the "
+                    "group concludes (use result())")
         if rid is None:
             rid = self._auto_rid
         self._auto_rid = max(self._auto_rid + 1,
@@ -169,6 +208,13 @@ class Scheduler:
         lazily.  No-op on terminal streams."""
         if h.finished:
             return
+        if h._beam is not None and not h._beam.finished:
+            # cancelling any beam member tears the whole group down —
+            # beams are one request, not independent streams
+            h._beam.cancel(self)
+            if self._win is not None:
+                self._win["cancelled"] += 1
+            return
         if h._slot is not None:
             self._release_slot(h)
         if self._win is not None:
@@ -184,6 +230,11 @@ class Scheduler:
             raise ForkError(
                 "fork needs kv_layout='paged' (copy-on-write block pool); "
                 "the dense layout has no shared-block substrate")
+        if parent._beam is not None:
+            raise ForkError(
+                "cannot fork a beam-search stream — the beam group owns "
+                "its forks (submit a new BeamSearchPolicy request "
+                "instead)")
         if parent.status != "decode" or parent._slot is None:
             raise ForkError(
                 f"fork needs a live decode-state stream, parent is "
@@ -228,7 +279,13 @@ class Scheduler:
             self.temps[s] = p.temperature
             if p.temperature > 0:
                 self._ensure_keys()
-                self.keys[s] = self._key_for(child)
+                # fold the parent's running fork count into the chain:
+                # sibling forks with IDENTICAL inherited params diverge,
+                # deterministically per parent key/seed (PR 8 bugfix —
+                # previously every sibling re-derived PRNGKey(seed))
+                child._key = self._fork_key(parent, p, parent._forks)
+                self.keys[s] = child._key
+            parent._forks += 1
             w["forks"] += 1
             w["streams"].append(child)
             out.append(child)
@@ -242,10 +299,12 @@ class Scheduler:
         if self._win is None:
             return False
         w = self._win
-        # 1. sweep: release finished streams
+        # 1. sweep: release finished streams (beam members are finalized
+        #    eagerly by their group at emission time, never swept)
         for s in range(self.kv.slots):
             h = self.active[s]
-            if h is not None and h.status == "decode" and self._finished(s):
+            if h is not None and h.status == "decode" \
+                    and h._beam is None and self._finished(s):
                 self._release_slot(h)
                 self._finish(h, "done")
         # 2. admission: priority-then-FIFO, block-granular on the paged
@@ -326,11 +385,14 @@ class Scheduler:
                 t0=time.perf_counter(),
                 disp0=self.runner.decode_dispatches,
                 pdisp0=self.runner.prefill_dispatches,
+                vdisp0=self.runner.verify_dispatches,
                 steps0=self.decode_steps,
                 prefill_s=0.0, decode_s=0.0,
                 n_tokens=0, n_first=0, interleaved=0,
                 submitted=0, rejected=0, cancelled=0, preempted=0,
                 forks=0, block_waits=0, shared_tokens=0,
+                drafted=0, accepted=0, spec_emitted=0, spec_steps=0,
+                beam_streams=0,
                 streams=[])
 
     def _queue_alive(self) -> bool:
@@ -451,6 +513,21 @@ class Scheduler:
         self.rng, sub = jax.random.split(self.rng)
         return np.asarray(sub)
 
+    def _fork_key(self, parent: StreamHandle, p: SamplingParams,
+                  idx: int) -> np.ndarray:
+        """Sampler key for fork child #``idx`` of ``parent``: the fork
+        index folded into the parent's live key chain (or into an
+        explicit per-request seed).  Distinct per sibling even with
+        identical inherited params; deterministic per parent state."""
+        if p.seed is not None:
+            base = jax.random.PRNGKey(p.seed)
+        elif self.keys is not None and parent.params.temperature > 0 \
+                and parent._slot is not None:
+            base = jax.numpy.asarray(self.keys[parent._slot])
+        else:
+            self.rng, base = jax.random.split(self.rng)
+        return np.asarray(jax.random.fold_in(base, idx))
+
     # ---------------- preemption ----------------
 
     def _preempt_for(self, head: StreamHandle, w) -> bool:
@@ -459,9 +536,12 @@ class Scheduler:
         (ties: youngest arrival).  Returns True when a victim was
         preempted — the admission loop then retries the head, preempting
         again if the freed capacity is still short.  Equal-priority
-        traffic is never displaced."""
+        traffic is never displaced; beam members are never preempted
+        (they cannot re-prefill independently of their group — pool
+        pressure prunes them through the group instead)."""
         victims = [v for v in self.active
-                   if v is not None and v.priority > head.priority]
+                   if v is not None and v.priority > head.priority
+                   and v._beam is None]
         if not victims:
             return False
         victim = min(victims, key=lambda v: (len(v.out_tokens), -v._seq))
@@ -576,6 +656,14 @@ class Scheduler:
             self.prefill_fifo.pop(0)
             if self.paged:
                 kv.mark_prompt_written(s, len(src))
+            if h.params.policy.name == "beam" and h._beam is None:
+                # seed the beam group from the prompt logits: best
+                # token stays on this slot, the next width-1 fork off it
+                group = BeamGroup(h, h.params.policy)
+                group.seed(self, h, np.asarray(logits)[0], w)
+                w["n_first"] += 1
+                w["prefill_s"] += time.perf_counter() - tp
+                return True
             if h.params.temperature > 0:
                 key = jax.numpy.asarray(self.keys[s])
                 k_next, k_use = jax.random.split(key)
@@ -605,77 +693,334 @@ class Scheduler:
         When none exists, the WRITER itself yields: it is snapshotted
         and re-queued, and its eventual re-admission reserves worst-case
         blocks up front, so it never needs COW headroom it cannot get —
-        no crash, no priority inversion, no livelock."""
+        no crash, no priority inversion, no livelock.  A beam-member
+        writer under pressure is pruned through its group instead of
+        preempted (its content becomes a partial hypothesis)."""
         kv = self.kv
         for s in list(live):
             h = self.active[s]
             if h is None or h.status != "decode":
                 continue    # preempted/cancelled earlier in this pass
-            b = int(kv.pos[s]) // kv.block_size
-            bid = int(kv.block_tables[s, b])
-            if kv.pool.refcount(bid) <= 1:
-                continue
-            while kv.pool.n_free == 0:
-                victims = [v for v in self.active
-                           if v is not None and v._slot != s
-                           and v.status in ("prefill", "decode")
-                           and v.priority > h.priority]
-                if not victims:
-                    self._preempt(h, self._win)     # writer yields
-                    break
-                victim = min(victims,
-                             key=lambda v: (len(v.out_tokens), -v._seq))
-                self._preempt(victim, self._win)
-            if self.active[s] is h:
-                kv.writable_block(s, b)
+            self._make_writable(s, int(kv.pos[s]) // kv.block_size)
         copies = kv.take_pending_copies()
         if copies:
             kv.caches = self.runner.copy_blocks(kv.caches, copies)
 
-    def _decode_all(self, w, did_prefill: bool):
-        def live_slots():
-            return [s for s in range(self.kv.slots)
-                    if self.active[s] is not None
-                    and self.active[s].status == "decode"
-                    and not self._finished(s)]
+    def _cow_span(self, spec: list[int], t_max: int):
+        """Verification writes ``t_max`` rows starting at ``pos``: give
+        every spec slot exclusive ownership of each SHARED block its
+        window [pos, pos+t_max) overlaps (null entries past the slot's
+        reserved span are write sinks, skipped).  Same pressure rules
+        as ``_cow_pass``."""
+        kv = self.kv
+        for s in list(spec):
+            h = self.active[s]
+            if h is None or h.status != "decode":
+                continue
+            pos_s = int(kv.pos[s])
+            b1 = min((pos_s + t_max - 1) // kv.block_size,
+                     kv.block_tables.shape[1] - 1)
+            for b in range(pos_s // kv.block_size, b1 + 1):
+                if not self._make_writable(s, b):
+                    break       # the writer itself yielded
+        copies = kv.take_pending_copies()
+        if copies:
+            kv.caches = self.runner.copy_blocks(kv.caches, copies)
 
-        live = live_slots()
+    def _make_writable(self, s: int, b: int) -> bool:
+        """Copy-on-write block ``b`` of slot ``s`` if shared, freeing
+        pool space by preemption/beam-prune when empty.  Returns False
+        when the writing stream itself had to yield its slot."""
+        kv = self.kv
+        h = self.active[s]
+        bid = int(kv.block_tables[s, b])
+        if bid == 0 or kv.pool.refcount(bid) <= 1:
+            return True
+        while kv.pool.n_free == 0:
+            victims = [v for v in self.active
+                       if v is not None and v._slot != s
+                       and v.status in ("prefill", "decode")
+                       and v.priority > h.priority
+                       and v._beam is None]
+            if not victims:
+                if h._beam is not None:     # bank a partial hypothesis
+                    h._beam.pressure_prune(self, s, self._win)
+                else:
+                    self._preempt(h, self._win)     # writer yields
+                break
+            victim = min(victims,
+                         key=lambda v: (len(v.out_tokens), -v._seq))
+            self._preempt(victim, self._win)
+        if self.active[s] is not h:
+            return False
+        kv.writable_block(s, b)
+        return True
+
+    def _live_slots(self) -> list[int]:
+        return [s for s in range(self.kv.slots)
+                if self.active[s] is not None
+                and self.active[s].status == "decode"
+                and not self._finished(s)]
+
+    def _decode_all(self, w, did_prefill: bool):
+        """Policy-aware generation step.  Live slots partition into the
+        PLAIN set (greedy/sampled streams plus beam members, which ride
+        the normal batched decode) and the SPEC set (SpeculativePolicy
+        streams, whose step is a draft+verify round).  Per engine step
+        the dispatch budget stays at most one decode (when the plain
+        set is non-empty) plus one verify (when the spec set is) — spec
+        slots ride the decode dispatch harmlessly (the row written at
+        ``pos`` IS their pending token's K/V; the sampled token is
+        discarded), and when only spec streams are live the decode
+        dispatch is skipped entirely."""
+        live = self._live_slots()
         if not live:
             return
         kv, runner = self.kv, self.runner
+        spec = [s for s in live
+                if self.active[s].params.policy.name == "speculative"]
+        if spec:
+            # uniform verify width this round (one compile shape); slots
+            # whose window would cross the cache ceiling demote to the
+            # plain path for this step
+            t_max = max(self.active[s].params.policy.k for s in spec) + 1
+            spec = [s for s in spec
+                    if int(kv.pos[s]) + t_max <= kv.max_len]
+        plain = [s for s in live if s not in spec]
         if self.paged:
-            self._cow_pass(live)
-            live = live_slots()     # COW preemption may have culled one
-            if not live:
+            self._cow_pass(live)    # covers every rider's pos-row write
+            alive = set(self._live_slots())
+            plain = [s for s in plain if s in alive]
+            spec = [s for s in spec if s in alive]
+            if not plain and not spec:
                 return
         td = time.perf_counter()
+        if plain:
+            self._decode_plain(w, plain)
+        if spec:
+            self._spec_round(w, spec)
+        w["decode_s"] += time.perf_counter() - td
+        if did_prefill:
+            w["interleaved"] += 1
+
+    def _decode_plain(self, w, plain: list[int]):
+        """One batched decode dispatch; emissions for plain streams,
+        group re-ranking for beam members."""
+        kv, runner = self.kv, self.runner
         logits, kv.caches = runner.decode(
             self.next_tok, kv.caches, kv.pos,
             block_tables=kv.block_tables if self.paged else None)
         self.decode_steps += 1
-        if self.keys is not None and np.any(self.temps[live] > 0):
+        beam = [s for s in plain if self.active[s]._beam is not None]
+        simple = [s for s in plain if self.active[s]._beam is None]
+        if self.keys is not None and np.any(self.temps[simple] > 0):
             toks, keys = runner.sample(self.keys, logits, self.temps)
             # a stream's key chain advances ONLY on its own emissions —
             # the batched sampler splits every slot's key, but splits of
             # idle/greedy/mid-prefill rows are discarded so per-request
             # seeds stay reproducible under any concurrent traffic
             keys = np.asarray(keys)
-            for s in live:
+            for s in simple:
                 if self.temps[s] > 0:
                     self.keys[s] = keys[s]
         else:
             toks = runner.greedy(logits)
         toks = np.asarray(toks)
-        for s in live:
+        for s in simple:
             h = self.active[s]
             if h is None or h.status != "decode":
                 continue    # cancelled by an earlier on_token callback
             self.next_tok[s] = toks[s]
             kv.pos[s] += 1
             self._emit(h, toks[s])
-        w["decode_s"] += time.perf_counter() - td
-        if did_prefill:
-            w["interleaved"] += 1
+        if beam:
+            # beams rank on exact log-probabilities: positions advance
+            # here, token choice + emission happen in the group's joint
+            # top-width re-rank over the host logits
+            lg = np.asarray(logits)
+            groups = []
+            for s in beam:
+                kv.pos[s] += 1
+                g = self.active[s]._beam
+                if g not in groups:
+                    groups.append(g)
+            for g in groups:
+                g.step(self, lg, w)
+
+    # ---------------- speculative decoding ----------------
+
+    def _draft(self, kind: str):
+        sub = self._drafts.get(kind)
+        if sub is None:
+            sub = self._drafts[kind] = self.draft_factory(kind)
+        return sub
+
+    def _draw_u(self, s: int) -> float:
+        """One uniform draw from slot ``s``'s sampler key chain
+        (advances it) — all speculative randomness is per-stream and
+        deterministic under concurrent traffic, like the plain path."""
+        key = jax.numpy.asarray(self.keys[s])
+        k_next, k_use = jax.random.split(key)
+        self.keys[s] = np.asarray(k_next)
+        return float(jax.random.uniform(k_use))
+
+    def _spec_round(self, w, spec: list[int]):
+        """One draft+verify round over every speculative live slot.
+
+        Per stream: (1) the draft substrate catches its mirror cache up
+        to the target position (chunked prefill over the emitted
+        history — cold after admission/preemption/slot churn, 0-1 rows
+        behind in steady state), (2) a batched draft decode loop
+        proposes k tokens per stream, (3) ONE batched ``runner.verify``
+        dispatch scores every chain ``[pending, d_1..d_k]`` through the
+        serving backend against the live KV cache, (4) host-side
+        acceptance emits the longest valid prefix plus one bonus token
+        and rolls ``kv.pos`` back over the rejected tail
+        (``kv.rollback`` — rows move for free, blocks stay reserved).
+
+        Greedy streams accept by argmax prefix-match, so the emitted
+        chain is EXACTLY the greedy stream (the bonus token comes from
+        the verify row that rejected the draft).  Sampled streams use
+        rejection sampling against the draft's proposal distribution,
+        which preserves the target distribution exactly."""
+        kv, runner = self.kv, self.runner
+        ks = {s: self.active[s].params.policy.k for s in spec}
+        t_max = max(ks.values()) + 1
+        if self.paged:
+            self._cow_span(spec, t_max)
+            spec = [s for s in spec if self.active[s] is not None
+                    and self.active[s].status == "decode"]
+            if not spec:
+                return
+        # ---- draft k tokens per stream (batched per substrate) ----
+        chains: dict[int, list] = {}
+        drafted: dict[int, list] = {s: [] for s in spec}
+        qrows: dict[int, list] = {s: [] for s in spec}
+        c_end: dict[int, int] = {}
+        by_kind: dict[str, list] = {}
+        for s in spec:
+            by_kind.setdefault(
+                self.active[s].params.policy.draft, []).append(s)
+        for kind, group in by_kind.items():
+            sub = self._draft(kind)
+            for s in group:
+                h = self.active[s]
+                sub.claim(s, h)
+                seq = self._source(h)       # len == pos + 1 (pending)
+                chains[s] = [int(t) for t in seq]
+                pos_s = int(kv.pos[s])
+                if pos_s - int(sub.fill[s]) > 1:
+                    sub.catch_up(s, seq, pos_s)
+            cursors = {s: int(sub.fill[s]) for s in group}
+            for _ in range(t_max + 1):      # <= k + 1-row lag rounds
+                need = [s for s in group if len(drafted[s]) < ks[s]]
+                if not need:
+                    break
+                toks = np.zeros(kv.slots, np.int32)
+                # the reference decode writes K/V for EVERY slot in the
+                # batch: park non-drafting slots' write at their own
+                # fill row (first row past the validated prefix — it is
+                # re-written by the next decode/catch-up before any
+                # read), never at row 0 of someone else's draft cache
+                pos_arr = np.minimum(sub.fill, kv.max_len - 1) \
+                    .astype(np.int32)
+                for s in need:
+                    chain = chains[s] + drafted[s]
+                    toks[s] = chain[cursors[s]]
+                    pos_arr[s] = cursors[s]
+                lg_d = np.asarray(sub.decode(toks, pos_arr))
+                for s in need:
+                    c = cursors[s]
+                    if c + 1 >= len(chains[s]) + len(drafted[s]):
+                        # frontier row: the prediction is a NEW draft
+                        # (earlier rows just replay known history)
+                        if self.temps[s] > 0:
+                            qv = softmax(lg_d[s] / float(self.temps[s]))
+                            drafted[s].append(
+                                categorical(qv, self._draw_u(s)))
+                            qrows[s].append(qv)
+                        else:
+                            drafted[s].append(int(np.argmax(lg_d[s])))
+                    cursors[s] = c + 1
+                    sub.fill[s] = c + 1
+            c_end.update(cursors)
+        # ---- ONE batched verify through the serving backend ----
+        tokens_v = np.zeros((kv.slots, t_max), np.int32)
+        act = np.zeros(kv.slots, bool)
+        for s in spec:
+            chain_v = [int(self.next_tok[s])] + drafted[s]
+            tokens_v[s, :len(chain_v)] = chain_v
+            act[s] = True
+        logits_v, kv.caches = runner.verify(
+            tokens_v, kv.caches, kv.pos, act,
+            block_tables=kv.block_tables if self.paged else None)
+        lg = np.asarray(logits_v)           # [slots, t_max, vocab] f32
+        w["spec_steps"] += 1
+        # ---- accept, emit, roll back ----
+        for s in spec:
+            h = self.active[s]
+            p = h.params
+            k_s = ks[s]
+            pos_old = int(kv.pos[s])
+            if p.temperature > 0:
+                a, bonus = self._accept_sampled(
+                    s, lg[s], drafted[s], qrows[s],
+                    float(p.temperature), k_s)
+            else:
+                # verify row t predicts position pos+t+1: accept drafts
+                # while they match the target argmax, then the row that
+                # broke the chain contributes the bonus token — the
+                # emitted sequence is the exact greedy chain
+                g = np.argmax(lg[s, :k_s + 1], axis=-1)
+                a = 0
+                while a < k_s and drafted[s][a] == int(g[a]):
+                    a += 1
+                bonus = int(g[a])
+            emitted = drafted[s][:a] + [bonus]
+            w["drafted"] += k_s
+            w["accepted"] += a
+            eos = self.eos if p.eos_id is None else p.eos_id
+            budget = p.max_new_tokens - len(h.out_tokens)
+            m = 0
+            for tok in emitted:             # same stop rules as plain
+                self._emit(h, tok)
+                self.next_tok[s] = tok
+                m += 1
+                if h.status != "decode":
+                    break                   # cancelled inside on_token
+                if m >= budget or (pos_old + m + 1 >= kv.max_len) \
+                        or (not p.ignore_eos and eos is not None
+                            and tok == eos) or tok in p.stop_tokens:
+                    break
+            w["spec_emitted"] += m
+            if h.status != "decode" or self.active[s] is not h:
+                continue                    # cancel freed the slot
+            kv.rollback(s, pos_old + m)
+            # draft rows stay valid up to the shortest of: rows written,
+            # the verified-accepted prefix, the new sequence length
+            sub = self._draft(p.policy.draft)
+            sub.fill[s] = min(c_end[s], pos_old + 1 + a, pos_old + m + 1)
+
+    def _accept_sampled(self, s: int, lg_s, drafted: list, qrows: list,
+                        temp: float, k_s: int):
+        """Speculative rejection sampling (Leviathan et al.): accept
+        draft ``d_i`` with prob ``min(1, p_i[d]/q_i[d])``; on the first
+        rejection sample the bonus from the residual ``max(p-q, 0)``;
+        on full acceptance sample from the row after the last draft.
+        The emitted distribution is exactly the target chain ``p``,
+        independent of draft quality."""
+        for i in range(k_s):
+            p_i = softmax(lg_s[i] / temp)
+            q_i = qrows[i]
+            d = drafted[i]
+            if self._draw_u(s) * q_i[d] <= p_i[d]:
+                continue
+            res = np.maximum(p_i - q_i, 0.0)
+            tot = res.sum()
+            probs = res / tot if tot > 0 else p_i
+            return i, categorical(probs, self._draw_u(s))
+        p_last = softmax(lg_s[k_s] / temp)
+        return k_s, categorical(p_last, self._draw_u(s))
 
     # ---------------- completion + stats ----------------
 
@@ -690,56 +1035,79 @@ class Scheduler:
                 r._ttft_s = h._ttft_s
 
     def _finalize_window(self):
+        """Close the serving window into a typed ``ServeStats`` record
+        (``self.last_stats`` keeps the legacy dict view of the same
+        numbers — ``ServeStats.as_dict()`` reproduces every historical
+        key)."""
+        from repro.serve.stats import KVStats, ServeStats
         w, self._win = self._win, None
         if w is None:
             return
         dt = time.perf_counter() - w["t0"]
         steps = self.decode_steps - w["steps0"]
         dispatches = self.runner.decode_dispatches - w["disp0"]
+        verifies = self.runner.verify_dispatches - w["vdisp0"]
         streams = w["streams"]
         ttfts = [h._ttft_s for h in streams if h._ttft_s is not None]
         itls = [h.itl_s for h in streams if h.itl_s is not None]
         queue_ts = [h.queue_s for h in streams if h.queue_s is not None]
-        self.last_stats = {
-            "requests": w["submitted"],
-            "rejected": w["rejected"],
-            "slots": self.kv.slots,
-            "tokens": w["n_tokens"],
-            "seconds": dt,
-            "tokens_per_sec": (w["n_tokens"] / dt if dt > 0
-                               else float("inf")),
+        decode_tps = ((w["n_tokens"] - w["n_first"]) / w["decode_s"]
+                      if w["decode_s"] > 0 else float("inf"))
+        self.last_stats_typed = ServeStats(
+            requests=w["submitted"],
+            rejected=w["rejected"],
+            slots=self.kv.slots,
+            tokens=w["n_tokens"],
+            seconds=dt,
+            tokens_per_sec=(w["n_tokens"] / dt if dt > 0
+                            else float("inf")),
             # prefill/decode time split (no longer conflated)
-            "prefill_seconds": w["prefill_s"],
-            "decode_seconds": w["decode_s"],
-            "decode_tokens_per_sec": (
-                (w["n_tokens"] - w["n_first"]) / w["decode_s"]
-                if w["decode_s"] > 0 else float("inf")),
-            "ttft_ms": float(np.mean(ttfts) * 1e3) if ttfts else None,
-            "itl_ms": float(np.mean(itls) * 1e3) if itls else None,
+            prefill_seconds=w["prefill_s"],
+            decode_seconds=w["decode_s"],
+            decode_tokens_per_sec=decode_tps,
+            # decode-phase emissions over decode wall time, where the
+            # decode phase INCLUDES draft + verify overhead — the bench-
+            # facing cell comparing greedy vs speculative on the same
+            # traffic (equal to decode_tokens_per_sec by construction;
+            # the name pins the comparison semantics)
+            effective_tokens_per_sec=decode_tps,
+            ttft_ms=float(np.mean(ttfts) * 1e3) if ttfts else None,
+            itl_ms=float(np.mean(itls) * 1e3) if itls else None,
             # session-API pressure/lifecycle counters
-            "queue_ms": (float(np.mean(queue_ts) * 1e3)
-                         if queue_ts else None),
-            "preemptions": w["preempted"],
-            "cancelled": w["cancelled"],
-            "forks": w["forks"],
-            "decode_steps": steps,
-            "dispatches_per_step": dispatches / steps if steps else 0.0,
-            "prefill_dispatches": (self.runner.prefill_dispatches
-                                   - w["pdisp0"]),
+            queue_ms=(float(np.mean(queue_ts) * 1e3)
+                      if queue_ts else None),
+            preemptions=w["preempted"],
+            cancelled=w["cancelled"],
+            forks=w["forks"],
+            decode_steps=steps,
+            dispatches_per_step=dispatches / steps if steps else 0.0,
+            prefill_dispatches=(self.runner.prefill_dispatches
+                                - w["pdisp0"]),
             # CUMULATIVE size of the runner's prefill compile cache
             # (unlike the per-run dispatch delta above): the bounded-by-
             # buckets invariant is about the cache's lifetime growth
-            "prefill_compiles": self.runner.prefill_compiles,
-            "chunk_buckets": list(self.runner.chunk_buckets),
-            "chunked_prefill": self.chunked,
+            prefill_compiles=self.runner.prefill_compiles,
+            chunk_buckets=tuple(self.runner.chunk_buckets),
+            chunked_prefill=self.chunked,
             # iterations where a decode dispatch ran in the same step as
             # a prefill chunk: live streams kept flowing during admission
-            "interleaved_steps": w["interleaved"],
+            interleaved_steps=w["interleaved"],
             # KV memory: layout, pool bytes, and (paged) block occupancy
             # + prefix-sharing wins at end of window
-            "kv": self.kv.stats(),
+            kv=KVStats.from_dict(self.kv.stats()),
             # paged admission pressure: iterations the queue head waited
             # for blocks / prompt tokens skipped via shared prefixes
-            "block_waits": w["block_waits"],
-            "shared_prefix_tokens": w["shared_tokens"],
-        }
+            block_waits=w["block_waits"],
+            shared_prefix_tokens=w["shared_tokens"],
+            # decode-policy counters: speculative draft acceptance +
+            # verify dispatch budget, beam-group traffic
+            verify_dispatches=verifies,
+            drafted_tokens=w["drafted"],
+            accepted_tokens=w["accepted"],
+            accept_rate=(w["accepted"] / w["drafted"]
+                         if w["drafted"] else None),
+            accepted_tokens_per_step=(w["spec_emitted"] / verifies
+                                      if verifies else None),
+            beam_streams=w["beam_streams"],
+        )
+        self.last_stats = self.last_stats_typed.as_dict()

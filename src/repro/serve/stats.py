@@ -1,0 +1,129 @@
+"""Typed serving statistics: one surface instead of four ad-hoc dicts.
+
+Historically the engine exposed ``last_stats`` (scheduler window),
+``kv_stats`` (cache memory/occupancy), ``packed_stats`` (quantized
+weight packing), and ``runner.trace_counts`` as free-form dicts with
+drifting key names.  This module defines the typed records —
+``ServeStats`` / ``KVStats`` / ``PackedStats`` — behind the single
+``engine.stats()`` accessor.  ``as_dict()`` reproduces the legacy key
+names exactly (the dict properties are now thin shims over these), so
+JSON artifacts and the CI bench gate read the same schema as before,
+plus the decode-policy counters (verify dispatches, draft acceptance).
+
+``None`` fields mean "not applicable" (e.g. paged-only block counters
+on a dense engine) and are omitted from ``as_dict()`` where the legacy
+dicts omitted them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def _from_known(cls, d: dict):
+    known = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class KVStats:
+    """KV-cache memory/occupancy.  ``layout``/``pool_bytes`` always;
+    block-pool fields are paged-only (None on dense)."""
+
+    layout: str
+    pool_bytes: int
+    pool_mib: float | None = None
+    blocks_per_slot: int | None = None
+    block_size: int | None = None
+    blocks_total: int | None = None
+    blocks_in_use: int | None = None
+    blocks_peak_in_use: int | None = None
+    blocks_free: int | None = None
+    blocks_shared: int | None = None
+    blocks_saved_by_sharing: int | None = None
+    cow_copies: int | None = None
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KVStats":
+        return _from_known(cls, d)
+
+    def as_dict(self) -> dict:
+        """Legacy ``kv.stats()`` schema: paged-only fields dropped when
+        None."""
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None or k in ("layout", "pool_bytes")}
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedStats:
+    """Quantized-backend weight-packing coverage + memory split."""
+
+    packed_linears: int = 0
+    reference_linears: int = 0
+    unfused_linears: int = 0
+    fused_projections: int = 0
+    packed_bytes: int = 0
+    packed_bytes_per_device: int | None = None
+    quantized_linears_total: int = 0
+    tp: int = 1
+    kernel_interpret: bool | None = None
+    kernel_backend: str | None = None
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PackedStats":
+        return _from_known(cls, d)
+
+    def as_dict(self) -> dict:
+        return dict(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """One serving window (idle -> idle) of scheduler metrics.  Field
+    names match the historical ``last_stats`` keys one-for-one; the
+    decode-policy counters (``verify_dispatches`` .. ``accept_rate``)
+    and ``effective_tokens_per_sec`` are new in the policy API."""
+
+    requests: int = 0
+    rejected: int = 0
+    slots: int = 0
+    tokens: int = 0
+    seconds: float = 0.0
+    tokens_per_sec: float = 0.0
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    decode_tokens_per_sec: float = 0.0
+    # decode-phase emissions per second of decode+draft+verify wall
+    # time: for greedy traffic this equals decode_tokens_per_sec; with
+    # speculative acceptance it is the ">1 token per dispatch" number
+    effective_tokens_per_sec: float = 0.0
+    ttft_ms: float | None = None
+    itl_ms: float | None = None
+    queue_ms: float | None = None
+    preemptions: int = 0
+    cancelled: int = 0
+    forks: int = 0
+    decode_steps: int = 0
+    dispatches_per_step: float = 0.0
+    prefill_dispatches: int = 0
+    prefill_compiles: int = 0
+    chunk_buckets: tuple = ()
+    chunked_prefill: bool = False
+    interleaved_steps: int = 0
+    kv: KVStats | None = None
+    block_waits: int = 0
+    shared_prefix_tokens: int = 0
+    # decode-policy counters (speculative verification + beam search)
+    verify_dispatches: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    accept_rate: float | None = None        # accepted / drafted
+    # emissions per verify dispatch (a+1 >= 1); the tentpole criterion
+    # "accepted_tokens/step > 1" reads this field
+    accepted_tokens_per_step: float | None = None
+    beam_streams: int = 0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["chunk_buckets"] = list(self.chunk_buckets)
+        d["kv"] = self.kv.as_dict() if self.kv is not None else {}
+        return d
