@@ -59,9 +59,18 @@ Extra modes:
   parity across mesh sizes.  TP cells are NEVER speed-gated: on CI
   they run on forced host devices (CPU slices), where absolute tok/s
   is meaningless.
+- ``--decode-horizon k`` measures every cell with ``k`` decode
+  iterations folded into one jitted dispatch (multi-step decode); in
+  ``--tiny`` mode it also adds a cell asserting bit-identical streams
+  vs horizon 1 plus the ``decode_dispatches == ceil(tokens/k)``
+  contract.
+- ``--profile`` (with ``--tiny``) wraps the gated decode measurement in
+  ``jax.profiler.trace`` and records the trace dir in the artifact, so
+  latency work starts from a profile instead of guesses.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
@@ -98,6 +107,11 @@ BASELINE_TOLERANCE = 0.20       # fail the gate below (1 - tol) * baseline
 # 0), and it is RATCHETED: --update-baseline refuses to write a lower
 # ratio than the committed one (docs/ci.md "Perf-regression gate")
 RATIO_TOLERANCE = 0.10
+# the ratchet's destination: the paper's claim is that the quantized
+# path is CHEAPER, i.e. quantized/reference >= 1.0.  Every gated run
+# records progress toward this milestone in the artifact (the committed
+# baseline ratio is the floor, this is the ceiling being climbed)
+RATIO_TARGET = 1.0
 
 
 def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
@@ -122,11 +136,11 @@ def _requests(n, vocab, max_new, seed=0, long_every=0, long_len=100,
 
 def _measure(model, params, vocab, *, slots, n_requests, max_new, max_len,
              backend="reference", kv_layout="dense", block_size=32,
-             shared_prefix=0, kernel_interpret=None):
+             shared_prefix=0, kernel_interpret=None, decode_horizon=1):
     engine = ServeEngine(model, params, config=EngineConfig(
         batch_slots=slots, max_len=max_len, backend=backend,
         kv_layout=kv_layout, block_size=block_size,
-        kernel_interpret=kernel_interpret))
+        kernel_interpret=kernel_interpret, decode_horizon=decode_horizon))
     # warmup compiles outside the timed window: decode (1), one prefill
     # per chunk bucket (bounded — NOT one per distinct prompt length)
     engine.generate(_requests(max(slots, 5), vocab, 2, seed=123,
@@ -151,15 +165,17 @@ def _kv_summary(st):
 def _fmt_row(label, slots, st):
     return (f"  {label:<15}  {slots:<5}  {st['tokens_per_sec']:<7.1f}"
             f"  {st['ttft_ms'] or 0:<8.0f}  {st['itl_ms'] or 0:<7.0f}"
-            f"  {st['decode_steps']:<5}  "
+            f"  {st['itl_p95_ms'] or 0:<7.0f}  {st['decode_steps']:<5}  "
             f"{st['dispatches_per_step']:<9.0f}  "
+            f"{st['tokens_per_dispatch']:<8.2f}  "
             f"{st['prefill_compiles']}/{len(st['chunk_buckets'])}"
             f"{'':<13}  {st['interleaved_steps']:<11}  {_kv_summary(st)}"
             f"  q{st['queue_ms'] or 0:.0f}ms"
             f" w{st['block_waits']} p{st['preemptions']}")
 
 
-def run(quick: bool = False, block_size: int = 16, kernel_interpret=None):
+def run(quick: bool = False, block_size: int = 16, kernel_interpret=None,
+        decode_horizon: int = 1):
     # kv_chunk=block_size keeps the flash-decode kernel's chunk split
     # identical across layouts, so dense and paged streams stay
     # bit-identical (docs/serving.md "Paged KV cache")
@@ -176,8 +192,8 @@ def run(quick: bool = False, block_size: int = 16, kernel_interpret=None):
     max_new = 8 if quick else 16
 
     rows, records = [], []
-    print("  variant          slots  tok/s    ttft_ms   itl_ms   steps"
-          "  disp/step  prefill_compiles  interleaved  kv")
+    print("  variant          slots  tok/s    ttft_ms   itl_ms   itl_p95"
+          "  steps  disp/step  tok/disp  prefill_compiles  interleaved  kv")
     # both execution backends over the same quantized weights (dense and
     # paged KV layouts), plus the fp-params reference as the unquantized
     # anchor
@@ -194,7 +210,8 @@ def run(quick: bool = False, block_size: int = 16, kernel_interpret=None):
                           n_requests=n_requests, max_new=max_new,
                           max_len=128, backend=backend, kv_layout=layout,
                           block_size=block_size, shared_prefix=40,
-                          kernel_interpret=kernel_interpret)
+                          kernel_interpret=kernel_interpret,
+                          decode_horizon=decode_horizon)
             rec = {"variant": label, "backend": backend,
                    "kv_layout": layout, **st,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
@@ -423,19 +440,74 @@ def _policy_smoke(model, qparams, vocab, block_size: int,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
 
+def _horizon_smoke(model, qparams, vocab, block_size: int, k: int,
+                   streams_at_k: dict) -> dict:
+    """CI multi-step decode cell (``--decode-horizon k``): the
+    quantized-paged engine re-run at decode_horizon=1 must produce
+    BIT-IDENTICAL greedy streams to the horizon-``k`` gate cells
+    (``streams_at_k``), and a lone drained stream must obey the
+    dispatch-count contract ``decode_dispatches == ceil(tokens / k)``
+    (its first token comes from prefill, the rest from ceil((n-1)/k)
+    scanned dispatches)."""
+    def drive(horizon, reqs):
+        eng = ServeEngine(model, qparams, config=EngineConfig(
+            batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+            backend="quantized", kv_layout="paged",
+            block_size=block_size, decode_horizon=horizon))
+        return eng, eng.generate(reqs)
+
+    _, done1 = drive(1, _requests(8, vocab, 32, seed=0, long_every=4,
+                                  long_len=100, shared_prefix=40))
+    assert done1 == streams_at_k, \
+        f"greedy streams diverged between decode_horizon 1 and {k}"
+    rng = np.random.default_rng(3)
+    eng, done = drive(k, [Request(
+        rid=0, prompt=rng.integers(0, vocab, 9).astype(np.int32),
+        max_new_tokens=33)])
+    st = eng.stats()
+    want = -(-(33 - 1) // k)
+    assert st.decode_dispatches == want, \
+        (f"dispatch-count contract: {st.decode_dispatches} dispatches "
+         f"for 32 decode tokens at horizon {k}, want {want}")
+    assert st.tokens_per_dispatch > 1.0, st
+    print(f"  serve-smoke[horizon-{k}] OK: streams bit-identical to "
+          f"horizon 1; lone stream drained 32 decode tokens in "
+          f"{st.decode_dispatches} dispatches (= ceil(32/{k}); "
+          f"{st.tokens_per_dispatch:.2f} tok/dispatch)")
+    return {"variant": f"tiny-smoke/horizon-{k}", "backend": "quantized",
+            "kv_layout": "paged", "decode_horizon": k, "gate": None,
+            **st.as_dict(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+
+
 def tiny_smoke(baseline_path: str = BASELINE_PATH,
                update_baseline: bool = False, block_size: int = 16,
                kernel_interpret=None, policy: str = "greedy",
-               draft: str = "tiny", spec_k: int = 3) -> dict:
+               draft: str = "tiny", spec_k: int = 3,
+               decode_horizon: int = 1, profile: bool = False) -> dict:
     """CI serve-smoke lane: seconds-scale run of BOTH backends x BOTH
     KV layouts over the same quantized weights, asserting the serving
     invariants (module docstring), greedy-stream parity across every
     (backend, layout) cell, paged-pool hygiene (multi-block sequences
     via a small ``block_size``, prefix blocks stored once, no leaked
-    blocks), and the ``BENCH_serve.json`` perf gate."""
+    blocks), and the ``BENCH_serve.json`` perf gate.
+
+    ``decode_horizon`` > 1 measures every gate cell with k decode
+    iterations per jitted dispatch AND adds a dedicated horizon cell
+    asserting bit-identical streams vs horizon 1 plus the
+    dispatch-count contract (docs/serving.md "Multi-step decode").
+    ``profile=True`` wraps the gated measurement in
+    ``jax.profiler.trace`` and records the trace dir in the artifact.
+    """
     cfg, model, qparams = _tiny_quantized_setup(block_size)
 
-    records, streams = [], {}
+    trace_dir = None
+    if profile:
+        trace_dir = os.path.join(_ROOT, "experiments", "serve", "trace",
+                                 time.strftime("%Y%m%dT%H%M%S"))
+        os.makedirs(trace_dir, exist_ok=True)
+
+    records, streams, dense_engines = [], {}, {}
     traffic = dict(long_every=4, long_len=100, shared_prefix=40)
     for backend in ("reference", "quantized"):
         for layout in ("dense", "paged"):
@@ -443,7 +515,8 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             engine = ServeEngine(model, qparams, config=EngineConfig(
                 batch_slots=4, max_len=128, chunk_buckets=(8, 32),
                 backend=backend, kv_layout=layout, block_size=block_size,
-                kernel_interpret=kernel_interpret))
+                kernel_interpret=kernel_interpret,
+                decode_horizon=decode_horizon))
             # warmup so decode_tokens_per_sec measures steady state, not jit
             engine.generate(_requests(4, cfg.vocab_size, 2, seed=123,
                                       long_every=3, long_len=100))
@@ -454,12 +527,15 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             # ever slows a run down; ~1 s extra, greedy repeats identical)
             t0 = time.perf_counter()
             reps = []
-            for _ in range(5):
-                done = engine.generate(_requests(8, cfg.vocab_size, 32,
-                                                 seed=0, **traffic))
-                # typed snapshot (ServeStats) — the gate path reads
-                # attributes, the artifact keeps the as_dict() schema
-                reps.append((engine.stats(), done))
+            tracer = (jax.profiler.trace(trace_dir) if trace_dir
+                      else contextlib.nullcontext())
+            with tracer:
+                for _ in range(5):
+                    done = engine.generate(_requests(8, cfg.vocab_size, 32,
+                                                     seed=0, **traffic))
+                    # typed snapshot (ServeStats) — the gate path reads
+                    # attributes, the artifact keeps the as_dict() schema
+                    reps.append((engine.stats(), done))
             dt = time.perf_counter() - t0
             assert all(r[1] == done for r in reps), \
                 "greedy streams diverged across repeats"
@@ -493,6 +569,8 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
                       f"{tc['decode_linears']} linears "
                       f"({pst.fused_projections} slot-batched projections)")
             streams[(backend, layout)] = done
+            if layout == "dense":
+                dense_engines[backend] = engine
             records.append({"variant": f"tiny-smoke/{gate}",
                             "backend": backend, "kv_layout": layout,
                             "gate": gate, **st,
@@ -507,6 +585,11 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
             print(f"  serve-smoke[{gate}] OK: {st['tokens']} tokens in "
                   f"{dt:.1f}s, {st['decode_tokens_per_sec']:.1f} decode "
                   f"tok/s, {st['dispatches_per_step']:.0f} dispatch/step, "
+                  f"{st['decode_dispatches']} decode dispatches "
+                  f"({st['tokens_per_dispatch']:.2f} tok/dispatch at "
+                  f"horizon {decode_horizon}), itl p50/p95/p99 "
+                  f"{st['itl_p50_ms'] or 0:.1f}/{st['itl_p95_ms'] or 0:.1f}"
+                  f"/{st['itl_p99_ms'] or 0:.1f}ms, "
                   f"{st['prefill_compiles']} prefill compiles "
                   f"(<= {len(engine.runner.chunk_buckets)} buckets), "
                   f"{st['interleaved_steps']} interleaved steps, "
@@ -516,6 +599,12 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
         "greedy streams diverged across (backend, kv_layout) cells"
     print("  serve-smoke parity OK: greedy streams identical across "
           f"{len(streams)} (backend, kv_layout) cells")
+    if decode_horizon > 1:
+        # horizon cell: parity vs horizon 1 + the dispatch-count
+        # contract (not perf-gated; rides in the artifact)
+        records.append(_horizon_smoke(model, qparams, cfg.vocab_size,
+                                      block_size, decode_horizon,
+                                      streams[("quantized", "paged")]))
     # session-API lifecycle smoke: submit/cancel/fork/preempt traffic
     # (not perf-gated; the record rides along in the artifact)
     records.append(_session_smoke(model, qparams, cfg.vocab_size,
@@ -526,10 +615,29 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
         records.append(_policy_smoke(model, qparams, cfg.vocab_size,
                                      block_size, draft=draft, k=spec_k))
     by_gate = {r["gate"]: r for r in records}
-    ratio = (by_gate["quantized"]["decode_tokens_per_sec"]
-             / by_gate["reference"]["decode_tokens_per_sec"])
+    # The gated quantized/reference ratio is measured from INTERLEAVED
+    # serves on the two warm dense engines, not from the quotient of
+    # the absolute cells: those cells run ~30 s apart, so a
+    # time-varying contention burst on the runner slows ONE of them and
+    # does not divide out — even best-of-5 cells left the quotient
+    # swinging far outside the 10% ratio band.  Interleaving puts both
+    # backends in the same measurement window, and each side takes its
+    # BEST serve (the same min-time convention the absolute cells use:
+    # interference only ever slows a run down — the interpret-mode
+    # quantized serve is the Python-heaviest and the most often hit),
+    # so the quotient of bests converges on the true machine-
+    # independent ratio instead of whichever burst landed mid-pair.
+    pair_reqs = _requests(8, cfg.vocab_size, 32, seed=0, **traffic)
+    rates = {"reference": [], "quantized": []}
+    for _ in range(5):
+        for b in ("reference", "quantized"):
+            dense_engines[b].generate(pair_reqs)
+            rates[b].append(dense_engines[b].stats().decode_tokens_per_sec)
+    ratio = max(rates["quantized"]) / max(rates["reference"])
     print(f"  backend ratio: quantized/reference = {ratio:.2f}x decode tok/s "
-          "(machine-independent trend line)")
+          f"(best-of-{len(rates['quantized'])} each over interleaved "
+          "serves; machine-independent trend line; milestone target "
+          f"{RATIO_TARGET:.1f} — {ratio / RATIO_TARGET:.0%} there)")
     # paged/dense decode ratio per backend: the paged-layout overhead as
     # a machine-independent number in the artifact (reported, not gated
     # — the absolute cells already gate both layouts)
@@ -540,22 +648,43 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
     for b, r in paged_ratio.items():
         print(f"  layout ratio[{b}]: paged/dense = {r:.3f}x decode tok/s "
               f"(block_size {block_size})")
-    _write(records, extra={"paged_to_dense_ratio": paged_ratio,
-                           "block_size": block_size})
+    extra = {"paged_to_dense_ratio": paged_ratio,
+             "block_size": block_size,
+             "decode_horizon": decode_horizon,
+             # milestone progress: every run records how far the
+             # machine-independent ratio has climbed toward the paper's
+             # "quantized is cheaper" target (docs/ci.md)
+             "quantized_to_reference_ratio": round(ratio, 3),
+             "ratio_target": RATIO_TARGET,
+             "ratio_progress": round(ratio / RATIO_TARGET, 3)}
+    if trace_dir is not None:
+        extra["profile_trace_dir"] = os.path.relpath(trace_dir, _ROOT)
+        print(f"  profiler trace written to {extra['profile_trace_dir']} "
+              "(TensorBoard: tensorboard --logdir <dir>)")
+    _write(records, extra=extra)
     _gate_baseline(records, baseline_path, update=update_baseline,
-                   paged_ratio=paged_ratio)
+                   paged_ratio=paged_ratio, decode_horizon=decode_horizon,
+                   ratio=ratio)
     return records[-1]
 
 
 def _gate_baseline(records, path: str, *, update: bool = False,
-                   paged_ratio: dict | None = None):
+                   paged_ratio: dict | None = None,
+                   decode_horizon: int = 1, ratio: float | None = None):
     """Compare per-backend ``decode_tokens_per_sec`` against the
     committed baseline; >tolerance regression fails, delta always
     printed.  ``update=True`` rewrites the baseline instead (commit the
-    result after a legitimate perf change — docs/ci.md)."""
+    result after a legitimate perf change — docs/ci.md).
+
+    The quantized/reference ratio is a ratcheted MILESTONE check: the
+    committed baseline is the floor (regressing more than
+    ``ratio_tolerance`` below it fails), ``RATIO_TARGET`` is the
+    destination, and every run prints + records how far along the climb
+    the tree currently is."""
     measured = {r["gate"]: float(r["decode_tokens_per_sec"])
                 for r in records if r.get("gate")}
-    ratio = measured["quantized"] / measured["reference"]
+    if ratio is None:       # paired measurement preferred (tiny_smoke)
+        ratio = measured["quantized"] / measured["reference"]
     if update:
         # RATCHET: the machine-independent ratio may only climb.  A
         # baseline refresh that would LOWER it is refused — a real
@@ -587,6 +716,12 @@ def _gate_baseline(records, path: str, *, update: bool = False,
             # machine-independent: survives runner-hardware changes that
             # shift both absolute numbers together
             "quantized_to_reference_ratio": round(ratio, 3),
+            # the milestone the ratchet is climbing toward (paper claim:
+            # the quantized path is the CHEAPEST cell, ratio >= 1.0)
+            "ratio_target": RATIO_TARGET,
+            "ratio_progress": round(ratio / RATIO_TARGET, 3),
+            # decode iterations per jitted dispatch when measured
+            "decode_horizon": decode_horizon,
             # reported (not gated): paged-layout decode overhead per
             # backend at the CI block size
             "paged_to_dense_ratio": paged_ratio or {},
@@ -594,7 +729,9 @@ def _gate_baseline(records, path: str, *, update: bool = False,
             "updated": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "update_cmd": ("PYTHONPATH=src python -m "
                            "benchmarks.serve_throughput --tiny "
-                           "--update-baseline"),
+                           "--update-baseline"
+                           + (f" --decode-horizon {decode_horizon}"
+                              if decode_horizon > 1 else "")),
         }, open(path, "w"), indent=1)
         print(f"  wrote baseline {os.path.relpath(path)}: "
               + ", ".join(f"{k}={v:.1f}" for k, v in measured.items())
@@ -628,9 +765,11 @@ def _gate_baseline(records, path: str, *, update: bool = False,
         tolr = float(base.get("ratio_tolerance", tol))
         delta = (ratio - want_ratio) / want_ratio
         verdict = "OK" if ratio >= want_ratio * (1.0 - tolr) else "REGRESSION"
+        target = float(base.get("ratio_target", RATIO_TARGET))
         print(f"  perf gate[ratio]: quantized/reference {ratio:.3f} vs "
               f"baseline {want_ratio:.3f} ({delta:+.1%}, tolerance "
-              f"-{tolr:.0%}) {verdict}  [machine-independent, ratcheted]")
+              f"-{tolr:.0%}) {verdict}  [machine-independent, ratcheted "
+              f"milestone: {ratio / target:.0%} of target {target:.1f}]")
         if verdict != "OK":
             failures.append(
                 f"quantized/reference ratio {ratio:.3f} < "
@@ -689,6 +828,15 @@ if __name__ == "__main__":
                     help="Pallas execution for the quantized backend: "
                          "auto = compiled on TPU/GPU, interpret on CPU "
                          "(the default); on/off force interpret mode")
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="decode iterations per jitted dispatch "
+                         "(lax.scan multi-step decode); > 1 also adds "
+                         "the horizon parity + dispatch-count cell in "
+                         "--tiny mode (CI pins 4)")
+    ap.add_argument("--profile", action="store_true",
+                    help="--tiny only: wrap the gated decode "
+                         "measurement in jax.profiler.trace and record "
+                         "the trace dir in the artifact")
     args = ap.parse_args()
     interp = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
     if args.sweep:
@@ -701,7 +849,9 @@ if __name__ == "__main__":
                    update_baseline=args.update_baseline,
                    block_size=args.block_size, kernel_interpret=interp,
                    policy=args.policy, draft=args.draft,
-                   spec_k=args.spec_k)
+                   spec_k=args.spec_k,
+                   decode_horizon=args.decode_horizon,
+                   profile=args.profile)
     else:
         run(quick=args.quick, block_size=args.block_size,
-            kernel_interpret=interp)
+            kernel_interpret=interp, decode_horizon=args.decode_horizon)

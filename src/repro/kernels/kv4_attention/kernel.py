@@ -10,6 +10,25 @@ an online-softmax accumulator (m, l, acc) runs across KV chunks
 (flash-decoding).  Grid: (batch, kv_head, kv_chunk).
 
 GQA: each kv head serves G = H/Hkv query heads; the q tile is [G, D].
+
+Two generations of entry points:
+
+* ``kv4_decode_attention_kernel`` / ``kv4_paged_decode_attention_kernel``
+  — attention only; the caller has already quantize-scattered the new
+  K/V row (two passes over the append position, plus an XLA transpose
+  of every cache leaf per call to reach the kernel's streaming layout).
+* ``kv4_decode_attention_fused_kernel`` /
+  ``kv4_paged_decode_attention_fused_kernel`` — fused append: the
+  entry RTN-quantizes + nibble-packs the new K/V row with the exact
+  ``core.kvquant`` ops the two-pass ``_store`` uses (same jit, same
+  bytes), then ONE kernel overlays it on the walked tile for the
+  softmax math and writes the modified cache tile back through
+  ``input_output_aliases`` — decode touches the cache exactly once per
+  layer, in its NATIVE layout (no transposes, no separate scatter
+  dispatch).  Their grid is (batch, kv_chunk) with every kv head
+  vectorized inside the block: fewer grid steps is what makes the
+  fused path cheap under interpret-mode emulation too, where per-step
+  overhead dominates.
 """
 from __future__ import annotations
 
@@ -20,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.kvquant import kv_quantize
 from repro.kernels.dispatch import resolve_interpret
 
 NEG_INF = -1e30
@@ -251,3 +271,326 @@ def kv4_decode_attention_kernel(q, k_packed, k_scales, v_packed, v_scales,
         interpret=interpret,
     )(lens, qg, kp, ks, vp, vs)
     return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Fused KV-append flash-decode: append the new K/V row and walk the cache
+# in ONE kernel over the cache's native layout
+# ---------------------------------------------------------------------------
+
+
+def _quant_pack_rows(k_new, v_new):
+    """RTN-quantize + nibble-pack the new K/V rows OUTSIDE the kernel.
+
+    ``k_new``/``v_new`` [B, Hkv, D] -> packed int8 [B, 1, Hkv, D/2] and
+    stacked (mu, z) scales f32 [B, 1, Hkv, 2], shaped for the kernels'
+    new-row BlockSpecs.  Runs through the exact ``core.kvquant``
+    functions the two-pass ``_store`` path uses, inside the same jit —
+    the fused cache bytes are therefore identical by construction, and
+    the (tiny, [B, Hkv, D]-sized) quantization compiles to plain XLA
+    instead of being re-emulated at every grid step of an
+    interpret-mode kernel."""
+    kp, kmu, kz = kv_quantize(k_new.astype(jnp.float32), 4)
+    vp, vmu, vz = kv_quantize(v_new.astype(jnp.float32), 4)
+    ks = jnp.concatenate([kmu, kz], axis=-1)
+    vs = jnp.concatenate([vmu, vz], axis=-1)
+    return (kp[:, None], ks[:, None], vp[:, None], vs[:, None])
+
+
+def _unpack_dequant_heads(packed, scales, d):
+    """int8 nibbles [Sc, Hkv, D/2] + (mu, z) [Sc, Hkv, 2] -> f32
+    [Hkv, Sc, D] — the all-heads twin of ``_unpack_dequant`` (the fused
+    kernels carry every kv head in one block so the grid stays
+    (batch, chunk): grid steps are the scarce resource in interpret
+    mode, vector width is not)."""
+    u = packed.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.float32)
+    hi = ((u >> 4) & 0xF).astype(jnp.float32)
+    sc, hkv = u.shape[0], u.shape[1]
+    x = jnp.stack([lo, hi], axis=-1).reshape(sc, hkv, d)
+    x = x.transpose(1, 0, 2)                           # [Hkv, Sc, D]
+    mu = scales[:, :, 0].T[:, :, None]                 # [Hkv, Sc, 1]
+    z = scales[:, :, 1].T[:, :, None]
+    return mu * (x - z)
+
+
+def _fused_body(ci, pos, q, kp_n, ks_n, vp_n, vs_n, kp_w, ks_w, vp_w, vs_w,
+                o_ref, kp_out, ks_out, vp_out, vs_out,
+                m_ref, l_ref, acc_ref, *, d, s_chunk, n_chunks,
+                chunk_base):
+    """Shared fused-append chunk step (dense and paged wrap it).
+
+    ``kp_w``/... are the walked cache tiles [Sc, Hkv, *]; ``chunk_base``
+    is the absolute position of the tile's first row; ``kp_n``/... the
+    pre-quantized new K/V row [Hkv, *].  The new row is OVERLAID on the
+    walk tile for the softmax math (the aliased input tile in HBM is
+    stale at the append row), and — on the append chunk only — the
+    fully-modified tiles are written back.  All kv heads run vectorized
+    in one grid step; the per-head chunk accumulation order matches the
+    two-pass kernels."""
+    kv_len = pos + 1
+    append_chunk = pos // s_chunk
+    is_append = ci == append_chunk
+    r = pos % s_chunk
+
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (s_chunk, 1, 1), 0) == r) \
+        & is_append
+    kp_t = jnp.where(sel, kp_n[None], kp_w)
+    ks_t = jnp.where(sel, ks_n[None], ks_w)
+    vp_t = jnp.where(sel, vp_n[None], vp_w)
+    vs_t = jnp.where(sel, vs_n[None], vs_w)
+
+    k = _unpack_dequant_heads(kp_t, ks_t, d)           # [Hkv, Sc, D]
+    v = _unpack_dequant_heads(vp_t, vs_t, d)
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # [Hkv, G, Sc]
+    apos = chunk_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(apos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # [Hkv, G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # [Hkv, G, Sc]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # [Hkv, G, D]
+    m_ref[...] = m_new
+
+    # the append tile's out block index is constant across the chunk
+    # sweep (index map reads only pos), so this single full-tile write
+    # is the one flush the compiled pipeline performs per batch row
+    @pl.when(is_append)
+    def _append():
+        kp_out[0] = kp_t
+        ks_out[0] = ks_t
+        vp_out[0] = vp_t
+        vs_out[0] = vs_t
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _fused_kernel(pos_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                  kpn_ref, ksn_ref, vpn_ref, vsn_ref,
+                  o_ref, kp_out, ks_out, vp_out, vs_out,
+                  m_ref, l_ref, acc_ref, *, d: int, s_chunk: int,
+                  n_chunks: int, scale: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[pl.program_id(0)]
+    q = q_ref[0].astype(jnp.float32) * scale           # [Hkv, G, D]
+    _fused_body(ci, pos, q,
+                kpn_ref[0, 0], ksn_ref[0, 0], vpn_ref[0, 0], vsn_ref[0, 0],
+                kp_ref[0], ks_ref[0], vp_ref[0], vs_ref[0],
+                o_ref, kp_out, ks_out, vp_out, vs_out, m_ref, l_ref,
+                acc_ref, d=d, s_chunk=s_chunk, n_chunks=n_chunks,
+                chunk_base=ci * s_chunk)
+
+
+def _fused_paged_kernel(pos_ref, bt_ref, q_ref, kp_ref, ks_ref, vp_ref,
+                        vs_ref, kpn_ref, ksn_ref, vpn_ref, vsn_ref,
+                        o_ref, kp_out, ks_out, vp_out, vs_out,
+                        m_ref, l_ref, acc_ref, *, d: int,
+                        s_chunk: int, n_chunks: int, cpb: int,
+                        block_size: int, scale: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[pl.program_id(0)]
+    q = q_ref[0].astype(jnp.float32) * scale           # [Hkv, G, D]
+    # logical chunk index of the append row: sc | BS, so the in-block
+    # sub-tile (pos % BS) // sc composes with the block index pos // BS
+    _fused_body(ci, pos, q,
+                kpn_ref[0, 0], ksn_ref[0, 0], vpn_ref[0, 0], vsn_ref[0, 0],
+                kp_ref[0], ks_ref[0], vp_ref[0], vs_ref[0],
+                o_ref, kp_out, ks_out, vp_out, vs_out, m_ref, l_ref,
+                acc_ref, d=d, s_chunk=s_chunk, n_chunks=n_chunks,
+                chunk_base=(ci // cpb) * block_size + (ci % cpb) * s_chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_decode_attention_fused_kernel(q, k_packed, k_scales, v_packed,
+                                      v_scales, pos, k_new, v_new, *,
+                                      s_chunk: int = 512,
+                                      interpret: bool | None = None):
+    """Fused append + flash-decode over the NATIVE dense cache layout.
+
+    q [B, H, D]; packed caches [B, S, Hkv, D/2]; scales [B, S, Hkv, 2];
+    ``pos`` [B] (or scalar) append positions (row b's valid length
+    becomes pos[b] + 1); ``k_new``/``v_new`` [B, Hkv, D] un-quantized
+    (rope'd) rows.  Returns (out [B, H, D] f32, and the four cache
+    leaves with row ``pos`` quantize-appended) — the leaves alias the
+    inputs (``input_output_aliases``), so only the append tile is
+    re-written; everything else is untouched HBM.
+
+    Unlike ``kv4_decode_attention_kernel`` there is NO transposed
+    staging copy: BlockSpecs walk [B, S, Hkv, *] directly, all kv heads
+    per grid step (grid (batch, chunk)).
+    """
+    interpret = resolve_interpret(interpret)
+    b, h, d = q.shape
+    s_max, hkv = k_packed.shape[1], k_packed.shape[2]
+    g = h // hkv
+    sc = min(s_chunk, s_max)
+    assert s_max % sc == 0
+    n_chunks = s_max // sc
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    kpn, ksn, vpn, vsn = _quant_pack_rows(k_new, v_new)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+    def walk(width):
+        return pl.BlockSpec((1, sc, hkv, width),
+                            lambda bi, ci, pos_ref: (bi, ci, 0, 0))
+
+    def append(width):
+        # constant in ci: one VMEM residency, one flush per batch row
+        return pl.BlockSpec(
+            (1, sc, hkv, width),
+            lambda bi, ci, pos_ref: (bi, pos_ref[bi] // sc, 0, 0))
+
+    def newrow(width):
+        return pl.BlockSpec((1, 1, hkv, width),
+                            lambda bi, ci, pos_ref: (bi, 0, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, hkv, g, d),
+                         lambda bi, ci, pos_ref: (bi, 0, 0, 0)),
+            walk(d // 2), walk(2), walk(d // 2), walk(2),
+            newrow(d // 2), newrow(2), newrow(d // 2), newrow(2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hkv, g, d),
+                         lambda bi, ci, pos_ref: (bi, 0, 0, 0)),
+            append(d // 2), append(2), append(d // 2), append(2),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+        ],
+    )
+    out, kp, ks, vp, vs = pl.pallas_call(
+        functools.partial(_fused_kernel, d=d, s_chunk=sc,
+                          n_chunks=n_chunks, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct(k_packed.shape, k_packed.dtype),
+            jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+            jax.ShapeDtypeStruct(v_packed.shape, v_packed.dtype),
+            jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype),
+        ],
+        # operand indices count the scalar-prefetch arg: pos=0, q=1, ...
+        input_output_aliases={2: 1, 3: 2, 4: 3, 5: 4},
+        interpret=interpret,
+    )(posv, qg, k_packed, k_scales, v_packed, v_scales,
+      kpn, ksn, vpn, vsn)
+    return out.reshape(b, h, d), kp, ks, vp, vs
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_paged_decode_attention_fused_kernel(q, k_packed, k_scales,
+                                            v_packed, v_scales, pos,
+                                            block_tables, k_new, v_new, *,
+                                            s_chunk: int = 512,
+                                            interpret: bool | None = None):
+    """Fused append + paged flash-decode over the NATIVE pool layout.
+
+    Pool leaves [NB+1, BS, Hkv, *] (block id 0 = null block);
+    ``block_tables`` [B, n_bt]; ``pos`` [B] append positions.  The
+    append tile is the table-mapped pool tile containing row ``pos`` —
+    the scheduler's COW pass guarantees it is exclusively owned (or the
+    garbage-tolerated null block for idle riding slots), so the aliased
+    write never races another row's walk.  Returns (out, new pool
+    leaves).
+    """
+    interpret = resolve_interpret(interpret)
+    b, h, d = q.shape
+    bs, hkv = k_packed.shape[1], k_packed.shape[2]
+    g = h // hkv
+    sc = min(s_chunk, bs)
+    assert bs % sc == 0, (bs, sc)
+    cpb = bs // sc
+    n_bt = block_tables.shape[1]
+    n_chunks = n_bt * cpb
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    kpn, ksn, vpn, vsn = _quant_pack_rows(k_new, v_new)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def walk(width):
+        return pl.BlockSpec(
+            (1, sc, hkv, width),
+            lambda bi, ci, pos_ref, bt_ref:
+                (bt_ref[bi, ci // cpb], ci % cpb, 0, 0))
+
+    def append(width):
+        return pl.BlockSpec(
+            (1, sc, hkv, width),
+            lambda bi, ci, pos_ref, bt_ref:
+                (bt_ref[bi, pos_ref[bi] // bs],
+                 (pos_ref[bi] % bs) // sc, 0, 0))
+
+    def newrow(width):
+        return pl.BlockSpec((1, 1, hkv, width),
+                            lambda bi, ci, pos_ref, bt_ref: (bi, 0, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, hkv, g, d),
+                         lambda bi, ci, pos_ref, bt_ref: (bi, 0, 0, 0)),
+            walk(d // 2), walk(2), walk(d // 2), walk(2),
+            newrow(d // 2), newrow(2), newrow(d // 2), newrow(2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hkv, g, d),
+                         lambda bi, ci, pos_ref, bt_ref: (bi, 0, 0, 0)),
+            append(d // 2), append(2), append(d // 2), append(2),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+        ],
+    )
+    out, kp, ks, vp, vs = pl.pallas_call(
+        functools.partial(_fused_paged_kernel, d=d, s_chunk=sc,
+                          n_chunks=n_chunks, cpb=cpb, block_size=bs,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct(k_packed.shape, k_packed.dtype),
+            jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+            jax.ShapeDtypeStruct(v_packed.shape, v_packed.dtype),
+            jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype),
+        ],
+        # indices count BOTH scalar-prefetch args: pos=0, bt=1, q=2, ...
+        input_output_aliases={3: 1, 4: 2, 5: 3, 6: 4},
+        interpret=interpret,
+    )(posv, bt, qg, k_packed, k_scales, v_packed, v_scales,
+      kpn, ksn, vpn, vsn)
+    return out.reshape(b, h, d), kp, ks, vp, vs

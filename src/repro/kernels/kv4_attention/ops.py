@@ -6,7 +6,9 @@ import functools
 import jax
 
 from repro.kernels.kv4_attention.kernel import (
+    kv4_decode_attention_fused_kernel,
     kv4_decode_attention_kernel,
+    kv4_paged_decode_attention_fused_kernel,
     kv4_paged_decode_attention_kernel,
 )
 
@@ -38,6 +40,43 @@ def kv4_paged_decode_attention(q, cache, kv_len, block_tables, *,
     return kv4_paged_decode_attention_kernel(
         q, cache.k, cache.k_scale, cache.v, cache.v_scale, kv_len,
         block_tables, s_chunk=s_chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_decode_attention_fused(q, cache, pos, k_new, v_new, *,
+                               s_chunk: int = 512,
+                               interpret: bool | None = None):
+    """Fused quantize-append + flash-decode on a dense-layout cache.
+
+    ``k_new``/``v_new`` [B, Hkv, D] are the UN-quantized (rope'd) rows
+    for append positions ``pos`` [B]; the entry quantizes them with the
+    same ``core.kvquant`` ops as the ``_store`` two-pass path (byte-
+    identical cache), the kernel writes them and walks the cache in its
+    native layout — no staging transposes — and returns
+    ``(out [B, H, D] f32, new_cache)`` where only the append tiles of
+    the aliased cache leaves were re-written.  ``cache.length`` advances
+    by 1, matching ``_store``'s bookkeeping.
+    """
+    out, kp, ks, vp, vs = kv4_decode_attention_fused_kernel(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, pos,
+        k_new, v_new, s_chunk=s_chunk, interpret=interpret)
+    return out, cache._replace(k=kp, v=vp, k_scale=ks, v_scale=vs,
+                               length=cache.length + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def kv4_paged_decode_attention_fused(q, cache, pos, block_tables, k_new,
+                                     v_new, *, s_chunk: int = 512,
+                                     interpret: bool | None = None):
+    """Paged-pool twin of ``kv4_decode_attention_fused``: the append
+    tile is resolved through the slot's block table (COW has made it
+    exclusively owned, or it is the garbage-tolerated null block).
+    ``cache.length`` is untouched — paged validity always derives from
+    the engine's position vector, matching ``_paged_store_rows``."""
+    out, kp, ks, vp, vs = kv4_paged_decode_attention_fused_kernel(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, pos,
+        block_tables, k_new, v_new, s_chunk=s_chunk, interpret=interpret)
+    return out, cache._replace(k=kp, v=vp, k_scale=ks, v_scale=vs)
 
 
 def kv4_chunk_for(s_max: int, cap: int = 512) -> int:

@@ -31,6 +31,12 @@ def main():
                          "params, i.e. not --no-quant)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="decode iterations folded into ONE jitted "
+                         "dispatch (lax.scan; amortizes host overhead). "
+                         "Streams are bit-identical to horizon 1; "
+                         "per-token delivery becomes bursty (see "
+                         "docs/serving.md 'Multi-step decode')")
     ap.add_argument("--kv-layout", default="dense",
                     choices=("dense", "paged"),
                     help="KV cache layout: dense slot rows, or the paged "
@@ -107,7 +113,7 @@ def main():
         batch_slots=args.slots, max_len=512, backend=args.backend,
         kv_layout=args.kv_layout, block_size=args.block_size,
         num_blocks=args.num_blocks, kernel_interpret=interpret,
-        tp=args.tp))
+        tp=args.tp, decode_horizon=args.decode_horizon))
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "
@@ -143,10 +149,14 @@ def main():
           f"{st['seconds']:.2f}s ({st['tokens_per_sec']:.1f} tok/s overall; "
           f"prefill {st['prefill_seconds']:.2f}s / decode "
           f"{st['decode_seconds']:.2f}s, ttft {st['ttft_ms'] or 0:.0f}ms, "
-          f"itl {st['itl_ms'] or 0:.1f}ms)")
+          f"itl {st['itl_ms'] or 0:.1f}ms "
+          f"[p50 {st['itl_p50_ms'] or 0:.1f} / p95 {st['itl_p95_ms'] or 0:.1f}"
+          f" / p99 {st['itl_p99_ms'] or 0:.1f}])")
     print(f"[serve] {st['decode_steps']} batched decode steps, "
           f"{st['dispatches_per_step']:.0f} dispatch/step, "
-          f"{st['prefill_compiles']} prefill compiles for "
+          f"{st['decode_dispatches']} decode dispatches at horizon "
+          f"{args.decode_horizon} ({st['tokens_per_dispatch']:.2f} "
+          f"tok/dispatch), {st['prefill_compiles']} prefill compiles for "
           f"buckets {st['chunk_buckets']}")
     print(f"[serve] session: mean queue {st['queue_ms'] or 0:.1f}ms, "
           f"{st['preemptions']} preemptions, {st['cancelled']} cancelled, "

@@ -448,15 +448,15 @@ def attention_decode_paged(params, x, cache: KVCache, pos, block_tables, *,
 
     x [B, 1, D]; ``pos`` [B] (or scalar) absolute positions;
     ``block_tables`` [B, n_bt] int32 mapping each slot's logical blocks
-    to pool rows.  The new K/V row is scattered through the table
-    (slots whose entry is the null block — idle rides — write garbage
-    into never-attended rows), then attention runs either through the
-    paged flash-decode kernel (walks the block table in the kernel grid
-    via scalar prefetch; KV-chunk = the largest divisor of block_size
-    <= ``kv_chunk``, so a dense engine configured with the same
-    effective chunk split is bit-identical) or the reference gather
-    path (bit-identical to the dense reference path by the
-    masked-extra-columns argument).  Returns (out, new_cache).
+    to pool rows.  Under the serving kernel mode the FUSED flash-decode
+    kernel quantize-appends the new K/V row and walks the block table in
+    one dispatch (KV-chunk = the largest divisor of block_size <=
+    ``kv_chunk``, so a dense engine configured with the same effective
+    chunk split is bit-identical); otherwise the row is scattered
+    through the table first (slots whose entry is the null block — idle
+    rides — write garbage into never-attended rows) and the reference
+    gather path attends it (bit-identical to the dense reference path
+    by the masked-extra-columns argument).  Returns (out, new_cache).
     """
     from repro.core.packed_linear import current_kernel_mode
 
@@ -469,22 +469,25 @@ def attention_decode_paged(params, x, cache: KVCache, pos, block_tables, *,
     if rope_theta:
         q = apply_rope(q, pos_v[:, None], rope_theta)
         k = apply_rope(k, pos_v[:, None], rope_theta)
-    dst = _paged_row_index(bt, pos_v, bs)
-    cache = _paged_store_rows(cache, k[:, 0], v[:, 0], dst, kv_bits)
     km = current_kernel_mode()
     if (kernel_ok and km is not None and km.mode == "decode"
             and kv_bits == 4 and head_dim % 2 == 0):
         from repro.kernels.kv4_attention.ops import (
             kv4_chunk_for,
-            kv4_paged_decode_attention,
+            kv4_paged_decode_attention_fused,
         )
         sc = kv4_chunk_for(bs, cap=kv_chunk)
         if sc:
-            out = kv4_paged_decode_attention(q[:, 0], cache, pos_v + 1, bt,
-                                             s_chunk=sc,
-                                             interpret=km.interpret)
+            # fused append: the table-mapped pool tile holding row
+            # ``pos`` is quantize-written inside the flash-decode walk
+            # (COW guarantees it is exclusively owned or the null block)
+            out, cache = kv4_paged_decode_attention_fused(
+                q[:, 0], cache, pos_v, bt, k[:, 0], v[:, 0],
+                s_chunk=sc, interpret=km.interpret)
             out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
             return dot(out, params["wo"]), cache
+    dst = _paged_row_index(bt, pos_v, bs)
+    cache = _paged_store_rows(cache, k[:, 0], v[:, 0], dst, kv_bits)
     row = _paged_gather_rows(cache, bt)              # leaves [B, L, ...]
     kc, vc = _load(row, kv_bits, x.dtype)
     ke = hint(_expand_kv(kc, n_heads), "batch", None, "model", None)
@@ -534,13 +537,16 @@ def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
             and kv_bits == 4 and head_dim % 2 == 0):
         from repro.kernels.kv4_attention.ops import (
             kv4_chunk_for,
-            kv4_decode_attention,
+            kv4_decode_attention_fused,
         )
         sc = kv4_chunk_for(cache.k.shape[1], cap=kv_chunk)
         if sc:
-            cache = _store(cache, k, v, pos, kv_bits)
-            out = kv4_decode_attention(q[:, 0], cache, pos_v + 1,
-                                       s_chunk=sc, interpret=km.interpret)
+            # fused append: quantize-store of the new row and the
+            # flash-decode walk share ONE kernel — the cache is touched
+            # once per layer (no separate _store scatter dispatch)
+            out, cache = kv4_decode_attention_fused(
+                q[:, 0], cache, pos_v, k[:, 0], v[:, 0],
+                s_chunk=sc, interpret=km.interpret)
             out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
             return dot(out, params["wo"]), cache
     if window:

@@ -333,7 +333,13 @@ class LanguageModel:
         (= serving slot) sits at its own position in a shared cache.
         Paged layout: pass ``block_tables`` [B, n_bt] int32 with
         ``init_paged_caches`` caches.  Returns (logits [B, V],
-        new caches)."""
+        new caches).
+
+        This is also the loop body of the serving runner's multi-step
+        dispatch (``decode_multi``): everything here must stay valid
+        under a ``lax.while_loop`` carry — no host callbacks, caches
+        threaded functionally — so up to ``decode_horizon`` iterations
+        can run per jitted dispatch with bit-identical streams."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token[:, None], axis=0)
         ctx = DecodeCtx(pos=pos, block_tables=block_tables)

@@ -42,6 +42,12 @@ class EngineConfig:
     - ``num_blocks``       — paged: pool size (None = slots worst case).
     - ``tp``               — tensor-parallel degree (1 = single device).
     - ``mesh``             — explicit serving mesh (overrides ``tp``).
+    - ``decode_horizon``   — max decode iterations folded into ONE
+      jitted dispatch (``lax.scan`` over the decode step with in-graph
+      sampling and EOS/stop masking).  1 = the historical per-token
+      dispatch; >1 amortizes host/dispatch overhead at the cost of
+      burstier token delivery (see docs/serving.md "Multi-step
+      decode").  Streams are bit-identical across horizons.
     """
 
     batch_slots: int = 4
@@ -57,6 +63,7 @@ class EngineConfig:
     num_blocks: int | None = None
     tp: int = 1
     mesh: Any = None
+    decode_horizon: int = 1
 
     def __post_init__(self):
         if self.batch_slots < 1:
@@ -88,6 +95,11 @@ class EngineConfig:
                 f"num_blocks must be >= 1 or None, got {self.num_blocks}")
         if self.tp < 1:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if not isinstance(self.decode_horizon, int) \
+                or isinstance(self.decode_horizon, bool) \
+                or self.decode_horizon < 1:
+            raise ValueError(f"decode_horizon must be an int >= 1, "
+                             f"got {self.decode_horizon!r}")
 
     def replace(self, **changes) -> "EngineConfig":
         """Return a copy with ``changes`` applied (re-validates)."""

@@ -158,7 +158,8 @@ class ServeEngine:
                                 place=self.runner.place_caches)
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=cfg.eos_id,
                                    seed=cfg.seed,
-                                   overflow_policy=cfg.overflow_policy)
+                                   overflow_policy=cfg.overflow_policy,
+                                   decode_horizon=cfg.decode_horizon)
         if model.supports_chunked_prefill:
             self.scheduler.draft_factory = self._build_draft
 

@@ -50,9 +50,20 @@ class PolicyError(ValueError):
 class DecodePolicy:
     """Base class for per-request decode strategies.  Frozen (rides
     inside the frozen ``SamplingParams``); ``name`` identifies the
-    policy for validation/stats without isinstance chains."""
+    policy for validation/stats without isinstance chains.
+
+    ``supports_horizon`` declares how the policy composes with
+    multi-step decode (``EngineConfig.decode_horizon > 1``): True means
+    the stream's emissions may ride a k-iteration ``lax.scan`` dispatch
+    (token choice is in-graph); False means the policy needs host-side
+    work between consecutive tokens, so the scheduler cleanly bypasses
+    the horizon for it — speculative streams keep their own
+    draft+verify round (which already amortizes dispatches), and a live
+    beam group drops the step to per-token dispatch (joint re-ranking
+    runs on the host after every token)."""
 
     name = "greedy"
+    supports_horizon = True
 
     def validated(self) -> "DecodePolicy":
         return self
@@ -66,6 +77,7 @@ class GreedyPolicy(DecodePolicy):
     not the token choice.)"""
 
     name = "greedy"
+    supports_horizon = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +96,7 @@ class SpeculativePolicy(DecodePolicy):
     """
 
     name = "speculative"
+    supports_horizon = False    # emits via its own draft+verify round
     k: int = 4
     draft: str = "self"
 
@@ -115,6 +128,7 @@ class BeamSearchPolicy(DecodePolicy):
     """
 
     name = "beam"
+    supports_horizon = False    # host re-rank between every token
     width: int = 4
     length_penalty: float = 0.0
 

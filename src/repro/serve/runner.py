@@ -170,6 +170,10 @@ class ModelRunner:
         self._chunk_fns: dict[int, object] = {}   # bucket C -> jitted
         self._full_fns: dict[int, object] = {}    # prompt len -> jitted
         self._verify_fns: dict[int, object] = {}  # draft len T -> jitted
+        # multi-step decode: one compile per (horizon k, stop-token
+        # width) pair seen in traffic — bounded by the distinct
+        # EngineConfig.decode_horizon values (1 under a uniform config)
+        self._multi_fns: dict[tuple[int, int], object] = {}
 
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
@@ -379,6 +383,121 @@ class ModelRunner:
                                           caches, jnp.asarray(pos))
         self.decode_dispatches += 1
         return logits, caches
+
+    def _build_decode_multi(self, k: int, n_stop: int):
+        """Jit up to ``k`` decode iterations as ONE dispatch: a bounded
+        ``lax.while_loop`` over the decode-step body with in-graph
+        batched sampling through the per-stream PRNG key chains and
+        in-graph EOS/stop/budget/ceiling masking.  Finished slots
+        freeze (token, position, key) and keep re-writing the same
+        masked cache row, so every stream's emitted tokens are
+        bit-identical to ``k`` separate dispatches; once EVERY slot has
+        finished the loop exits early instead of burning dead
+        iterations (skipped iterations emit nothing and touch nothing a
+        later dispatch can observe — that is what keeps the horizon's
+        worst-case waste at the tail bounded).  The loop bound itself
+        is a TRACED scalar (``k_eff`` <= the static buffer size ``k``):
+        the scheduler clamps each window to the smallest remaining
+        budget among participants so control returns exactly when a
+        slot frees for refill — no recompile, because a while_loop
+        bound need not be static.  The sampler is the SAME
+        ``sample_tokens_batched`` the per-token path jits; the
+        ``optimization_barrier`` pins the logits exactly as the decode
+        step produced them (no cross-iteration refusion), which is what
+        makes the horizon-1 parity contract hold bit-for-bit."""
+        decode_fn = (
+            (lambda p, tok, caches, pos, bt:
+             self.model.decode_step(p, tok, caches, pos, block_tables=bt))
+            if self.paged else self.model.decode_step)
+        ranks = (1, 1, 2) if self.paged else (1, 1)
+        step = self._shard_wrap(decode_fn, ranks)
+        paged = self.paged
+        max_len = self.max_len
+
+        def multi_fn(p, tok, caches, pos, *rest):
+            if paged:
+                bt, keys, temps, active, budget, eos, stop, k_eff = rest
+            else:
+                keys, temps, active, budget, eos, stop, k_eff = rest
+            kk = jnp.minimum(k_eff, jnp.int32(k))
+
+            def body(state):
+                i, caches, tok, pos, keys, active, budget, \
+                    toks_buf, emit_buf = state
+                if paged:
+                    logits, caches = step(p, tok, caches, pos, bt)
+                else:
+                    logits, caches = step(p, tok, caches, pos)
+                logits = jax.lax.optimization_barrier(logits)
+                toks, nkeys = sample_tokens_batched(keys, logits, temps)
+                tok = jnp.where(active, toks, tok)
+                # a stream's key chain advances ONLY on its own
+                # emissions (same commit rule as the host loop)
+                keys = jnp.where((active & (temps > 0.0))[:, None],
+                                 nkeys, keys)
+                toks_buf = jax.lax.dynamic_update_index_in_dim(
+                    toks_buf, tok, i, 0)
+                emit_buf = jax.lax.dynamic_update_index_in_dim(
+                    emit_buf, active, i, 0)
+                pos = pos + active.astype(pos.dtype)
+                budget = budget - active.astype(budget.dtype)
+                eos_hit = (eos >= 0) & (tok == eos)
+                if n_stop:
+                    stop_hit = (tok[:, None] == stop).any(axis=1)
+                else:
+                    stop_hit = jnp.zeros_like(active)
+                # mirror of the scheduler's _finished sweep: budget
+                # exhausted, eos, stop token, or cache ceiling
+                active = active & (budget > 0) & ~eos_hit & ~stop_hit \
+                    & (pos + 1 < max_len)
+                return (i + 1, caches, tok, pos, keys, active, budget,
+                        toks_buf, emit_buf)
+
+            def cond(state):
+                i, _, _, _, _, active = state[:6]
+                return (i < kk) & jnp.any(active)
+
+            state = (jnp.int32(0), caches, tok, pos, keys, active,
+                     budget,
+                     jnp.zeros((k,) + tok.shape, tok.dtype),
+                     jnp.zeros((k,) + active.shape, bool))
+            state = jax.lax.while_loop(cond, body, state)
+            _, caches, tok, pos, keys, active, budget, toks, emitted \
+                = state
+            return toks, emitted, tok, pos, keys, active, budget, caches
+
+        return jax.jit(self._traced(multi_fn, "decode"),
+                       donate_argnums=(2,))
+
+    def decode_multi(self, k: int, tokens, caches, pos, keys, temps,
+                     active, budget, eos, stop, block_tables=None,
+                     k_eff=None):
+        """Up to ``k`` decode iterations in ONE jitted dispatch (counts
+        as ONE ``decode_dispatches``).  ``eos`` is -1 where a slot has
+        no effective eos; ``stop`` is the [slots, n_stop] stop-token
+        matrix padded with -1.  ``k_eff`` (traced, <= k, default k)
+        bounds THIS window without recompiling — the scheduler passes
+        the smallest participant budget so the dispatch never runs
+        iterations no slot can use.  Returns DEVICE arrays — callers
+        defer the host fetch so it can overlap the next dispatch's
+        compute: (toks [k, slots], emitted [k, slots] bool, and the
+        final tok/pos/keys/active/budget carries for issue-ahead
+        chaining, plus the new caches)."""
+        stop = np.asarray(stop, np.int32)       # [slots, n_stop] host-side
+        fn_key = (int(k), int(stop.shape[1]))
+        fn = self._multi_fns.get(fn_key)
+        if fn is None:
+            fn = self._multi_fns[fn_key] = self._build_decode_multi(*fn_key)
+        rest = [jnp.asarray(keys), jnp.asarray(temps, jnp.float32),
+                jnp.asarray(active, bool), jnp.asarray(budget, jnp.int32),
+                jnp.asarray(eos, jnp.int32), jnp.asarray(stop),
+                jnp.asarray(k if k_eff is None else k_eff, jnp.int32)]
+        if self.paged:
+            rest.insert(0, jnp.asarray(block_tables, jnp.int32))
+        out = fn(self.params, jnp.asarray(tokens), caches,
+                 jnp.asarray(pos), *rest)
+        self.decode_dispatches += 1
+        return out
 
     def verify(self, tokens: np.ndarray, caches, pos: np.ndarray,
                active: np.ndarray, block_tables: np.ndarray | None = None):

@@ -111,12 +111,25 @@ class Request:
 
 class Scheduler:
     def __init__(self, runner, kv, *, eos_id: int | None = None,
-                 seed: int = 0, overflow_policy: str = "truncate"):
+                 seed: int = 0, overflow_policy: str = "truncate",
+                 decode_horizon: int = 1):
         if overflow_policy not in ("truncate", "reject"):
             raise ValueError(f"overflow_policy must be 'truncate' or "
                              f"'reject', got {overflow_policy!r}")
+        if decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon must be >= 1, got {decode_horizon}")
         self.runner = runner
         self.kv = kv
+        # multi-step decode: up to this many decode iterations per
+        # jitted dispatch (lax.scan in runner.decode_multi); 1 = the
+        # historical one-dispatch-per-token loop.  Streams are
+        # bit-identical across horizons (in-graph EOS/stop masking)
+        self.decode_horizon = decode_horizon
+        # deferred multi-step dispatch: device-side results of the last
+        # decode_multi whose host fetch was postponed so it overlaps
+        # the NEXT dispatch's compute (issue-ahead chaining)
+        self._pending: dict | None = None
         self.eos = eos_id
         self.rng = jax.random.PRNGKey(seed)
         self.overflow_policy = overflow_policy
@@ -254,6 +267,9 @@ class Scheduler:
             raise ForkError(
                 f"fork needs {n} free slots, {self.kv.n_free} available "
                 f"— cancel a stream or raise batch_slots")
+        # fork clones host-side per-slot state (next_tok, positions,
+        # out_tokens): apply any in-flight multi-step dispatch first
+        self._flush_pending()
         ps = parent._slot
         out = []
         self._ensure_window()
@@ -292,13 +308,20 @@ class Scheduler:
         return out
 
     def step(self) -> bool:
-        """ONE engine iteration: sweep, admit (+preempt), at most one
-        prefill chunk, one batched decode dispatch.  Returns True while
+        """ONE engine iteration: sweep, admit (+preempt), up to
+        ``decode_horizon`` prefill chunks (cadence-matched to the k
+        decode tokens the iteration advances), one batched decode
+        dispatch.  Returns True while
         work remains (queued or live streams); on the transition to
         idle, finalizes ``last_stats`` and returns False."""
         if self._win is None:
             return False
         w = self._win
+        # 0. deferred multi-step dispatch from the previous iteration:
+        #    when eligible, issue the NEXT dispatch from its device-side
+        #    carries FIRST (so its compute overlaps the host fetch),
+        #    then fetch + replay the pending one's tokens
+        piped = self._service_pending(w)
         # 1. sweep: release finished streams (beam members are finalized
         #    eagerly by their group at emission time, never swept)
         for s in range(self.kv.slots):
@@ -320,11 +343,25 @@ class Scheduler:
                     "fits_empty_pool should have rejected the head")
             self._finalize_window()
             return False
-        # 3. at most ONE prefill chunk per iteration (chunk budget)
-        did_prefill = self._prefill_one(w)
+        # 3. prefill chunk budget: up to ``decode_horizon`` chunks per
+        #    iteration.  One iteration advances decoding by k tokens,
+        #    so the chunk budget scales with k to keep the
+        #    prefill:decode progress ratio at its horizon-1 value —
+        #    otherwise a long chunked prompt takes k times more decode
+        #    iterations to admit and its stream drains alone at the
+        #    tail, costing more model steps than the windows save
+        did_prefill = False
+        for _ in range(self.decode_horizon):
+            if not self._prefill_one(w):
+                break
+            did_prefill = True
         # 4. ONE batched decode dispatch over ALL slots (idle and
-        #    mid-prefill rows ride along masked; see kv_manager doc)
-        self._decode_all(w, did_prefill)
+        #    mid-prefill rows ride along masked; see kv_manager doc).
+        #    Skipped when a chained multi-step dispatch was already
+        #    issued above (chain eligibility implies no prefill/queue
+        #    work this iteration).
+        if not piped:
+            self._decode_all(w, did_prefill)
         return True
 
     def drain(self):
@@ -352,6 +389,7 @@ class Scheduler:
         self.prefill_fifo = []
         self.keys = None
         self._win = None
+        self._pending = None
 
     # ---------------- legacy batch API (compat shim) ----------------
 
@@ -393,6 +431,7 @@ class Scheduler:
                 forks=0, block_waits=0, shared_tokens=0,
                 drafted=0, accepted=0, spec_emitted=0, spec_steps=0,
                 beam_streams=0,
+                itl_samples=[],
                 streams=[])
 
     def _queue_alive(self) -> bool:
@@ -625,6 +664,12 @@ class Scheduler:
         if h.t_first is None:
             h.t_first = now
             h._ttft_s = now - h._t_submit
+        else:
+            # per-emission inter-token gap (ITL percentile source): at
+            # decode_horizon > 1 deliveries are bursty — k near-zero
+            # gaps then one dispatch-wide gap — which the percentiles
+            # expose and the stream-mean itl_ms averages away
+            w["itl_samples"].append(now - h.t_last)
         h.t_last = now
         w["n_tokens"] += 1
         if h.on_token is not None:
@@ -794,9 +839,31 @@ class Scheduler:
             spec = [s for s in spec if s in alive]
             if not plain and not spec:
                 return
+        # multi-step horizon: only when every plain slot's policy rides
+        # it (beam members re-rank on the host after EVERY token, so a
+        # live beam group drops the whole step to per-token dispatch —
+        # the "cleanly bypass" half of the policy contract; spec slots
+        # are not in the plain set and compose via their verify round)
+        k = self.decode_horizon
+        use_multi = (k > 1 and bool(plain)
+                     and all(self.active[s]._beam is None
+                             and self.active[s].params.policy
+                             .supports_horizon for s in plain))
+        if use_multi and self.paged:
+            # the scan writes rows [pos, pos+k): own every block the
+            # horizon window overlaps before dispatch (same pressure
+            # rules as the verify window)
+            self._cow_span(plain, k)
+            alive = set(self._live_slots())
+            plain = [s for s in plain if s in alive]
+            if not plain and not spec:
+                return
         td = time.perf_counter()
         if plain:
-            self._decode_plain(w, plain)
+            if use_multi:
+                self._decode_plain_multi(w, plain, defer=not spec)
+            else:
+                self._decode_plain(w, plain)
         if spec:
             self._spec_round(w, spec)
         w["decode_s"] += time.perf_counter() - td
@@ -846,6 +913,222 @@ class Scheduler:
                     groups.append(g)
             for g in groups:
                 g.step(self, lg, w)
+
+    # ---------------- multi-step decode (decode_horizon > 1) --------
+
+    def _multi_inputs(self, plain: list[int]):
+        """Per-slot masking inputs for one ``decode_multi`` dispatch:
+        the in-graph mirror of ``_finished`` — remaining token budget,
+        the resolved effective eos (-1 when absent or ignored), and the
+        stop-token matrix padded with -1."""
+        slots = self.kv.slots
+        active = np.zeros(slots, bool)
+        budget = np.zeros(slots, np.int32)
+        eos = np.full(slots, -1, np.int32)
+        stops = {}
+        for s in plain:
+            h = self.active[s]
+            p = h.params
+            active[s] = True
+            budget[s] = p.max_new_tokens - len(h.out_tokens)
+            e = self.eos if p.eos_id is None else p.eos_id
+            if not p.ignore_eos and e is not None:
+                eos[s] = e
+            stops[s] = tuple(p.stop_tokens)
+        n_stop = max((len(st) for st in stops.values()), default=0)
+        stop = np.full((slots, n_stop), -1, np.int32)
+        for s, st in stops.items():
+            stop[s, :len(st)] = st
+        keys = (self.keys if self.keys is not None
+                else np.zeros((slots, 2), np.uint32))
+        return active, budget, eos, stop, keys, self.temps.copy()
+
+    def _decode_plain_multi(self, w, plain: list[int], *, defer: bool):
+        """ONE jitted dispatch covering up to ``decode_horizon`` decode
+        iterations (``runner.decode_multi``).  With ``defer`` the
+        device→host token fetch is postponed to the next ``step()`` so
+        it overlaps either the chained next dispatch's compute or the
+        admission/prefill work in between; without it (a spec round
+        follows in this same step) results are applied immediately."""
+        kv, runner = self.kv, self.runner
+        k = self.decode_horizon
+        active, budget, eos, stop, keys, temps = self._multi_inputs(plain)
+        # clamp THIS window to the smallest participant budget (and
+        # cache headroom): control returns to the scheduler exactly
+        # when the first slot frees, so refill happens immediately
+        # instead of the freed lane idling out the rest of a fixed-k
+        # window — occupancy stays as high as horizon 1.  The bound is
+        # a traced while_loop operand: no recompile per window size.
+        k_run = k
+        for s in plain:
+            room = min(int(budget[s]), kv.max_len - 1 - int(kv.pos[s]))
+            k_run = min(k_run, max(1, room))
+        out = runner.decode_multi(
+            k, self.next_tok, kv.caches, kv.pos, keys, temps, active,
+            budget, eos, stop,
+            block_tables=kv.block_tables if self.paged else None,
+            k_eff=k_run)
+        toks, emitted, tok_f, pos_f, keys_f, active_f, budget_f, caches \
+            = out
+        kv.caches = caches
+        self.decode_steps += 1
+        pending = dict(
+            k=k, k_run=k_run, budget0=budget.copy(), plain=list(plain),
+            handles={s: self.active[s] for s in plain},
+            toks=toks, emitted=emitted, tok_f=tok_f, pos_f=pos_f,
+            keys_f=keys_f, active_f=active_f, budget_f=budget_f,
+            temps=temps, eos=eos, stop=stop,
+            pos0=np.asarray(kv.pos, np.int32).copy())
+        if defer:
+            self._pending = pending
+        else:
+            self._collect(pending, w)
+
+    def _collect(self, pending, w):
+        """Fetch one multi-step dispatch's results and replay them on
+        the host exactly as ``k`` per-token steps would have: per
+        emitted token advance next_tok/pos and ``_emit`` (on_token
+        callbacks may cancel mid-replay — later tokens of that stream
+        are discarded), then sync the sampler key chains."""
+        kv = self.kv
+        toks = np.asarray(pending["toks"])
+        emitted = np.asarray(pending["emitted"])
+        for i in range(pending["k"]):
+            for s in pending["plain"]:
+                if not emitted[i, s]:
+                    continue
+                h = pending["handles"][s]
+                if self.active[s] is not h or h.status != "decode":
+                    continue        # cancelled mid-horizon
+                tok = int(toks[i, s])
+                self.next_tok[s] = tok
+                kv.pos[s] += 1
+                self._emit(h, tok)
+        if self.keys is not None:
+            keys_f = np.asarray(pending["keys_f"])
+            for s in pending["plain"]:
+                h = pending["handles"][s]
+                if self.active[s] is h and h.status == "decode" \
+                        and self.temps[s] > 0:
+                    self.keys[s] = keys_f[s]
+
+    def _flush_pending(self):
+        """Complete + apply any deferred multi-step dispatch NOW —
+        called before host-side reads/clones of per-slot decode state
+        (fork) outside the normal step flow."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return
+        td = time.perf_counter()
+        self._collect(pending, self._win)
+        self._win["decode_s"] += time.perf_counter() - td
+
+    def _service_pending(self, w) -> bool:
+        """Step-top handling of a deferred dispatch: when the chain is
+        provably safe, issue the NEXT ``decode_multi`` straight from
+        the pending one's device-side carries (token/pos/key/active/
+        budget never round-trip through the host), THEN block on the
+        pending fetch — the chained dispatch computes while the host
+        replays tokens.  Returns True when a chained dispatch was
+        issued (the step's normal ``_decode_all`` is skipped)."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return False
+        td = time.perf_counter()
+        nxt = self._issue_chain(pending) if self._chain_ok(pending) \
+            else None
+        self._collect(pending, w)
+        if nxt is not None:
+            # exact post-replay positions for the next eligibility and
+            # COW-window checks (the chained dispatch starts here)
+            nxt["pos0"] = np.asarray(self.kv.pos, np.int32).copy()
+            self._pending = nxt
+        w["decode_s"] += time.perf_counter() - td
+        return nxt is not None
+
+    def _chain_ok(self, pending) -> bool:
+        """A chained dispatch may be issued from device carries only
+        when nothing can invalidate it mid-flight: no queued or
+        prefilling work, every live slot is a pending participant
+        (in-graph masking covers eos/budget/ceiling; cancel discards on
+        replay), at least one slot provably has > k tokens left (the
+        dispatch cannot be pure waste), and — paged — every block the
+        2k-row window overlaps is exclusively owned, so no COW or
+        admission can touch in-flight rows."""
+        kv, k = self.kv, pending["k"]
+        if self._queue_alive() or self.prefill_fifo:
+            return False
+        useful = False
+        for s in range(kv.slots):
+            h = self.active[s]
+            if h is None:
+                continue
+            if pending["handles"].get(s) is not h or h.status != "decode":
+                return False    # slot churned or non-participant live
+            p = h.params
+            e = self.eos if p.eos_id is None else p.eos_id
+            pos0 = int(pending["pos0"][s])
+            if (p.max_new_tokens - len(h.out_tokens) > k
+                    and (p.ignore_eos or e is None)
+                    and not p.stop_tokens
+                    and pos0 + 2 * k + 1 < kv.max_len):
+                useful = True
+        if not useful:
+            return False
+        if self.paged:
+            for s in pending["plain"]:
+                if self.active[s] is None:
+                    continue
+                pos0 = int(pending["pos0"][s])
+                b1 = min((pos0 + 2 * k - 1) // kv.block_size,
+                         kv.block_tables.shape[1] - 1)
+                for b in range(pos0 // kv.block_size, b1 + 1):
+                    bid = int(kv.block_tables[s, b])
+                    if bid != 0 and kv.pool.refcount(bid) > 1:
+                        return False
+        return True
+
+    def _issue_chain(self, pending) -> dict:
+        """Dispatch the next horizon window directly from the pending
+        dispatch's device outputs (deferred ``block_until_ready``: the
+        only host-side inputs are the unchanged temps/eos/stop
+        snapshots and the block tables)."""
+        kv, runner = self.kv, self.runner
+        k = pending["k"]
+        # window bound from host-side lower bounds on remaining budget
+        # (issue-time budget minus the pending window, which may not
+        # have emitted in full) — an underestimate only shrinks the
+        # window, never recompiles, and never lets a dispatch outrun a
+        # participant's budget.  Device carries stay un-fetched.
+        budget0 = np.maximum(
+            pending["budget0"] - np.int32(pending["k_run"]), 0)
+        k_next = k
+        for s in pending["plain"]:
+            if self.active[s] is None or int(budget0[s]) <= 0:
+                # provably exhausted: in-graph masking keeps the slot
+                # inert, so it must not clamp the window for the rest
+                continue
+            room = kv.max_len - 1 - (int(pending["pos0"][s])
+                                     + pending["k_run"])
+            k_next = min(k_next, max(1, min(int(budget0[s]), room)))
+        out = runner.decode_multi(
+            k, pending["tok_f"], kv.caches, pending["pos_f"],
+            pending["keys_f"], pending["temps"], pending["active_f"],
+            pending["budget_f"], pending["eos"], pending["stop"],
+            block_tables=kv.block_tables if self.paged else None,
+            k_eff=k_next)
+        toks, emitted, tok_f, pos_f, keys_f, active_f, budget_f, caches \
+            = out
+        kv.caches = caches
+        self.decode_steps += 1
+        return dict(
+            k=k, k_run=k_next, budget0=budget0,
+            plain=list(pending["plain"]),
+            handles=dict(pending["handles"]),
+            toks=toks, emitted=emitted, tok_f=tok_f, pos_f=pos_f,
+            keys_f=keys_f, active_f=active_f, budget_f=budget_f,
+            temps=pending["temps"], eos=pending["eos"],
+            stop=pending["stop"], pos0=None)
 
     # ---------------- speculative decoding ----------------
 
@@ -1051,6 +1334,13 @@ class Scheduler:
         ttfts = [h._ttft_s for h in streams if h._ttft_s is not None]
         itls = [h.itl_s for h in streams if h.itl_s is not None]
         queue_ts = [h.queue_s for h in streams if h.queue_s is not None]
+        # per-emission inter-token gaps (vs itl_ms = mean of per-stream
+        # means): the percentiles expose the bursty delivery shape of
+        # decode_horizon > 1, which the means hide
+        gaps = w["itl_samples"]
+        p50, p95, p99 = ((float(np.percentile(gaps, q) * 1e3)
+                          for q in (50, 95, 99)) if gaps
+                         else (None, None, None))
         decode_tps = ((w["n_tokens"] - w["n_first"]) / w["decode_s"]
                       if w["decode_s"] > 0 else float("inf"))
         self.last_stats_typed = ServeStats(
@@ -1073,6 +1363,7 @@ class Scheduler:
             effective_tokens_per_sec=decode_tps,
             ttft_ms=float(np.mean(ttfts) * 1e3) if ttfts else None,
             itl_ms=float(np.mean(itls) * 1e3) if itls else None,
+            itl_p50_ms=p50, itl_p95_ms=p95, itl_p99_ms=p99,
             # session-API pressure/lifecycle counters
             queue_ms=(float(np.mean(queue_ts) * 1e3)
                       if queue_ts else None),
@@ -1081,6 +1372,12 @@ class Scheduler:
             forks=w["forks"],
             decode_steps=steps,
             dispatches_per_step=dispatches / steps if steps else 0.0,
+            # horizon observability: jitted decode dispatches this
+            # window and decode-phase emissions per dispatch (≈ the
+            # effective horizon; 1.0 at decode_horizon=1)
+            decode_dispatches=dispatches,
+            tokens_per_dispatch=((w["n_tokens"] - w["n_first"])
+                                 / dispatches if dispatches else 0.0),
             prefill_dispatches=(self.runner.prefill_dispatches
                                 - w["pdisp0"]),
             # CUMULATIVE size of the runner's prefill compile cache

@@ -98,12 +98,23 @@ class ServeStats:
     effective_tokens_per_sec: float = 0.0
     ttft_ms: float | None = None
     itl_ms: float | None = None
+    # per-emission inter-token-gap percentiles (itl_ms is the mean of
+    # per-stream means): at decode_horizon > 1 delivery is bursty — k
+    # near-zero gaps then one dispatch-wide gap — which p95/p99 expose
+    itl_p50_ms: float | None = None
+    itl_p95_ms: float | None = None
+    itl_p99_ms: float | None = None
     queue_ms: float | None = None
     preemptions: int = 0
     cancelled: int = 0
     forks: int = 0
     decode_steps: int = 0
     dispatches_per_step: float = 0.0
+    # multi-step decode observability: jitted decode dispatches in the
+    # window, and decode-phase emissions per dispatch (the effective
+    # horizon — 1.0 at decode_horizon=1, approaches k at horizon k)
+    decode_dispatches: int = 0
+    tokens_per_dispatch: float = 0.0
     prefill_dispatches: int = 0
     prefill_compiles: int = 0
     chunk_buckets: tuple = ()

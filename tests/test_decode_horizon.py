@@ -1,0 +1,282 @@
+"""Multi-step decode dispatch (``EngineConfig.decode_horizon``).
+
+The PR-9 tentpole contracts, through the public engine API:
+
+- HORIZON IS INVISIBLE IN THE STREAMS: greedy and seeded-sampled
+  outputs are bit-identical across ``decode_horizon in {1, 4, 8}`` on
+  every (backend, kv_layout) cell — in-graph sampling walks the same
+  per-stream PRNG key chains and in-graph eos/stop/budget/ceiling
+  masking mirrors the host sweep exactly.  A subprocess case extends
+  the matrix to tp {1, 2} (forced host devices).
+- MID-HORIZON TERMINATION IS EXACT: an eos or stop token landing in
+  the middle of a window emits nothing past it; cancel mid-horizon
+  discards the rest of the window on replay; preemption snapshots only
+  at dispatch boundaries and the restored stream stays bit-identical.
+  No slot or block leaks in any of these paths.
+- DISPATCH ACCOUNTING: a lone stream decoding n tokens at horizon k
+  costs exactly ``ceil(n/k)`` decode dispatches, and the scheduler
+  clamps each window to the smallest participant budget so a freed
+  slot returns to the refill loop immediately (no dead iterations).
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config.model_config import QuantConfig
+from repro.config.registry import get_arch
+from repro.configs.tiny import tiny_variant
+from repro.core.quantize_model import quantize_model_sequential
+from repro.models.model import build_model
+from repro.serve.engine import (EngineConfig, SamplingParams,
+                                ServeEngine)
+
+pytestmark = pytest.mark.slow  # module-scoped quantization fixture
+
+VOCAB = 128
+MAX_LEN = 64
+BLOCK = 8
+HORIZONS = (1, 4, 8)
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = tiny_variant(get_arch("llama1-7b")).replace(
+        d_model=64, d_ff=128, n_layers=2, vocab_size=VOCAB,
+        dtype="float32")
+    model = build_model(cfg, kv_chunk=BLOCK)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, VOCAB)
+    qparams = quantize_model_sequential(
+        model, params, calib,
+        QuantConfig(group_size=32, n_outlier_groups=1, em_iters=2,
+                    calib_tokens=256))
+    return model, params, qparams
+
+
+def _engine(model, params, layout="dense", backend="reference", **over):
+    kw = dict(batch_slots=4, max_len=MAX_LEN, chunk_buckets=(8,),
+              kv_layout=layout, backend=backend, block_size=BLOCK,
+              seed=0)
+    kw.update(over)
+    return ServeEngine(model, params, config=EngineConfig(**kw))
+
+
+def _prompts(n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, VOCAB, 4 + 3 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _run(eng, prompts, max_new=12, **sp):
+    hs = [eng.submit(p, SamplingParams(max_new_tokens=max_new, **sp))
+          for p in prompts]
+    return [h.result() for h in hs]
+
+
+class TestHorizonMatrix:
+    """Streams are bit-identical across horizons on every cell: the
+    acceptance oracle of the multi-step dispatch."""
+
+    @pytest.mark.parametrize("backend", ["reference", "quantized"])
+    @pytest.mark.parametrize("layout", ["dense", "paged"])
+    def test_greedy_and_sampled_bit_identical(self, lm, backend, layout):
+        model, params, qparams = lm
+        p = qparams if backend == "quantized" else params
+        refs = {}
+        for k in HORIZONS:
+            eng = _engine(model, p, layout, backend, decode_horizon=k)
+            greedy = _run(eng, _prompts())
+            sampled = _run(eng, _prompts(), temperature=0.8, seed=7)
+            if k == 1:
+                refs = dict(greedy=greedy, sampled=sampled)
+                continue
+            assert greedy == refs["greedy"], (backend, layout, k)
+            assert sampled == refs["sampled"], (backend, layout, k)
+            if layout == "paged":
+                assert eng.kv_stats_typed.blocks_in_use == 0
+
+    _PROG = """
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=2'
+    import jax, numpy as np
+    from repro.config.model_config import QuantConfig
+    from repro.config.registry import get_arch
+    from repro.configs.tiny import tiny_variant
+    from repro.core.quantize_model import quantize_model_sequential
+    from repro.models.model import build_model
+    from repro.serve.engine import (EngineConfig, SamplingParams,
+                                    ServeEngine)
+    VOCAB = 128
+    cfg = tiny_variant(get_arch('llama1-7b')).replace(
+        d_model=64, head_dim=8, n_heads=8, n_kv_heads=8, d_ff=128,
+        n_layers=2, vocab_size=VOCAB, dtype='float32')
+    model = build_model(cfg, kv_chunk=8)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, VOCAB)
+    qparams = quantize_model_sequential(
+        model, params, calib,
+        QuantConfig(group_size=32, n_outlier_groups=1, em_iters=2,
+                    calib_tokens=256))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, VOCAB, 5 + 3 * i).astype(np.int32)
+               for i in range(3)]
+    def run(backend, layout, tp, k):
+        p = qparams if backend == 'quantized' else params
+        eng = ServeEngine(model, p, config=EngineConfig(
+            batch_slots=3, max_len=64, chunk_buckets=(8,),
+            backend=backend, kv_layout=layout, block_size=8, tp=tp,
+            seed=0, decode_horizon=k))
+        return [h.result() for h in
+                [eng.submit(pr, SamplingParams(max_new_tokens=8))
+                 for pr in prompts]]
+    for backend, layout in (('reference', 'dense'),
+                            ('quantized', 'paged')):
+        ref = run(backend, layout, 1, 1)
+        for tp in (1, 2):
+            for k in (1, 4):
+                got = run(backend, layout, tp, k)
+                assert got == ref, (backend, layout, tp, k)
+    print('ALL OK')
+    """
+
+    def test_streams_bit_identical_across_meshes(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath(REPO_SRC)
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(self._PROG)],
+            capture_output=True, text=True, timeout=1500, env=env)
+        assert r.returncode == 0, \
+            f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+        assert "ALL OK" in r.stdout
+
+
+class TestMidHorizonTermination:
+    """eos/stop/cancel/preempt landing inside a window behave exactly
+    as k separate dispatches would."""
+
+    def _ref_tail(self, lm):
+        model, params, _ = lm
+        ref = _run(_engine(model, params), _prompts(1))[0]
+        j = 5                       # mid-window for both k=4 and k=8
+        tok = ref[j]
+        j = ref.index(tok)          # first occurrence terminates
+        return ref, tok, j
+
+    def test_eos_mid_window(self, lm):
+        model, params, _ = lm
+        ref, tok, j = self._ref_tail(lm)
+        outs = []
+        for k in HORIZONS:
+            eng = _engine(model, params, decode_horizon=k)
+            outs.append(_run(eng, _prompts(1), eos_id=int(tok))[0])
+        assert outs[1] == outs[0] and outs[2] == outs[0]
+        got = outs[0]
+        assert len(got) <= j + 1            # nothing emitted past eos
+        assert got == ref[:len(got)]
+
+    def test_stop_token_mid_window(self, lm):
+        model, params, _ = lm
+        ref, tok, j = self._ref_tail(lm)
+        outs = []
+        for k in HORIZONS:
+            eng = _engine(model, params, "paged", decode_horizon=k)
+            outs.append(_run(eng, _prompts(1),
+                             stop_tokens=(int(tok),))[0])
+            assert eng.kv_stats_typed.blocks_in_use == 0
+        assert outs[1] == outs[0] and outs[2] == outs[0]
+        got = outs[0]
+        assert got == ref[:j + 1] and got[-1] == tok    # stop emitted
+
+    def test_cancel_mid_horizon_no_leaks(self, lm):
+        model, params, _ = lm
+        solo = _run(_engine(model, params, "paged", decode_horizon=4),
+                    _prompts(1))[0]
+        eng = _engine(model, params, "paged", decode_horizon=4)
+        victim = eng.submit(_prompts(2)[1],
+                            SamplingParams(max_new_tokens=12))
+        keeper = eng.submit(_prompts(1)[0],
+                            SamplingParams(max_new_tokens=12))
+        for _ in range(500):
+            if len(victim.out_tokens) >= 2:
+                break
+            eng.step()
+        victim.cancel()
+        assert victim.status == "cancelled"
+        assert keeper.result() == solo      # sibling undisturbed
+        eng.drain()
+        assert eng.kv_stats_typed.blocks_in_use == 0
+
+    def test_preempted_stream_restored_bit_identical(self, lm):
+        """Preemption only snapshots at dispatch boundaries; the
+        restored stream is indistinguishable from an unpreempted run
+        at the same horizon."""
+        model, params, _ = lm
+        solo = _run(_engine(model, params, decode_horizon=4),
+                    _prompts(1), max_new=16)[0]
+        eng = _engine(model, params, decode_horizon=4, batch_slots=2)
+        victims = [eng.submit(p, SamplingParams(max_new_tokens=16),
+                              priority=1)
+                   for p in _prompts(2)]
+        for _ in range(500):
+            if all(len(v.out_tokens) >= 2 for v in victims):
+                break
+            eng.step()
+        urgent = eng.submit(_prompts(3)[2],
+                            SamplingParams(max_new_tokens=4), priority=0)
+        eng.drain()
+        assert urgent.status == "done" and len(urgent.result()) == 4
+        assert all(v.status == "done" for v in victims)
+        assert victims[0].out_tokens == solo
+        assert sum(v.preemptions for v in victims) >= 1
+
+
+class TestDispatchAccounting:
+    """decode_dispatches == ceil(tokens/k) for a lone stream, and the
+    scheduler's budget-clamped windows never run dead iterations."""
+
+    @pytest.mark.parametrize("k", HORIZONS)
+    def test_dispatch_count_contract(self, lm, k):
+        model, params, _ = lm
+        eng = _engine(model, params, decode_horizon=k)
+        # max_new = 33: the first new token comes from the prefill
+        # dispatch, leaving exactly 32 decode tokens to account for
+        out = _run(eng, _prompts(1), max_new=33, ignore_eos=True)[0]
+        assert len(out) == 33
+        st = eng.stats()
+        assert st.decode_dispatches == math.ceil(32 / k), st
+        assert st.tokens_per_dispatch == pytest.approx(
+            32 / st.decode_dispatches)
+        if k > 1:
+            # intra-window tokens arrive together: p50 collapses while
+            # the tail percentiles carry the dispatch period
+            assert st.itl_p50_ms is not None \
+                and st.itl_p50_ms <= st.itl_p95_ms <= st.itl_p99_ms
+
+    def test_budget_clamped_windows(self, lm):
+        """Mixed budgets (2, 20) at k=4: after prefill emits each
+        stream's first token the remaining budgets are (1, 19), so the
+        first window clamps to 1, the freed slot returns at the
+        boundary, and the long stream finishes in ceil(18/4) more
+        windows — 6 dispatches total, zero dead iterations."""
+        model, params, _ = lm
+        pa, pb = _prompts(2)
+        ref = _run(_engine(model, params), [pb], max_new=20,
+                   ignore_eos=True)[0]
+        eng = _engine(model, params, decode_horizon=4, batch_slots=2)
+        ha = eng.submit(pa, SamplingParams(max_new_tokens=2,
+                                           ignore_eos=True))
+        hb = eng.submit(pb, SamplingParams(max_new_tokens=20,
+                                           ignore_eos=True))
+        assert len(ha.result()) == 2 and hb.result() == ref
+        assert eng.stats().decode_dispatches == 1 + math.ceil(18 / 4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])

@@ -1,0 +1,195 @@
+"""Fused INT4 quantize-append + flash-decode vs the two-pass path.
+
+The PR-9 second-prong contract: decode touches the KV cache exactly
+once per layer.  The fused entry RTN-quantizes the incoming K/V row
+with the exact ``core.kvquant`` ops the two-pass ``_store`` /
+``_paged_store_rows`` path uses, so the cache it leaves behind is
+BYTE-identical (packed nibbles and (mu, z) scales alike) — asserted
+with ``np.array_equal``, not allclose.  Attention outputs are compared
+to the two-pass kernels with a small tolerance only because the fused
+kernel batches all kv heads into one ``dot_general`` (a different but
+equally valid accumulation association, ~1e-6 ulps at f32).
+
+Covered: append rows at chunk boundaries (last row of a chunk, first
+row of the next), position 0, ragged per-row valid lengths, garbage
+past the valid length, degenerate constant rows (mu == z), paged block
+tables with multiple chunks per block, and the dense ``length``
+bookkeeping."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvquant import kv_quantize
+from repro.kernels.kv4_attention.kernel import (
+    kv4_decode_attention_kernel, kv4_paged_decode_attention_kernel)
+from repro.kernels.kv4_attention.ops import (
+    kv4_decode_attention_fused, kv4_paged_decode_attention_fused)
+from repro.models.attention import (KVCache, _paged_row_index,
+                                    _paged_store_rows, _store)
+
+H, HKV, D = 4, 2, 32
+S_MAX = 32
+BS = 8          # paged block size
+
+
+def _quant(rng, shape):
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    p, mu, z = kv_quantize(x, 4)
+    return p, jnp.concatenate([mu, z], -1)
+
+
+def _dense_cache(rng, b, length=16):
+    kp, ks = _quant(rng, (b, S_MAX, HKV, D))
+    vp, vs = _quant(rng, (b, S_MAX, HKV, D))
+    return KVCache(kp, vp, ks, vs, jnp.asarray(length, jnp.int32))
+
+
+def _new_rows(rng, b, constant=False):
+    q = jnp.asarray(rng.normal(size=(b, H, D)).astype(np.float32))
+    if constant:
+        k_new = jnp.full((b, HKV, D), 0.37, jnp.float32)
+        v_new = jnp.full((b, HKV, D), -1.25, jnp.float32)
+    else:
+        k_new = jnp.asarray(rng.normal(size=(b, HKV, D)).astype(np.float32))
+        v_new = jnp.asarray(rng.normal(size=(b, HKV, D)).astype(np.float32))
+    return q, k_new, v_new
+
+
+def _assert_cache_bytes_equal(got: KVCache, want: KVCache):
+    for name in ("k", "v", "k_scale", "v_scale"):
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        assert np.array_equal(a, b), f"cache leaf {name} differs"
+
+
+class TestDenseFusedAppend:
+    # jitted like the serving path — byte parity of the RTN scales
+    # holds jit-vs-jit (an eager reference drifts by 1 ulp on mu)
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=("s_chunk",))
+    def _two_pass(cache, q, pos, k_new, v_new, s_chunk):
+        c2 = _store(cache, k_new[:, None], v_new[:, None], pos, 4)
+        out = kv4_decode_attention_kernel(
+            q, c2.k, c2.k_scale, c2.v, c2.v_scale, pos + 1,
+            s_chunk=s_chunk)
+        return out, c2
+
+    @pytest.mark.parametrize("pos,constant", [
+        ([7, 8, 15], False),    # chunk-boundary rows: last of chunk 0,
+                                # first of chunk 1, last of chunk 1
+        ([0, 0, 0], False),     # empty caches, first token
+        ([0, 13, 31], False),   # ragged lengths incl. the final row
+        ([5, 9, 21], True),     # degenerate constant rows (mu == z)
+    ])
+    def test_matches_two_pass(self, pos, constant):
+        rng = np.random.default_rng(hash((tuple(pos), constant)) % 2**31)
+        b = len(pos)
+        cache = _dense_cache(rng, b)
+        q, k_new, v_new = _new_rows(rng, b, constant)
+        posv = jnp.asarray(pos, jnp.int32)
+        want, c_want = self._two_pass(cache, q, posv, k_new, v_new, 8)
+        got, c_got = kv4_decode_attention_fused(
+            q, cache, posv, k_new, v_new, s_chunk=8)
+        _assert_cache_bytes_equal(c_got, c_want)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_length_bookkeeping_matches_store(self):
+        rng = np.random.default_rng(0)
+        cache = _dense_cache(rng, 2, length=11)
+        q, k_new, v_new = _new_rows(rng, 2)
+        posv = jnp.asarray([11, 11], jnp.int32)
+        _, c_got = kv4_decode_attention_fused(
+            q, cache, posv, k_new, v_new, s_chunk=8)
+        assert int(c_got.length) == 12
+
+    def test_garbage_past_valid_length_is_inert(self):
+        """Rows >= pos+1 must not affect the output, and the fused
+        append must not disturb them beyond its own row."""
+        rng = np.random.default_rng(42)
+        cache = _dense_cache(rng, 2)
+        q, k_new, v_new = _new_rows(rng, 2)
+        posv = jnp.asarray([6, 17], jnp.int32)
+        out1, _ = kv4_decode_attention_fused(
+            q, cache, posv, k_new, v_new, s_chunk=8)
+        trashed = cache._replace(
+            k=cache.k.at[0, 20:].set(127),
+            v_scale=cache.v_scale.at[1, 25:].set(99.0))
+        out2, _ = kv4_decode_attention_fused(
+            q, trashed, posv, k_new, v_new, s_chunk=8)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)
+
+
+class TestPagedFusedAppend:
+    NB = 8      # pool blocks excl. the null block
+    NBT = 4     # logical blocks per slot
+
+    def _pool_cache(self, rng, ):
+        kp, ks = _quant(rng, (self.NB + 1, BS, HKV, D))
+        vp, vs = _quant(rng, (self.NB + 1, BS, HKV, D))
+        return KVCache(kp, vp, ks, vs, jnp.zeros((), jnp.int32))
+
+    def _tables(self):
+        # non-trivial mapping, distinct owned blocks, null tails
+        return jnp.asarray([[3, 1, 7, 0],
+                            [5, 2, 0, 0]], jnp.int32)
+
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=("s_chunk",))
+    def _two_pass(cache, q, bt, pos, k_new, v_new, s_chunk):
+        dst = _paged_row_index(bt, pos, BS)
+        c2 = _paged_store_rows(cache, k_new, v_new, dst, 4)
+        out = kv4_paged_decode_attention_kernel(
+            q, c2.k, c2.k_scale, c2.v, c2.v_scale, pos + 1, bt,
+            s_chunk=s_chunk)
+        return out, c2
+
+    @pytest.mark.parametrize("s_chunk", [8, 4])   # 1 and 2 chunks/block
+    @pytest.mark.parametrize("pos", [
+        [7, 12],    # append at the last row of a block / mid-block
+        [8, 15],    # first row of logical block 1 / last of block 1
+        [0, 1],     # (nearly) empty streams
+    ])
+    def test_matches_two_pass(self, pos, s_chunk):
+        rng = np.random.default_rng(7)
+        cache = self._pool_cache(rng)
+        bt = self._tables()
+        q, k_new, v_new = _new_rows(rng, 2)
+        posv = jnp.asarray(pos, jnp.int32)
+        want, c_want = self._two_pass(cache, q, bt, posv, k_new, v_new,
+                                      s_chunk)
+        got, c_got = kv4_paged_decode_attention_fused(
+            q, cache, posv, bt, k_new, v_new, s_chunk=s_chunk)
+        _assert_cache_bytes_equal(c_got, c_want)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        assert int(c_got.length) == 0   # paged length stays derived
+
+    def test_unowned_blocks_untouched(self):
+        """The fused append writes exactly one pool row: every block
+        the slots do not own keeps its previous bytes (the COW safety
+        contract — a shared block can never be scribbled on)."""
+        rng = np.random.default_rng(11)
+        cache = self._pool_cache(rng)
+        bt = self._tables()
+        q, k_new, v_new = _new_rows(rng, 2)
+        posv = jnp.asarray([7, 12], jnp.int32)
+        _, c_got = kv4_paged_decode_attention_fused(
+            q, cache, posv, bt, k_new, v_new, s_chunk=8)
+        # append rows: slot 0 pos 7 -> bt[0, 0] = 3; slot 1 pos 12 ->
+        # logical block 1 -> bt[1, 1] = 2
+        owned = {3, 2}
+        for blk in range(self.NB + 1):
+            if blk in owned:
+                continue
+            for name in ("k", "v", "k_scale", "v_scale"):
+                a = np.asarray(getattr(c_got, name)[blk])
+                b = np.asarray(getattr(cache, name)[blk])
+                assert np.array_equal(a, b), (blk, name)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-x", "-q"])
