@@ -386,6 +386,99 @@ def _session_smoke(model, qparams, vocab, block_size: int) -> dict:
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
 
+def _sanitize_smoke(model, qparams, vocab, block_size: int) -> dict:
+    """CI sanitized-serve cell (``--sanitize``): a dedicated engine
+    with ``EngineConfig(sanitize=True)`` — refcount shadow ledger,
+    recompile sentry, donation guard, NaN tripwire all live.
+
+    Each serving window runs the same mixed traffic (both prefill
+    buckets, long prompts, shared prefixes) PLUS a fork whose divergent
+    write exercises the copy-on-write block copy — the one jit entry
+    plain drain-style traffic never touches (prefix sharing only
+    registers FULL blocks, so shared-prefix streams alone never
+    diverge inside a block).  The first window is the warmup: every
+    entry compiles there, and closing it arms the recompile sentry.
+    The armed repeats then prove the acceptance contract at runtime:
+    ZERO compiles after warmup while still dispatching COW copies (a
+    cache miss would hard-error in the sentry), a fully drained block
+    pool at every window close (a leak would hard-error in the
+    auditor), streams bit-identical to an unsanitized engine, and
+    ``sanitizer_checks_passed`` > 0 in the artifact record as evidence
+    the auditors actually ran."""
+
+    def drive(eng, seed):
+        """One serving window: 2 short streams + a fork of one of them
+        (shares the partial tail block -> COW on the next write), then
+        the full mixed-traffic request set queued behind them."""
+        reqs = _requests(8, vocab, 32, seed=seed, long_every=4,
+                         long_len=100, shared_prefix=40)
+        lead = [eng.submit(r.prompt,
+                           SamplingParams(max_new_tokens=r.max_new_tokens))
+                for r in reqs[:2]]
+        while not any(h.status == "decode" and h.out_tokens
+                      for h in lead):
+            eng.step()
+        donor = next(h for h in lead
+                     if h.status == "decode" and h.out_tokens)
+        forked, = donor.fork(1)
+        rest = [eng.submit(r.prompt,
+                           SamplingParams(max_new_tokens=r.max_new_tokens))
+                for r in reqs[2:]]
+        eng.drain()
+        # a greedy fork with inherited params reproduces its donor
+        assert forked.out_tokens == donor.out_tokens
+        assert eng.kv.pool.stats()["cow_copies"] > 0
+        return [h.out_tokens for h in lead + rest + [forked]]
+
+    eng = ServeEngine(model, qparams, config=EngineConfig(
+        batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+        kv_layout="paged", block_size=block_size, sanitize=True))
+    plain = ServeEngine(model, qparams, config=EngineConfig(
+        batch_slots=4, max_len=128, chunk_buckets=(8, 32),
+        kv_layout="paged", block_size=block_size))
+    # warmup window: compiles everything, then arms the sentry at close
+    warm = drive(eng, seed=123)
+    assert eng.sanitizer.armed, "sentry must arm at the first idle"
+    warm_compiles = dict(eng.sanitizer.compiles)
+    assert warm_compiles.get("copy_block"), \
+        f"warmup never compiled the COW copy — sentry trap: {warm_compiles}"
+    assert drive(plain, seed=123) == warm, \
+        "sanitize=True perturbed greedy streams"
+    for seed in (0, 1):     # armed repeats: any cache miss raises
+        done = drive(eng, seed)
+        assert drive(plain, seed) == done, \
+            "sanitize=True perturbed greedy streams"
+        assert eng.sanitizer.compiles == warm_compiles, \
+            (eng.sanitizer.compiles, warm_compiles)
+        assert eng.kv_stats["blocks_in_use"] == 0
+        assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
+    st = eng.last_stats
+    assert st["sanitizer_checks_passed"] > 0, st
+    print(f"  serve-smoke[sanitized] OK: {eng.sanitizer.windows_closed} "
+          f"windows, {st['sanitizer_checks_passed']} checks passed, "
+          f"0 recompiles after warmup "
+          f"({sum(warm_compiles.values())} warmup compiles over "
+          f"{len(warm_compiles)} jit entries), pool drained at every "
+          f"close, streams bit-identical to the unsanitized engine")
+    return {"variant": "tiny-smoke/sanitized", "backend": "reference",
+            "kv_layout": "paged", "gate": None, **st,
+            "warmup_compiles": warm_compiles,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+
+
+def sanitize_smoke(block_size: int = 16) -> dict:
+    """Standalone sanitized-serve run (``--sanitize`` without
+    ``--tiny``): the CI static-analysis lane's runtime half — just the
+    quantized tiny setup + the sanitized cell, no perf gating, record
+    written to its own artifact."""
+    cfg, model, qparams = _tiny_quantized_setup(block_size)
+    rec = _sanitize_smoke(model, qparams, cfg.vocab_size, block_size)
+    _write([rec], path=os.path.join(_ROOT, "experiments", "serve",
+                                    "sanitize.json"),
+           extra={"block_size": block_size})
+    return rec
+
+
 def _policy_smoke(model, qparams, vocab, block_size: int,
                   draft: str = "tiny", k: int = 3) -> dict:
     """CI speculative-decoding cell: every stream decoded via
@@ -484,7 +577,8 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
                update_baseline: bool = False, block_size: int = 16,
                kernel_interpret=None, policy: str = "greedy",
                draft: str = "tiny", spec_k: int = 3,
-               decode_horizon: int = 1, profile: bool = False) -> dict:
+               decode_horizon: int = 1, profile: bool = False,
+               sanitize: bool = False) -> dict:
     """CI serve-smoke lane: seconds-scale run of BOTH backends x BOTH
     KV layouts over the same quantized weights, asserting the serving
     invariants (module docstring), greedy-stream parity across every
@@ -609,6 +703,13 @@ def tiny_smoke(baseline_path: str = BASELINE_PATH,
     # (not perf-gated; the record rides along in the artifact)
     records.append(_session_smoke(model, qparams, cfg.vocab_size,
                                   block_size))
+    if sanitize:
+        # sanitized-serve cell (--sanitize): its own engine, NOT the
+        # gate cells — their warmup traffic has no shared prefixes, so
+        # the COW block copy would first compile mid-measurement and
+        # falsely trip the armed recompile sentry
+        records.append(_sanitize_smoke(model, qparams, cfg.vocab_size,
+                                       block_size))
     if policy == "speculative":
         # speculative decode cell (--policy speculative): parity + the
         # draft economics ride in the artifact, never speed-gated
@@ -837,6 +938,15 @@ if __name__ == "__main__":
                     help="--tiny only: wrap the gated decode "
                          "measurement in jax.profiler.trace and record "
                          "the trace dir in the artifact")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the sanitized-serve cell "
+                         "(EngineConfig(sanitize=True) — recompile "
+                         "sentry, refcount audits, donation guard, NaN "
+                         "tripwire; asserts zero recompiles after "
+                         "warmup and a drained pool, docs/analysis.md). "
+                         "With --tiny it rides as an extra cell; alone "
+                         "it runs standalone (the CI static-analysis "
+                         "lane)")
     args = ap.parse_args()
     interp = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
     if args.sweep:
@@ -851,7 +961,11 @@ if __name__ == "__main__":
                    policy=args.policy, draft=args.draft,
                    spec_k=args.spec_k,
                    decode_horizon=args.decode_horizon,
-                   profile=args.profile)
+                   profile=args.profile, sanitize=args.sanitize)
+    elif args.sanitize:
+        # standalone sanitized cell (the CI static-analysis lane):
+        # runtime auditors live, no perf gate
+        sanitize_smoke(block_size=args.block_size)
     else:
         run(quick=args.quick, block_size=args.block_size,
             kernel_interpret=interp, decode_horizon=args.decode_horizon)

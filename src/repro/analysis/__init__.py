@@ -1,0 +1,23 @@
+"""Contract linter + runtime sanitizer for the serving stack.
+
+Static half (``python -m repro.analysis``): an AST-based linter whose
+rules encode the whole-repo contracts the codebase states in prose —
+the PR-2 "ONLY jit layer" boundary, the device-aware Pallas interpret
+protocol, trace purity of jitted bodies, the PR-6 hardcoded-dtype bug
+class, and pytree registration of jit-crossing dataclasses.  See
+``docs/analysis.md`` for the rule catalog and noqa policy.
+
+Runtime half (``EngineConfig(sanitize=True)``): ``EngineSanitizer``
+instruments the live engine with a block-pool refcount auditor, a
+recompile sentry (jit cache miss after warmup is a hard error), a
+donation-after-use guard on donated cache carries, and a NaN/Inf
+tripwire on logits (``src/repro/analysis/sanitizer.py``).
+"""
+from repro.analysis.findings import Finding, load_baseline, save_baseline
+from repro.analysis.linter import lint_paths, lint_sources
+from repro.analysis.rules import RULES
+from repro.analysis.sanitizer import EngineSanitizer, SanitizerError
+
+__all__ = ["Finding", "RULES", "lint_paths", "lint_sources",
+           "load_baseline", "save_baseline",
+           "EngineSanitizer", "SanitizerError"]

@@ -1,0 +1,81 @@
+"""CLI: ``python -m repro.analysis`` — exit 0 iff the tree is clean.
+
+    PYTHONPATH=src python -m repro.analysis [paths ...]
+        [--diff [REF]] [--json] [--baseline FILE] [--write-baseline]
+        [--list-rules]
+
+Non-baselined, non-noqa'd findings print one per line (or as a JSON
+record with ``--json``) and exit 1 — the CI static-analysis lane runs
+exactly this.  ``--diff`` scopes the run to files changed vs a git ref
+(default HEAD) for fast pre-push checks; ``--write-baseline`` records
+the current findings as the new baseline instead of failing (a
+migration tool — the committed baseline stays empty on a clean tree).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.findings import save_baseline
+from repro.analysis.linter import (DEFAULT_SCAN, default_baseline_path,
+                                   lint_paths, repo_root)
+from repro.analysis.rules import RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-contract linter (docs/analysis.md)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help=f"scan roots relative to the repo root "
+                         f"(default: {' '.join(DEFAULT_SCAN)})")
+    ap.add_argument("--diff", nargs="?", const="HEAD", default=None,
+                    metavar="REF",
+                    help="lint only files changed vs REF (default HEAD)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="baseline fingerprint file (default: "
+                         "analysis-baseline.json at the repo root)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current findings as the baseline "
+                         "instead of failing on them")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, fn in RULES.items():
+            doc = (fn.__doc__ or "").strip().splitlines()
+            print(f"{name:22s} {doc[0] if doc else ''}")
+        return 0
+
+    root = repo_root()
+    baseline_path = args.baseline or default_baseline_path(root)
+    findings = lint_paths(
+        root, paths=tuple(args.paths) or None,
+        baseline=set() if args.write_baseline else baseline_path,
+        diff_ref=args.diff)
+
+    if args.write_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} fingerprint(s) to {baseline_path}")
+        return 0
+
+    if args.json:
+        print(json.dumps({
+            "tool": "repro.analysis",
+            "rules": sorted(RULES),
+            "count": len(findings),
+            "findings": [f.as_dict() for f in findings]}, indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        scope = f"--diff {args.diff}" if args.diff else "full tree"
+        print(f"repro.analysis: {len(findings)} finding(s) [{scope}, "
+              f"{len(RULES)} rules]")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Finding records, inline noqa suppressions, and the baseline file.
+
+A ``Finding`` is one rule violation at one source line.  Suppression
+has two layers:
+
+- **inline noqa** — ``# repro: noqa(<rule>): <reason>`` on the finding
+  line or the line directly above it.  The reason string is REQUIRED:
+  a bare noqa without the ``: <reason>`` tail is itself reported (rule
+  ``noqa-reason``), so every suppression in the tree documents why the
+  contract does not apply.  Unknown rule names are reported too
+  (``noqa-unknown``) — a typo must not silently disable nothing.
+- **baseline file** — a checked-in JSON list of finding fingerprints
+  (``--write-baseline`` emits it) for staging a new rule onto a tree
+  with pre-existing violations.  Fingerprints hash the rule, the file,
+  and the normalized source line — NOT the line number — so unrelated
+  edits above a baselined finding do not un-suppress it.  The tree
+  ships with an EMPTY baseline; it exists as a migration tool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+
+# the ``repro: noqa(<rule>)`` marker, with an optional ``: reason`` tail
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa\(\s*(?P<rule>[\w-]+)\s*\)\s*(?::\s*(?P<reason>.+))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: ``path`` is repo-relative posix."""
+
+    rule: str
+    path: str
+    line: int           # 1-based
+    message: str
+    source: str = ""    # the offending source line, stripped
+
+    def fingerprint(self) -> str:
+        """Line-number-independent identity for the baseline file."""
+        key = f"{self.rule}|{self.path}|{' '.join(self.source.split())}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint()
+        return d
+
+
+def parse_noqa(source: str) -> dict[int, tuple[str, str | None]]:
+    """Map line number -> (rule, reason) for every inline noqa comment."""
+    out: dict[int, tuple[str, str | None]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = NOQA_RE.search(text)
+        if m:
+            reason = m.group("reason")
+            out[i] = (m.group("rule"),
+                      reason.strip() if reason else None)
+    return out
+
+
+def apply_noqa(findings: list[Finding], source: str, path: str,
+               known_rules: set[str]) -> list[Finding]:
+    """Drop findings suppressed by a same-line or preceding-line noqa;
+    add findings for malformed suppressions (missing reason / unknown
+    rule) and for suppressions that suppress nothing (stale noqa)."""
+    noqa = parse_noqa(source)
+    lines = source.splitlines()
+    out = []
+    used: set[int] = set()
+    for f in findings:
+        hit = None
+        for ln in (f.line, f.line - 1):
+            if ln in noqa and noqa[ln][0] == f.rule:
+                hit = ln
+                break
+        if hit is None:
+            out.append(f)
+            continue
+        used.add(hit)
+        if noqa[hit][1] is None:
+            out.append(Finding(
+                "noqa-reason", path, hit,
+                f"noqa({f.rule}) needs a reason: "
+                f"'# repro: noqa({f.rule}): <why>'",
+                source=lines[hit - 1].strip()))
+    for ln, (rule, reason) in sorted(noqa.items()):
+        if rule not in known_rules:
+            out.append(Finding(
+                "noqa-unknown", path, ln,
+                f"noqa references unknown rule {rule!r} "
+                f"(known: {', '.join(sorted(known_rules))})",
+                source=lines[ln - 1].strip()))
+        elif ln not in used and reason is None:
+            # a bare noqa that ALSO suppresses nothing: still malformed
+            out.append(Finding(
+                "noqa-reason", path, ln,
+                f"noqa({rule}) needs a reason: "
+                f"'# repro: noqa({rule}): <why>'",
+                source=lines[ln - 1].strip()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baseline file
+# ---------------------------------------------------------------------------
+
+def load_baseline(path) -> set[str]:
+    """Fingerprint set from a baseline JSON (empty set when absent)."""
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return set()
+    return set(data.get("fingerprints", []))
+
+def save_baseline(path, findings: list[Finding]) -> None:
+    fps = sorted({f.fingerprint() for f in findings})
+    with open(path, "w") as fh:
+        json.dump({"version": 1, "fingerprints": fps}, fh, indent=1)
+        fh.write("\n")
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: set[str]) -> list[Finding]:
+    return [f for f in findings if f.fingerprint() not in baseline]

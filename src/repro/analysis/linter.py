@@ -1,0 +1,128 @@
+"""Linter orchestration: file discovery, rule dispatch, suppression.
+
+``lint_paths`` is the programmatic entry (the CLI in ``__main__.py``
+and ``tests/test_analysis.py`` both call it); ``lint_sources`` lints
+in-memory sources for fixture tests.  Findings flow through two
+suppression layers (inline noqa, then the baseline fingerprints) —
+see ``findings.py``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import subprocess
+
+from repro.analysis.findings import (Finding, apply_baseline, apply_noqa,
+                                     load_baseline)
+from repro.analysis.rules import ALL_RULE_NAMES, RULES
+
+# default scan roots, relative to the repo root
+DEFAULT_SCAN = ("src/repro", "benchmarks", "examples")
+
+# the checked-in baseline (EMPTY on a clean tree — it is a migration
+# tool for staging new rules, not a parking lot for violations)
+BASELINE_NAME = "analysis-baseline.json"
+
+
+def repo_root() -> str:
+    """The repository root: three levels above this package."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def default_baseline_path(root: str | None = None) -> str:
+    return os.path.join(root or repo_root(), BASELINE_NAME)
+
+
+def discover(root: str, paths=DEFAULT_SCAN) -> list[str]:
+    """Repo-relative posix paths of every .py file under ``paths``."""
+    out = []
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full) and p.endswith(".py"):
+            out.append(p.replace(os.sep, "/"))
+            continue
+        for dirpath, _dirnames, filenames in os.walk(full):
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    rel = os.path.relpath(os.path.join(dirpath, name),
+                                          root)
+                    out.append(rel.replace(os.sep, "/"))
+    return sorted(set(out))
+
+
+def changed_files(root: str, ref: str = "HEAD") -> list[str]:
+    """Changed .py files vs ``ref`` (staged + unstaged + committed
+    deltas), for ``--diff`` scoping."""
+    files: set[str] = set()
+    for cmd in (["git", "diff", "--name-only", ref],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        res = subprocess.run(cmd, cwd=root, capture_output=True,
+                             text=True, check=False)
+        if res.returncode == 0:
+            files.update(ln.strip() for ln in res.stdout.splitlines()
+                         if ln.strip())
+    return sorted(f for f in files if f.endswith(".py"))
+
+
+def lint_sources(sources: dict[str, str], rules=None) -> list[Finding]:
+    """Lint ``{repo-relative-path: source}`` pairs.  Inline noqa is
+    honored; the baseline is NOT applied (callers do that)."""
+    rules = rules if rules is not None else RULES
+    findings: list[Finding] = []
+    for path, source in sorted(sources.items()):
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "syntax", path, e.lineno or 1,
+                f"file does not parse: {e.msg}"))
+            continue
+        per_file: list[Finding] = []
+        for rule_fn in rules.values():
+            per_file.extend(rule_fn(path, source, tree))
+        # nested traced scopes can be visited from two walks — one
+        # report per (rule, line, message)
+        seen: set[tuple] = set()
+        deduped = []
+        for f in sorted(per_file, key=lambda f: (f.line, f.rule)):
+            key = (f.rule, f.line, f.message)
+            if key not in seen:
+                seen.add(key)
+                deduped.append(f)
+        findings.extend(apply_noqa(deduped, source, path,
+                                   ALL_RULE_NAMES))
+    return findings
+
+
+def lint_paths(root: str | None = None, paths=None, *,
+               baseline: set[str] | str | None = None,
+               diff_ref: str | None = None,
+               changed: list[str] | None = None,
+               rules=None) -> list[Finding]:
+    """Lint the tree under ``root``.
+
+    ``paths``     — scan roots (default ``DEFAULT_SCAN``).
+    ``baseline``  — fingerprint set, or a path to load, or None for
+                    the checked-in default.
+    ``diff_ref``  — restrict to files changed vs this git ref.
+    ``changed``   — explicit changed-file list (tests inject this
+                    instead of running git).
+    """
+    root = root or repo_root()
+    files = discover(root, paths or DEFAULT_SCAN)
+    if changed is None and diff_ref is not None:
+        changed = changed_files(root, diff_ref)
+    if changed is not None:
+        keep = {c.replace(os.sep, "/") for c in changed}
+        files = [f for f in files if f in keep]
+    sources = {}
+    for f in files:
+        with open(os.path.join(root, f), encoding="utf-8") as fh:
+            sources[f] = fh.read()
+    findings = lint_sources(sources, rules=rules)
+    if baseline is None:
+        baseline = load_baseline(default_baseline_path(root))
+    elif isinstance(baseline, (str, os.PathLike)):
+        baseline = load_baseline(baseline)
+    return apply_baseline(findings, baseline)

@@ -1,0 +1,475 @@
+"""The lint rules: each encodes one whole-repo serving contract.
+
+Every rule is a function ``(path, source, tree) -> list[Finding]``
+where ``path`` is the repo-relative posix path, ``source`` the file
+text, and ``tree`` its parsed ``ast`` module.  Rules are registered in
+``RULES``; ``docs/analysis.md`` is the prose catalog.
+
+- **jit-boundary**     ``jax.jit`` / ``shard_map`` only in
+  ``serve/runner.py`` and the whitelisted launch/bench/kernel entries
+  (the PR-2 "ONLY jit layer" contract).
+- **kernel-interpret** every Pallas kernel entry accepts
+  ``interpret: bool | None = None`` and routes through
+  ``kernels/dispatch.resolve_interpret``; no ``interpret=True/False``
+  literals anywhere in library code.
+- **trace-purity**     no host RNG / ``time.*`` / ``print`` / global
+  mutation inside traced bodies (jit arguments, kernel bodies, the
+  model's decode/prefill/verify steps), except the registered
+  trace-time dispatch counters.
+- **dtype-hazard**     no hardcoded float-dtype literals on cache/state
+  initializers or as ``dtype=`` parameter defaults (the PR-6
+  kv_bits=16 bug class), and no ``np.*`` calls inside traced bodies.
+- **pytree-registration** dataclasses in jit-adjacent packages must be
+  ``frozen=True`` static configs or registered pytrees.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node) -> str | None:
+    """'jax.jit' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _line(source_lines: list[str], lineno: int) -> str:
+    if 1 <= lineno <= len(source_lines):
+        return source_lines[lineno - 1].strip()
+    return ""
+
+
+def _calls(tree) -> list[ast.Call]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.Call)]
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """jax.jit(...), jit(...), functools.partial(jax.jit, ...)."""
+    name = _dotted(call.func)
+    if name in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return _dotted(call.args[0]) in ("jax.jit", "jit", "pjit",
+                                         "jax.pjit")
+    return False
+
+
+def _is_shard_map(call: ast.Call) -> bool:
+    name = _dotted(call.func)
+    return name is not None and name.split(".")[-1] == "shard_map"
+
+
+# Names that identify a decorator list as jit-ing the function
+def _decorated_jit(fn) -> bool:
+    return any(isinstance(d, ast.Call) and _is_jit_call(d)
+               or _dotted(d) in ("jax.jit", "jit")
+               for d in fn.decorator_list)
+
+
+# ---------------------------------------------------------------------------
+# traced-scope detection (shared by trace-purity and dtype-hazard)
+# ---------------------------------------------------------------------------
+
+# model methods that are (or are wrapped into) jitted serving bodies
+TRACED_METHOD_NAMES = {
+    "decode_step", "prefill", "prefill_chunk", "verify_step",
+}
+
+# trace-time observability counters the purity rule permits: their
+# python bodies run ONLY while a jitted fn is being traced, by design
+# (core/packed_linear.py, distributed/tp.py)
+TRACE_COUNTER_WHITELIST = {
+    "_bump", "_bump_comms", "kernel_trace_counts", "comms_trace_counts",
+    "reset_kernel_trace_counts", "reset_comms_trace_counts",
+}
+
+
+def _traced_functions(path: str, tree) -> list:
+    """Function/Lambda nodes whose bodies execute under a jax trace:
+
+    - every def in ``kernels/*/kernel.py`` and ``kernels/*/ops.py``
+      (Pallas kernel bodies + their jit-decorated entries);
+    - defs/lambdas decorated with ``@jax.jit`` (or a partial of it);
+    - defs/lambdas passed — possibly through nested calls like
+      ``jax.jit(self._traced(fn, ...))`` — to a ``jax.jit`` /
+      ``shard_map`` call in the same file;
+    - methods named like the model's traced serving steps
+      (``decode_step`` / ``prefill_chunk`` / ...).
+    """
+    fns: list = []
+    is_kernel_file = "/kernels/" in path and path.endswith(
+        ("kernel.py", "ops.py"))
+    # name-based matching only applies in models/: that is where the
+    # traced serving-step bodies live.  Same-named HOST dispatchers
+    # (runner.prefill_chunk, DraftSubstrate.prefill) are wrappers that
+    # prepare inputs and call the jitted fn — not traced scopes.
+    is_model_file = path.startswith("src/repro/models/")
+    # name -> def nodes, for resolving names passed into jit calls
+    by_name: dict[str, list] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+            if is_kernel_file \
+                    or (is_model_file
+                        and node.name in TRACED_METHOD_NAMES) \
+                    or _decorated_jit(node):
+                fns.append(node)
+        elif isinstance(node, ast.Assign):
+            # lambdas assigned to a name (possibly behind a ternary,
+            # e.g. runner's ``decode_fn = (lambda ...) if paged else``)
+            lambdas = [n for n in ast.walk(node.value)
+                       if isinstance(n, ast.Lambda)]
+            for t in node.targets:
+                if isinstance(t, ast.Name) and lambdas:
+                    by_name.setdefault(t.id, []).extend(lambdas)
+    for call in _calls(tree):
+        if not (_is_jit_call(call) or _is_shard_map(call)):
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Lambda):
+                    fns.append(sub)
+                elif isinstance(sub, ast.Name) and sub.id in by_name:
+                    fns.extend(by_name[sub.id])
+    # de-dup by identity, keep nested defs of traced fns traced too
+    seen: set[int] = set()
+    out = []
+    for fn in fns:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and id(node) not in seen:
+                seen.add(id(node))
+                out.append(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: jit-boundary
+# ---------------------------------------------------------------------------
+
+# the ONLY places allowed to call jax.jit / shard_map (PR-2 contract):
+# the serving runner, kernel modules (jit-decorated Pallas entries),
+# launch/bench/example/test entry points, and the two historical
+# training/quantization jit sites
+JIT_ALLOWED_PREFIXES = (
+    "src/repro/serve/runner.py",
+    "src/repro/kernels/",
+    "src/repro/launch/",
+    "benchmarks/",
+    "examples/",
+    "tests/",
+)
+JIT_ALLOWED_FILES = (
+    "src/repro/train/trainer.py",
+    "src/repro/core/gptq.py",
+    "src/repro/distributed/pipeline.py",
+)
+
+
+def rule_jit_boundary(path: str, source: str, tree) -> list[Finding]:
+    if path.startswith(JIT_ALLOWED_PREFIXES) or path in JIT_ALLOWED_FILES:
+        return []
+    lines = source.splitlines()
+    out = []
+    for call in _calls(tree):
+        if _is_jit_call(call) or _is_shard_map(call):
+            what = _dotted(call.func) or "jit"
+            out.append(Finding(
+                "jit-boundary", path, call.lineno,
+                f"{what}() outside the jit boundary — serve/runner.py "
+                f"is the ONLY serving jit layer (route through "
+                f"ModelRunner, or whitelist a new entry point in "
+                f"repro/analysis/rules.py with a rationale)",
+                source=_line(lines, call.lineno)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: kernel-interpret
+# ---------------------------------------------------------------------------
+
+def rule_kernel_interpret(path: str, source: str, tree) -> list[Finding]:
+    lines = source.splitlines()
+    out = []
+    in_kernels = path.startswith("src/repro/kernels/") \
+        and not path.endswith("dispatch.py")
+    if in_kernels:
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            has_pallas = any(
+                (_dotted(c.func) or "").split(".")[-1] == "pallas_call"
+                for c in _calls(fn))
+            if not has_pallas:
+                continue
+            args = fn.args
+            named = {a.arg for a in args.args + args.kwonlyargs}
+            defaults = dict(zip(
+                [a.arg for a in args.args[len(args.args)
+                                          - len(args.defaults):]],
+                args.defaults))
+            defaults.update({a.arg: d for a, d in
+                             zip(args.kwonlyargs, args.kw_defaults)
+                             if d is not None})
+            if "interpret" not in named:
+                out.append(Finding(
+                    "kernel-interpret", path, fn.lineno,
+                    f"Pallas entry {fn.name}() must accept "
+                    f"'interpret: bool | None = None' (device-aware "
+                    f"dispatch contract, kernels/dispatch.py)",
+                    source=_line(lines, fn.lineno)))
+                continue
+            d = defaults.get("interpret")
+            if not (isinstance(d, ast.Constant) and d.value is None):
+                out.append(Finding(
+                    "kernel-interpret", path, fn.lineno,
+                    f"Pallas entry {fn.name}(): 'interpret' must "
+                    f"default to None (auto-resolve), not a hardcoded "
+                    f"mode",
+                    source=_line(lines, fn.lineno)))
+            has_resolve = any(
+                (_dotted(c.func) or "").split(".")[-1]
+                == "resolve_interpret" for c in _calls(fn))
+            if not has_resolve:
+                out.append(Finding(
+                    "kernel-interpret", path, fn.lineno,
+                    f"Pallas entry {fn.name}() must route 'interpret' "
+                    f"through kernels/dispatch.resolve_interpret "
+                    f"(compiled on TPU/GPU, interpret on CPU)",
+                    source=_line(lines, fn.lineno)))
+    # everywhere in library code: no interpret=True/False literals at
+    # call sites — the mode flows from config/None through resolve
+    if not path.startswith(("tests/",)):
+        for call in _calls(tree):
+            for kw in call.keywords:
+                if kw.arg == "interpret" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, bool):
+                    out.append(Finding(
+                        "kernel-interpret", path, kw.value.lineno,
+                        f"hardcoded interpret={kw.value.value} at a "
+                        f"call site — thread the resolved mode "
+                        f"(KernelMode / kernel_interpret config) "
+                        f"instead",
+                        source=_line(lines, kw.value.lineno)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: trace-purity
+# ---------------------------------------------------------------------------
+
+_HOST_MODULES = ("time", "random", "os", "sys", "io")
+
+
+def rule_trace_purity(path: str, source: str, tree) -> list[Finding]:
+    lines = source.splitlines()
+    out = []
+    for fn in _traced_functions(path, tree):
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in [n for b in body for n in ast.walk(b)]:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not fn:
+                continue        # nested fns are walked as their own scope
+            if isinstance(node, ast.Global):
+                out.append(Finding(
+                    "trace-purity", path, node.lineno,
+                    "global mutation inside a traced body — trace-time "
+                    "side effects replay on every recompile and vanish "
+                    "on cache hits",
+                    source=_line(lines, node.lineno)))
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func) or ""
+            root = name.split(".")[0]
+            leaf = name.split(".")[-1]
+            if leaf in TRACE_COUNTER_WHITELIST:
+                continue
+            if name == "print":
+                out.append(Finding(
+                    "trace-purity", path, node.lineno,
+                    "print() inside a traced body — runs at trace time "
+                    "only (use jax.debug.print for runtime output)",
+                    source=_line(lines, node.lineno)))
+            elif root in _HOST_MODULES:
+                out.append(Finding(
+                    "trace-purity", path, node.lineno,
+                    f"host call {name}() inside a traced body — the "
+                    f"value is baked in at trace time, not evaluated "
+                    f"per step",
+                    source=_line(lines, node.lineno)))
+            elif name.startswith(("np.random.", "numpy.random.")):
+                out.append(Finding(
+                    "trace-purity", path, node.lineno,
+                    f"host RNG {name}() inside a traced body — "
+                    f"randomness must flow through jax.random keys",
+                    source=_line(lines, node.lineno)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: dtype-hazard
+# ---------------------------------------------------------------------------
+
+_FLOAT_DTYPES = {"bfloat16", "float32", "float16", "float64"}
+
+
+def _float_dtype_literal(node) -> str | None:
+    """'jnp.bfloat16' for float-dtype attribute literals, else None."""
+    name = _dotted(node)
+    if name and name.split(".")[0] in ("jnp", "jax", "np", "numpy") \
+            and name.split(".")[-1] in _FLOAT_DTYPES:
+        return name
+    if isinstance(node, ast.Constant) and node.value in _FLOAT_DTYPES:
+        return repr(node.value)
+    return None
+
+
+def _is_cache_init(name: str) -> bool:
+    return name.startswith("init_") and ("cache" in name
+                                         or "state" in name)
+
+
+def rule_dtype_hazard(path: str, source: str, tree) -> list[Finding]:
+    lines = source.splitlines()
+    out = []
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, ast.FunctionDef)]:
+        # (a) a hardcoded float dtype as a parameter DEFAULT: callers
+        # that forget to pass cfg.dtype silently build mismatched
+        # buffers (the PR-6 kv_bits=16 bug shape) — make it required
+        args = fn.args
+        pairs = list(zip(
+            [a.arg for a in args.args[len(args.args)
+                                      - len(args.defaults):]],
+            args.defaults)) + [(a.arg, d) for a, d in
+                               zip(args.kwonlyargs, args.kw_defaults)
+                               if d is not None]
+        for pname, default in pairs:
+            lit = _float_dtype_literal(default)
+            if lit and ("dtype" in pname):
+                out.append(Finding(
+                    "dtype-hazard", path, default.lineno,
+                    f"{fn.name}(): parameter '{pname}' defaults to "
+                    f"hardcoded {lit} — require the caller to pass the "
+                    f"config dtype (silent-rounding bug class, PR 6)",
+                    source=_line(lines, default.lineno)))
+        # (b) inside cache/state initializers: any float-dtype literal
+        # on a buffer-constructor keyword hardcodes the cache dtype
+        if _is_cache_init(fn.name):
+            for call in _calls(fn):
+                for kw in call.keywords:
+                    if kw.arg == "dtype":
+                        lit = _float_dtype_literal(kw.value)
+                        if lit:
+                            out.append(Finding(
+                                "dtype-hazard", path, kw.value.lineno,
+                                f"{fn.name}(): buffer allocated with "
+                                f"hardcoded dtype={lit} — cache/state "
+                                f"dtypes must flow from the model "
+                                f"config",
+                                source=_line(lines, kw.value.lineno)))
+    # (c) numpy CALLS inside traced bodies: np.* executes at trace time
+    # on concrete zeros, silently constant-folding what should be a
+    # traced computation (dtype attributes like np.int32 are fine —
+    # only calls are flagged)
+    for fn in _traced_functions(path, tree):
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in [n for b in body for n in ast.walk(b)]:
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func) or ""
+            if name.startswith(("np.", "numpy.")) \
+                    and not name.startswith(("np.random.",
+                                             "numpy.random.")):
+                out.append(Finding(
+                    "dtype-hazard", path, node.lineno,
+                    f"{name}() inside a traced body — numpy executes "
+                    f"at trace time on abstract values (use jnp)",
+                    source=_line(lines, node.lineno)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: pytree-registration
+# ---------------------------------------------------------------------------
+
+# packages whose dataclasses sit next to the jit boundary: anything
+# mutable and unregistered here is one refactor away from being traced
+PYTREE_SCOPED_PREFIXES = (
+    "src/repro/core/", "src/repro/models/", "src/repro/quant/",
+    "src/repro/serve/", "src/repro/kernels/", "src/repro/distributed/",
+    "src/repro/optim/",
+)
+
+_REGISTER_NAMES = ("register_dataclass", "register_pytree_node",
+                   "register_pytree_node_class",
+                   "register_pytree_with_keys")
+
+
+def rule_pytree_registration(path: str, source: str,
+                             tree) -> list[Finding]:
+    if not path.startswith(PYTREE_SCOPED_PREFIXES):
+        return []
+    lines = source.splitlines()
+    out = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        is_dc = False
+        frozen = False
+        registered = False
+        for dec in cls.decorator_list:
+            flat = ast.dump(dec)
+            if any(r in flat for r in _REGISTER_NAMES):
+                registered = True
+            name = _dotted(dec.func) if isinstance(dec, ast.Call) \
+                else _dotted(dec)
+            if name and name.split(".")[-1] == "dataclass":
+                is_dc = True
+                if isinstance(dec, ast.Call):
+                    for kw in dec.keywords:
+                        if kw.arg == "frozen" \
+                                and isinstance(kw.value, ast.Constant) \
+                                and kw.value.value is True:
+                            frozen = True
+        if is_dc and not (frozen or registered):
+            # anchor at the decorator stack so a noqa placed directly
+            # above ``@dataclass`` suppresses the finding
+            anchor = min([d.lineno for d in cls.decorator_list]
+                         + [cls.lineno])
+            out.append(Finding(
+                "pytree-registration", path, anchor,
+                f"mutable dataclass {cls.name} in a jit-adjacent "
+                f"package is neither frozen=True (static config) nor a "
+                f"registered pytree — crossing the jit boundary would "
+                f"silently close over stale trace-time state",
+                source=_line(lines, anchor)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+RULES = {
+    "jit-boundary": rule_jit_boundary,
+    "kernel-interpret": rule_kernel_interpret,
+    "trace-purity": rule_trace_purity,
+    "dtype-hazard": rule_dtype_hazard,
+    "pytree-registration": rule_pytree_registration,
+}
+
+# rules emitted by the suppression machinery itself (findings.py)
+META_RULES = ("noqa-reason", "noqa-unknown")
+
+ALL_RULE_NAMES = set(RULES) | set(META_RULES)

@@ -1,0 +1,197 @@
+"""Runtime sanitizer: opt-in invariant auditors for the live engine.
+
+``EngineConfig(sanitize=True)`` attaches one ``EngineSanitizer`` to the
+engine's runner.  Four auditors, each a hard ``SanitizerError`` on
+violation (never a warning — a tripped invariant means the serving
+state is already wrong):
+
+- **recompile sentry** — every jitted entry is wrapped with a
+  trace-time probe (the python body of a jitted fn runs ONLY on a
+  compile-cache miss).  After the first serving window closes (warmup
+  complete), any further cache miss raises: the 1-decode +
+  1-prefill/bucket + 1-verify compile contract, enforced at runtime
+  instead of merely counted in tests.
+- **block-pool refcount auditor** — shadow-refcounts every
+  alloc/incref/decref/cow on the paged pool and audits at each window
+  close: shadow/pool divergence (refcount corruption), free-list
+  duplicates or free+live overlap, registry entries on dead blocks
+  (orphaned shared block), and — the engine being idle at window
+  close — any block still live is a leak.
+- **donation guard** — the jitted steps donate their cache operand
+  (``donate_argnums``); passing an already-donated tree is
+  use-after-free.  Checked via ``jax.Array.is_deleted`` on every cache
+  leaf before each dispatch, turning XLA's late "Array has been
+  deleted" crash into an immediate, attributed error.
+- **NaN/Inf tripwire** — logits fetched and checked finite after every
+  decode/prefill/verify dispatch (sub-2-bit reconstructions have no
+  numeric slack; a NaN in logits means an upstream kernel or cache
+  write already corrupted state).  This forces a host sync per
+  dispatch — sanitize mode trades throughput for certainty.
+
+``checks_passed`` counts every successful audit/check and surfaces as
+``ServeStats.sanitizer_checks_passed`` so smoke artifacts prove the
+sanitized cell actually exercised the auditors.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SanitizerError(AssertionError):
+    """A serving invariant tripped at runtime (sanitize=True)."""
+
+
+class EngineSanitizer:
+    def __init__(self):
+        self.checks_passed = 0
+        self.windows_closed = 0
+        self.armed = False                  # recompile sentry live?
+        self.compiles: dict[str, int] = {}  # jit entry -> cache misses
+        self._shadow: dict[int, int] | None = None  # bid -> refcount
+        self._pool = None
+
+    # ---------------- recompile sentry ----------------
+
+    def compile_probe(self, name: str):
+        """Trace-time hook for one jitted entry: call it first inside
+        the traced body.  Counts the cache miss; raises once armed."""
+        def probe():
+            self.compiles[name] = self.compiles.get(name, 0) + 1
+            if self.armed:
+                raise SanitizerError(
+                    f"recompile sentry: jit cache miss on {name!r} "
+                    f"after warmup (compile counts: {self.compiles}) — "
+                    f"an input shape/dtype or static argument changed "
+                    f"mid-serve, breaking the bounded-compile contract")
+        return probe
+
+    def arm(self):
+        self.armed = True
+
+    # ---------------- donation guard ----------------
+
+    def check_not_donated(self, name: str, tree):
+        """Raise if any leaf of ``tree`` was already donated to a
+        previous dispatch (its buffer is gone)."""
+        import jax
+        for leaf in jax.tree.leaves(tree):
+            if getattr(leaf, "is_deleted", None) is not None \
+                    and leaf.is_deleted():
+                raise SanitizerError(
+                    f"donation guard: {name} received a cache tree "
+                    f"with a donated (deleted) buffer — a stale "
+                    f"reference from before the previous dispatch is "
+                    f"being reused")
+        self.checks_passed += 1
+
+    # ---------------- NaN/Inf tripwire ----------------
+
+    def check_finite(self, name: str, logits):
+        """Fetch ``logits`` and raise on any NaN/Inf."""
+        host = np.asarray(logits)
+        if not np.all(np.isfinite(host)):
+            bad = int((~np.isfinite(host)).sum())
+            raise SanitizerError(
+                f"NaN/Inf tripwire: {name} produced {bad} non-finite "
+                f"logit value(s) of {host.size} — upstream kernel or "
+                f"cache corruption")
+        self.checks_passed += 1
+        return logits
+
+    # ---------------- block-pool refcount auditor ----------------
+
+    def attach_pool(self, pool):
+        """Shadow-refcount ``pool`` (serve/block_pool.BlockPool) by
+        wrapping its mutators on the instance.  Internal calls
+        (``alloc_n`` -> ``alloc``, ``attach`` -> ``incref``) resolve
+        through the instance attribute, so every path is mirrored."""
+        self._pool = pool
+        self._shadow = {int(b): r for b, r in pool._ref.items()}
+        shadow = self._shadow
+        orig_alloc, orig_incref = pool.alloc, pool.incref
+        orig_decref, orig_cow = pool.decref, pool.cow
+
+        def alloc():
+            bid = orig_alloc()
+            shadow[bid] = 1
+            return bid
+
+        def incref(bid):
+            if bid != 0:
+                if bid not in shadow:
+                    raise SanitizerError(
+                        f"refcount auditor: incref of block {bid} "
+                        f"which the shadow ledger has as free")
+                shadow[bid] += 1
+            orig_incref(bid)
+
+        def decref(bid):
+            if bid != 0:
+                if shadow.get(bid, 0) < 1:
+                    raise SanitizerError(
+                        f"refcount auditor: decref of block {bid} "
+                        f"which the shadow ledger has as free "
+                        f"(double-free)")
+                shadow[bid] -= 1
+                if shadow[bid] == 0:
+                    del shadow[bid]
+            return orig_decref(bid)
+
+        def cow(bid):
+            fresh, src = orig_cow(bid)
+            if src is not None:     # pool moved one ref bid -> fresh
+                shadow[src] -= 1
+                shadow[fresh] = 1
+            return fresh, src
+
+        pool.alloc, pool.incref = alloc, incref
+        pool.decref, pool.cow = decref, cow
+
+    def audit_pool(self, *, idle: bool):
+        """Structural pool audit; with ``idle=True`` (window close) any
+        live block is a leak."""
+        pool = self._pool
+        if pool is None:
+            return
+        free = list(pool._free)
+        if len(free) != len(set(free)):
+            raise SanitizerError(
+                "refcount auditor: duplicate ids on the free list")
+        overlap = set(free) & set(pool._ref)
+        if overlap:
+            raise SanitizerError(
+                f"refcount auditor: blocks {sorted(overlap)} are both "
+                f"free and refcounted")
+        if len(free) + len(pool._ref) != pool.num_blocks:
+            raise SanitizerError(
+                f"refcount auditor: {len(free)} free + "
+                f"{len(pool._ref)} live != {pool.num_blocks} blocks — "
+                f"blocks vanished from both ledgers")
+        if self._shadow != {int(b): r for b, r in pool._ref.items()}:
+            raise SanitizerError(
+                f"refcount auditor: shadow ledger diverged from the "
+                f"pool (shadow {self._shadow}, pool {dict(pool._ref)}) "
+                f"— a refcount was mutated outside the pool API")
+        for bid in pool._key_of:
+            if pool._ref.get(bid, 0) < 1:
+                raise SanitizerError(
+                    f"refcount auditor: prefix-registry block {bid} is "
+                    f"dead (orphaned shared block)")
+        if idle and pool._ref:
+            raise SanitizerError(
+                f"refcount auditor: engine idle but blocks "
+                f"{sorted(pool._ref)} still hold "
+                f"{sum(pool._ref.values())} reference(s) — leaked")
+        self.checks_passed += 1
+
+    # ---------------- window lifecycle ----------------
+
+    def end_window(self):
+        """Window-close hook (the scheduler's ``_finalize_window``):
+        audit the pool at idle, then arm the recompile sentry — the
+        first window IS the warmup, so every compile after it is a
+        contract violation."""
+        self.audit_pool(idle=True)
+        self.windows_closed += 1
+        self.checks_passed += 1
+        self.arm()

@@ -23,7 +23,7 @@ def kv_quantize(kv: jnp.ndarray, bits: int = 4):
 
 
 def kv_dequantize(packed: jnp.ndarray, mu: jnp.ndarray, z: jnp.ndarray,
-                  bits: int = 4, dtype=jnp.bfloat16):
+                  bits: int, dtype):
     if bits == 4:
         xq = unpack_int4_pairs(packed)
     else:

@@ -70,7 +70,7 @@ def _maybe_capture(x, w):
         store.setdefault(name, []).append(xs[:budget])
 
 
-def dequantize_weight_fast(q: QuantizedLinear, dtype=jnp.bfloat16):
+def dequantize_weight_fast(q: QuantizedLinear, dtype):
     """Gather-free dequant of the NORMAL block (Perf iteration Q1):
     ``w = lo0 + d0*qb + mb*((lo1-lo0) + (d1-d0)*qb)`` on {0,1} planes —
     avoids materializing an int32 index tensor + an f32 gather (2.8x the

@@ -76,6 +76,12 @@ def main():
                     help="draft tokens per verify step (speculative)")
     ap.add_argument("--beam-width", type=int, default=4,
                     help="beam count for --policy beam")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run with the runtime sanitizer: block-pool "
+                         "refcount audits, recompile sentry, donation "
+                         "guard, NaN/Inf logits tripwire (hard errors; "
+                         "forces a host sync per dispatch — see "
+                         "docs/analysis.md)")
     args = ap.parse_args()
 
     from repro.config.model_config import QuantConfig
@@ -113,7 +119,12 @@ def main():
         batch_slots=args.slots, max_len=512, backend=args.backend,
         kv_layout=args.kv_layout, block_size=args.block_size,
         num_blocks=args.num_blocks, kernel_interpret=interpret,
-        tp=args.tp, decode_horizon=args.decode_horizon))
+        tp=args.tp, decode_horizon=args.decode_horizon,
+        sanitize=args.sanitize))
+    if args.sanitize:
+        print("[serve] runtime sanitizer ON: refcount audits + recompile "
+              "sentry + donation guard + NaN tripwire (hard errors; one "
+              "host sync per dispatch)")
     if engine.packed_stats is not None:
         ps = engine.packed_stats
         print(f"[serve] backend=quantized: {ps['packed_linears']} linears "

@@ -31,7 +31,7 @@ class KVCache(NamedTuple):
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
-                  kv_bits: int, dtype=jnp.bfloat16) -> KVCache:
+                  kv_bits: int, dtype) -> KVCache:
     if kv_bits == 4:
         k = jnp.zeros((batch, max_len, n_kv, head_dim // 2), jnp.int8)
         v = jnp.zeros_like(k)

@@ -78,7 +78,7 @@ def griffin_recurrent_block(params, x, cfg: RGLRUConfig,
 
 
 def init_rglru_state(batch: int, cfg: RGLRUConfig, d_model: int,
-                     dtype=jnp.bfloat16) -> RGLRUState:
+                     dtype) -> RGLRUState:
     w = cfg.lru_width or d_model
     return RGLRUState(
         h=jnp.zeros((batch, w), jnp.float32),

@@ -154,7 +154,7 @@ def mamba2_block(params, x, cfg: SSMConfig, state: SSMState | None = None,
 
 
 def init_ssm_state(batch: int, cfg: SSMConfig, d_model: int,
-                   dtype=jnp.bfloat16) -> SSMState:
+                   dtype) -> SSMState:
     d_inner, n_heads, _ = _split_proj(cfg, d_model)
     kw = cfg.conv_width - 1
     return SSMState(

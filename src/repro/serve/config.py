@@ -48,6 +48,11 @@ class EngineConfig:
       dispatch; >1 amortizes host/dispatch overhead at the cost of
       burstier token delivery (see docs/serving.md "Multi-step
       decode").  Streams are bit-identical across horizons.
+    - ``sanitize``         — opt-in runtime sanitizer: block-pool
+      refcount audits at every idle window, a recompile sentry that
+      raises on any jit cache miss after warmup, a donation-after-use
+      guard, and a NaN/Inf tripwire on logits (see docs/analysis.md).
+      Debug/CI tool — adds host-side checks per dispatch.
     """
 
     batch_slots: int = 4
@@ -64,6 +69,7 @@ class EngineConfig:
     tp: int = 1
     mesh: Any = None
     decode_horizon: int = 1
+    sanitize: bool = False
 
     def __post_init__(self):
         if self.batch_slots < 1:

@@ -134,7 +134,8 @@ class ServeEngine:
                                   chunk_buckets=cfg.chunk_buckets,
                                   backend=cfg.backend,
                                   kernel_interpret=cfg.kernel_interpret,
-                                  paged=cfg.kv_layout == "paged", mesh=mesh)
+                                  paged=cfg.kv_layout == "paged", mesh=mesh,
+                                  sanitize=cfg.sanitize)
         # the runner's tree, not the constructor arg: on the quantized
         # backend the runner packs covered linears, and pinning the
         # original here would keep BOTH weight copies resident
@@ -156,6 +157,9 @@ class ServeEngine:
         else:
             self.kv = KVManager(model, cfg.batch_slots, cfg.max_len,
                                 place=self.runner.place_caches)
+        self.sanitizer = self.runner.sanitizer
+        if self.sanitizer is not None and cfg.kv_layout == "paged":
+            self.sanitizer.attach_pool(self.kv.pool)
         self.scheduler = Scheduler(self.runner, self.kv, eos_id=cfg.eos_id,
                                    seed=cfg.seed,
                                    overflow_policy=cfg.overflow_policy,

@@ -271,6 +271,7 @@ class DraftSubstrate:
 
 # ---------------- beam search runtime ----------------
 
+# repro: noqa(pytree-registration): host-only re-rank bookkeeping — never enters a jitted fn (beams ride the batched decode as plain slots)
 @dataclasses.dataclass
 class _Beam:
     h: object                   # StreamHandle occupying the slot

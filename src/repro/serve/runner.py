@@ -69,6 +69,7 @@ from repro.distributed.tp import (
     reset_comms_trace_counts,
     tp_serving,
 )
+from repro.analysis.sanitizer import EngineSanitizer
 from repro.kernels.dispatch import resolve_interpret
 from repro.serve.kv_manager import write_slot_row
 from repro.serve.sampler import sample_tokens_batched
@@ -95,7 +96,8 @@ class ModelRunner:
                  chunk_buckets=DEFAULT_CHUNK_BUCKETS,
                  backend: str = "reference",
                  kernel_interpret: bool | None = None,
-                 paged: bool = False, mesh=None):
+                 paged: bool = False, mesh=None,
+                 sanitize: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
@@ -161,12 +163,18 @@ class ModelRunner:
         # Under a mesh the decode jit needs the cache PartitionSpecs,
         # which exist only once the engine has built (and placed) its
         # caches — built lazily on the first decode() instead.
+        # opt-in runtime sanitizer (EngineConfig.sanitize=True): every
+        # jitted entry below goes through self._jit so its traced body
+        # carries the recompile-sentry probe
+        self.sanitizer = EngineSanitizer() if sanitize else None
         self._decode = None if mesh is not None else self._build_decode()
-        self._copy_block = jax.jit(_copy_block, donate_argnums=(0,))
-        self._write = jax.jit(write_slot_row, donate_argnums=(0,))
-        self._sample = jax.jit(sample_tokens_batched)
-        self._argmax = jax.jit(
-            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._copy_block = self._jit(_copy_block, "copy_block",
+                                     donate_argnums=(0,))
+        self._write = self._jit(write_slot_row, "write_slot",
+                                donate_argnums=(0,))
+        self._sample = self._jit(sample_tokens_batched, "sample")
+        self._argmax = self._jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32), "argmax")
         self._chunk_fns: dict[int, object] = {}   # bucket C -> jitted
         self._full_fns: dict[int, object] = {}    # prompt len -> jitted
         self._verify_fns: dict[int, object] = {}  # draft len T -> jitted
@@ -216,6 +224,20 @@ class ModelRunner:
             return out
         return traced
 
+    def _jit(self, fn, name: str, **kw):
+        """``jax.jit`` with the sanitizer's recompile-sentry probe
+        folded into the traced body (the body runs only on a compile-
+        cache miss, so the probe fires exactly once per compile).
+        Plain ``jax.jit`` when the sanitizer is off."""
+        if self.sanitizer is None:
+            return jax.jit(fn, **kw)
+        probe = self.sanitizer.compile_probe(name)
+
+        def probed(*args):
+            probe()
+            return fn(*args)
+        return jax.jit(probed, **kw)
+
     # ---------------- tensor-parallel plumbing ----------------
 
     def _shard_spec_args(self, n_args: tuple):
@@ -263,9 +285,9 @@ class ModelRunner:
             if self.paged else self.model.decode_step)
         # decode controls: tokens [slots], pos [slots] (+ bt [slots, n_bt])
         ranks = (1, 1, 2) if self.paged else (1, 1)
-        return jax.jit(
+        return self._jit(
             self._traced(self._shard_wrap(decode_fn, ranks), "decode"),
-            donate_argnums=(2,))
+            "decode", donate_argnums=(2,))
 
     # ---------------- compile-cache observability ----------------
 
@@ -313,6 +335,8 @@ class ModelRunner:
         engine's table); placement goes through it and ``slot`` is
         ignored.
         """
+        if self.sanitizer is not None:
+            self.sanitizer.check_not_donated("prefill_chunk", caches)
         remaining = len(prompt) - fill
         c = self.bucket_for(remaining)
         start = min(fill, self.max_len - c)
@@ -331,9 +355,9 @@ class ModelRunner:
             else:
                 chunk_fn = self.model.prefill_chunk
                 ranks = (1, 0, 0, 0)    # tokens, slot, pos, last_idx
-            fn = self._chunk_fns[c] = jax.jit(
+            fn = self._chunk_fns[c] = self._jit(
                 self._traced(self._shard_wrap(chunk_fn, ranks), "prefill"),
-                donate_argnums=(2,))
+                f"prefill_chunk[{c}]", donate_argnums=(2,))
         if self.paged:
             logits, caches = fn(self.params, jnp.asarray(buf), caches,
                                 jnp.asarray(start, jnp.int32),
@@ -345,6 +369,8 @@ class ModelRunner:
                                 jnp.asarray(start, jnp.int32),
                                 jnp.asarray(m - 1, jnp.int32))
         self.prefill_dispatches += 1
+        if self.sanitizer is not None:
+            self.sanitizer.check_finite("prefill_chunk", logits)
         return logits, caches, n_new
 
     def prefill_full(self, prompt: np.ndarray):
@@ -354,16 +380,20 @@ class ModelRunner:
         s = len(prompt)
         fn = self._full_fns.get(s)
         if fn is None:
-            fn = self._full_fns[s] = jax.jit(self._traced(
+            fn = self._full_fns[s] = self._jit(self._traced(
                 lambda p, t: self.model.prefill(p, t, max_len=self.max_len),
-                "prefill"))
+                "prefill"), f"prefill_full[{s}]")
         logits, fresh = fn(self.params, jnp.asarray(prompt)[None, :])
         self.prefill_dispatches += 1
+        if self.sanitizer is not None:
+            self.sanitizer.check_finite("prefill_full", logits)
         return logits, fresh
 
     def write_slot(self, caches, fresh, slot: int):
         """Copy a batch=1 prefill cache into row ``slot`` of the shared
         tree (fallback path only)."""
+        if self.sanitizer is not None:
+            self.sanitizer.check_not_donated("write_slot", caches)
         return self._write(caches, fresh, jnp.asarray(slot, jnp.int32))
 
     # ---------------- decode / sampling ----------------
@@ -374,6 +404,8 @@ class ModelRunner:
         pass the full [slots, n_bt] ``block_tables``."""
         if self._decode is None:        # mesh path: built after cache specs
             self._decode = self._build_decode()
+        if self.sanitizer is not None:
+            self.sanitizer.check_not_donated("decode", caches)
         if self.paged:
             logits, caches = self._decode(
                 self.params, jnp.asarray(tokens), caches, jnp.asarray(pos),
@@ -382,6 +414,8 @@ class ModelRunner:
             logits, caches = self._decode(self.params, jnp.asarray(tokens),
                                           caches, jnp.asarray(pos))
         self.decode_dispatches += 1
+        if self.sanitizer is not None:
+            self.sanitizer.check_finite("decode", logits)
         return logits, caches
 
     def _build_decode_multi(self, k: int, n_stop: int):
@@ -466,8 +500,9 @@ class ModelRunner:
                 = state
             return toks, emitted, tok, pos, keys, active, budget, caches
 
-        return jax.jit(self._traced(multi_fn, "decode"),
-                       donate_argnums=(2,))
+        return self._jit(self._traced(multi_fn, "decode"),
+                         f"decode_multi[k={k},stops={n_stop}]",
+                         donate_argnums=(2,))
 
     def decode_multi(self, k: int, tokens, caches, pos, keys, temps,
                      active, budget, eos, stop, block_tables=None,
@@ -494,6 +529,8 @@ class ModelRunner:
                 jnp.asarray(k if k_eff is None else k_eff, jnp.int32)]
         if self.paged:
             rest.insert(0, jnp.asarray(block_tables, jnp.int32))
+        if self.sanitizer is not None:
+            self.sanitizer.check_not_donated("decode_multi", caches)
         out = fn(self.params, jnp.asarray(tokens), caches,
                  jnp.asarray(pos), *rest)
         self.decode_dispatches += 1
@@ -521,22 +558,28 @@ class ModelRunner:
                 def verify_fn(p, toks, caches, pos, act):
                     return self.model.verify_step(p, toks, caches, pos, act)
                 ranks = (2, 1, 1)       # tokens, pos, active
-            fn = self._verify_fns[t] = jax.jit(
+            fn = self._verify_fns[t] = self._jit(
                 self._traced(self._shard_wrap(verify_fn, ranks, out_rank=3),
                              "verify", kernel_mode="prefill"),
-                donate_argnums=(2,))
+                f"verify[T={t}]", donate_argnums=(2,))
         args = [self.params, jnp.asarray(tokens, jnp.int32), caches,
                 jnp.asarray(pos, jnp.int32), jnp.asarray(active, bool)]
         if self.paged:
             args.append(jnp.asarray(block_tables, jnp.int32))
+        if self.sanitizer is not None:
+            self.sanitizer.check_not_donated("verify", caches)
         logits, caches = fn(*args)
         self.verify_dispatches += 1
+        if self.sanitizer is not None:
+            self.sanitizer.check_finite("verify", logits)
         return logits, caches
 
     def copy_blocks(self, caches, copies):
         """Apply queued copy-on-write block copies ((src, dst) pool ids,
         from ``PagedKVManager.take_pending_copies``) to the pool arrays.
         One jitted compile total (ids are traced scalars)."""
+        if self.sanitizer is not None and copies:
+            self.sanitizer.check_not_donated("copy_blocks", caches)
         for src, dst in copies:
             caches = self._copy_block(caches, jnp.asarray(src, jnp.int32),
                                       jnp.asarray(dst, jnp.int32))

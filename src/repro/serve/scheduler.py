@@ -74,6 +74,7 @@ from repro.serve.policy import BeamGroup, categorical, softmax
 from repro.serve.sampler import sample_token
 
 
+# repro: noqa(pytree-registration): host-side lifecycle record mutated by the scheduler — the jitted steps only ever see its prompt/token ARRAYS
 @dataclasses.dataclass
 class Request:
     """Legacy batch-mode request record (PR 1-4 API).  ``generate()``
@@ -1326,6 +1327,12 @@ class Scheduler:
         w, self._win = self._win, None
         if w is None:
             return
+        # runtime sanitizer: the window closes because the engine went
+        # idle, so audit the block pool (any live block is a leak) and
+        # arm the recompile sentry — the first window IS the warmup
+        san = getattr(self.runner, "sanitizer", None)
+        if san is not None:
+            san.end_window()
         dt = time.perf_counter() - w["t0"]
         steps = self.decode_steps - w["steps0"]
         dispatches = self.runner.decode_dispatches - w["disp0"]
@@ -1406,5 +1413,8 @@ class Scheduler:
             accepted_tokens_per_step=(w["spec_emitted"] / verifies
                                       if verifies else None),
             beam_streams=w["beam_streams"],
+            # cumulative sanitizer checks (0 = sanitizer off)
+            sanitizer_checks_passed=(san.checks_passed
+                                     if san is not None else 0),
         )
         self.last_stats = self.last_stats_typed.as_dict()

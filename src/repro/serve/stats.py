@@ -132,6 +132,9 @@ class ServeStats:
     # "accepted_tokens/step > 1" reads this field
     accepted_tokens_per_step: float | None = None
     beam_streams: int = 0
+    # runtime sanitizer (EngineConfig.sanitize=True): cumulative count
+    # of checks that ran and passed — 0 when the sanitizer is off
+    sanitizer_checks_passed: int = 0
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)

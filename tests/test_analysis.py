@@ -1,0 +1,450 @@
+"""repro.analysis: contract linter + runtime sanitizer.
+
+Two halves, mirroring the subsystem:
+
+- **linter** — every rule has a positive fixture (violating source the
+  rule MUST flag; remove the rule and the fixture test fails) and a
+  negative fixture (conforming source it must NOT flag), plus the
+  suppression machinery: inline noqa with required reasons, the
+  baseline fingerprint round-trip, and ``--diff`` scoping.  The
+  meta-test lints the LIVE tree with an empty baseline — the repo's
+  own contracts, enforced on the repo itself.
+- **sanitizer** — each runtime auditor (recompile sentry, refcount
+  shadow ledger, donation guard, NaN tripwire) has a trip test proving
+  it raises ``SanitizerError`` on the violation it exists to catch,
+  against the real ``BlockPool`` / real jitted donation.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import (EngineSanitizer, Finding, SanitizerError,
+                            lint_paths, lint_sources, load_baseline,
+                            save_baseline)
+from repro.analysis.findings import apply_baseline
+from repro.analysis.rules import RULES
+from repro.serve.block_pool import BlockPool
+
+
+def _lint(path, src, rule=None):
+    rules = {rule: RULES[rule]} if rule else None
+    return lint_sources({path: textwrap.dedent(src)}, rules=rules)
+
+
+def _rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: positive (must flag) + negative (must not)
+# ---------------------------------------------------------------------------
+
+
+class TestJitBoundary:
+    def test_flags_jit_outside_boundary(self):
+        out = _lint("src/repro/serve/scheduler.py",
+                    "import jax\nstep = jax.jit(lambda x: x)\n",
+                    rule="jit-boundary")
+        assert _rules_hit(out) == {"jit-boundary"}
+
+    def test_flags_shard_map_and_partial_jit(self):
+        src = """
+        import functools, jax
+        from jax.experimental.shard_map import shard_map
+        f = shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=())
+        g = functools.partial(jax.jit, static_argnums=0)
+        """
+        out = _lint("src/repro/models/attention.py", src,
+                    rule="jit-boundary")
+        assert len(out) == 2
+
+    def test_allows_runner_kernels_and_entry_points(self):
+        src = "import jax\nstep = jax.jit(lambda x: x)\n"
+        for path in ("src/repro/serve/runner.py",
+                     "src/repro/kernels/bwa_matmul/ops.py",
+                     "src/repro/launch/serve.py",
+                     "benchmarks/serve_throughput.py"):
+            assert _lint(path, src, rule="jit-boundary") == []
+
+    def test_docstring_mention_is_not_a_call(self):
+        out = _lint("src/repro/serve/engine.py",
+                    '"""the runner owns jax.jit(...)"""\n',
+                    rule="jit-boundary")
+        assert out == []
+
+
+class TestKernelInterpret:
+    GOOD = """
+    from repro.kernels.dispatch import resolve_interpret
+    import jax.experimental.pallas as pl
+
+    def gemv(x, w, interpret=None):
+        interpret = resolve_interpret(interpret)
+        return pl.pallas_call(lambda r: r, interpret=interpret)(x)
+    """
+
+    def test_flags_entry_missing_interpret_param(self):
+        src = """
+        import jax.experimental.pallas as pl
+
+        def gemv(x, w):
+            return pl.pallas_call(lambda r: r)(x)
+        """
+        out = _lint("src/repro/kernels/bwa_matmul/ops.py", src,
+                    rule="kernel-interpret")
+        assert any("must accept" in f.message for f in out)
+
+    def test_flags_non_none_default_and_missing_resolve(self):
+        src = """
+        import jax.experimental.pallas as pl
+
+        def gemv(x, w, interpret=False):
+            return pl.pallas_call(lambda r: r, interpret=interpret)(x)
+        """
+        out = _lint("src/repro/kernels/bwa_matmul/ops.py", src,
+                    rule="kernel-interpret")
+        msgs = " ".join(f.message for f in out)
+        assert "default to None" in msgs
+        assert "resolve_interpret" in msgs
+
+    def test_flags_hardcoded_bool_literal_call_site(self):
+        out = _lint("src/repro/serve/runner.py",
+                    "y = gemv(x, w, interpret=True)\n",
+                    rule="kernel-interpret")
+        assert any("hardcoded interpret=True" in f.message for f in out)
+
+    def test_conforming_entry_and_tests_are_clean(self):
+        assert _lint("src/repro/kernels/bwa_matmul/ops.py", self.GOOD,
+                     rule="kernel-interpret") == []
+        # tests may pin interpret mode explicitly
+        assert _lint("tests/test_kernels.py",
+                     "y = gemv(x, w, interpret=True)\n",
+                     rule="kernel-interpret") == []
+
+
+class TestTracePurity:
+    def test_flags_host_calls_in_jitted_lambda(self):
+        src = """
+        import jax, time
+        f = jax.jit(lambda x: x * time.time())
+        """
+        out = _lint("src/repro/serve/runner.py", src, rule="trace-purity")
+        assert any("host call time.time()" in f.message for f in out)
+
+    def test_flags_print_and_global_in_traced_method(self):
+        src = """
+        class M:
+            def decode_step(self, p, tok, caches, pos):
+                global HITS
+                print("step")
+                return tok
+        """
+        out = _lint("src/repro/models/model.py", src, rule="trace-purity")
+        msgs = " ".join(f.message for f in out)
+        assert "print()" in msgs and "global mutation" in msgs
+
+    def test_flags_fn_passed_through_nested_jit_call(self):
+        src = """
+        import jax, random
+
+        def body(x):
+            return x + random.random()
+
+        step = jax.jit(wrap(body), donate_argnums=(0,))
+        """
+        out = _lint("src/repro/serve/runner.py", src, rule="trace-purity")
+        assert any("random.random" in f.message for f in out)
+
+    def test_whitelisted_trace_counters_and_host_scope_are_clean(self):
+        src = """
+        import jax, time
+
+        def decode_step(self, p):       # HOST wrapper outside models/
+            t0 = time.time()
+            return self._fn(p), t0
+
+        f = jax.jit(lambda x: _bump("decode_gemv") or x)
+        """
+        assert _lint("src/repro/serve/scheduler.py", src,
+                     rule="trace-purity") == []
+
+
+class TestDtypeHazard:
+    def test_flags_float_dtype_default(self):
+        src = """
+        import jax.numpy as jnp
+
+        def init_kv_cache(batch, n, dtype=jnp.bfloat16):
+            return jnp.zeros((batch, n), dtype)
+        """
+        out = _lint("src/repro/models/attention.py", src,
+                    rule="dtype-hazard")
+        assert any("defaults to hardcoded jnp.bfloat16" in f.message
+                   for f in out)
+
+    def test_flags_hardcoded_buffer_dtype_in_cache_init(self):
+        src = """
+        import jax.numpy as jnp
+
+        def init_ssm_state(batch, cfg, dtype):
+            return jnp.zeros((batch, 4), dtype=jnp.float16)
+        """
+        out = _lint("src/repro/models/ssm.py", src, rule="dtype-hazard")
+        assert any("hardcoded dtype=jnp.float16" in f.message
+                   for f in out)
+
+    def test_flags_numpy_call_in_traced_body(self):
+        src = """
+        import jax, numpy as np
+        f = jax.jit(lambda x: np.zeros(4) + x)
+        """
+        out = _lint("src/repro/serve/runner.py", src, rule="dtype-hazard")
+        assert any("np.zeros() inside a traced body" in f.message
+                   for f in out)
+
+    def test_required_dtype_and_int_literals_are_clean(self):
+        src = """
+        import jax.numpy as jnp
+
+        def init_kv_cache(batch, n, dtype):
+            idx = jnp.zeros((batch,), dtype=jnp.int32)
+            return jnp.zeros((batch, n), dtype), idx
+        """
+        assert _lint("src/repro/models/attention.py", src,
+                     rule="dtype-hazard") == []
+
+
+class TestPytreeRegistration:
+    def test_flags_mutable_dataclass_in_jit_adjacent_package(self):
+        src = """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class SlotState:
+            pos: int
+        """
+        out = _lint("src/repro/serve/scheduler.py", src,
+                    rule="pytree-registration")
+        assert any("SlotState" in f.message for f in out)
+
+    def test_frozen_registered_and_out_of_scope_are_clean(self):
+        frozen = """
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            n: int
+        """
+        registered = """
+        import dataclasses, jax
+
+        @jax.tree_util.register_dataclass
+        @dataclasses.dataclass
+        class Carry:
+            x: object
+        """
+        assert _lint("src/repro/serve/config.py", frozen,
+                     rule="pytree-registration") == []
+        assert _lint("src/repro/models/model.py", registered,
+                     rule="pytree-registration") == []
+        # outside the scoped packages (host-side tooling) no constraint
+        mutable = frozen.replace("frozen=True", "")
+        assert _lint("src/repro/data/corpus.py", mutable,
+                     rule="pytree-registration") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression: inline noqa + baseline
+# ---------------------------------------------------------------------------
+
+VIOLATION = """
+import jax
+step = jax.jit(lambda x: x)
+"""
+
+
+class TestNoqa:
+    def test_noqa_with_reason_suppresses(self):
+        src = ("import jax\n"
+               "# repro: noqa(jit-boundary): bench-local jit shim\n"
+               "step = jax.jit(lambda x: x)\n")
+        assert _lint("src/repro/serve/engine.py", src) == []
+
+    def test_noqa_without_reason_is_itself_a_finding(self):
+        src = ("import jax\n"
+               "step = jax.jit(lambda x: x)  # repro: noqa(jit-boundary)\n")
+        out = _lint("src/repro/serve/engine.py", src)
+        assert _rules_hit(out) == {"noqa-reason"}
+
+    def test_noqa_for_wrong_rule_does_not_suppress(self):
+        src = ("import jax\n"
+               "# repro: noqa(dtype-hazard): mismatched rule\n"
+               "step = jax.jit(lambda x: x)\n")
+        out = _lint("src/repro/serve/engine.py", src)
+        assert "jit-boundary" in _rules_hit(out)
+
+    def test_unknown_rule_name_is_reported(self):
+        src = "x = 1  # repro: noqa(jit-bounary): typo'd rule\n"
+        out = _lint("src/repro/serve/engine.py", src)
+        assert _rules_hit(out) == {"noqa-unknown"}
+
+
+class TestBaseline:
+    def test_round_trip_suppresses_then_resurfaces(self, tmp_path):
+        findings = lint_sources({"src/repro/serve/engine.py": VIOLATION})
+        assert findings
+        bl = tmp_path / "baseline.json"
+        save_baseline(bl, findings)
+        fps = load_baseline(bl)
+        assert fps == {f.fingerprint() for f in findings}
+        assert apply_baseline(findings, fps) == []
+
+    def test_fingerprint_is_line_number_independent(self):
+        a = Finding("jit-boundary", "src/x.py", 3, "m",
+                    source="step = jax.jit(f)")
+        b = Finding("jit-boundary", "src/x.py", 99, "m",
+                    source="step  =  jax.jit(f)")   # reflowed whitespace
+        assert a.fingerprint() == b.fingerprint()
+        c = Finding("jit-boundary", "src/y.py", 3, "m",
+                    source="step = jax.jit(f)")
+        assert a.fingerprint() != c.fingerprint()
+
+    def test_missing_baseline_file_is_empty(self, tmp_path):
+        assert load_baseline(tmp_path / "absent.json") == set()
+
+
+class TestDiffScoping:
+    def test_changed_injection_restricts_files(self, tmp_path):
+        (tmp_path / "src/repro/serve").mkdir(parents=True)
+        clean = tmp_path / "src/repro/serve/ok.py"
+        dirty = tmp_path / "src/repro/serve/bad.py"
+        clean.write_text("x = 1\n")
+        dirty.write_text(VIOLATION)
+        all_f = lint_paths(str(tmp_path), baseline=set(), changed=None)
+        assert {f.path for f in all_f} == {"src/repro/serve/bad.py"}
+        scoped = lint_paths(str(tmp_path), baseline=set(),
+                            changed=["src/repro/serve/ok.py"])
+        assert scoped == []
+
+    def test_syntax_error_is_a_finding_not_a_crash(self):
+        out = lint_sources({"src/repro/serve/broken.py": "def f(:\n"})
+        assert _rules_hit(out) == {"syntax"}
+
+
+# ---------------------------------------------------------------------------
+# meta: the LIVE tree holds its own contracts
+# ---------------------------------------------------------------------------
+
+
+def test_live_tree_lints_clean_with_empty_baseline():
+    findings = lint_paths(baseline=set())
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_checked_in_baseline_is_empty():
+    from repro.analysis.linter import default_baseline_path
+    assert load_baseline(default_baseline_path()) == set()
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer: each auditor trips on its violation
+# ---------------------------------------------------------------------------
+
+
+class TestRecompileSentry:
+    def test_warmup_compiles_pass_then_armed_miss_raises(self):
+        san = EngineSanitizer()
+        probe = san.compile_probe("decode")
+        probe()                             # warmup compile: fine
+        san.arm()
+        with pytest.raises(SanitizerError, match="recompile sentry"):
+            probe()
+        assert san.compiles["decode"] == 2  # the miss is still counted
+
+
+class TestRefcountAuditor:
+    def _pool(self, n=8):
+        pool = BlockPool(n, 4)
+        san = EngineSanitizer()
+        san.attach_pool(pool)
+        return pool, san
+
+    def test_clean_alloc_free_cycle_audits_idle(self):
+        pool, san = self._pool()
+        bid = pool.alloc()
+        pool.incref(bid)
+        pool.decref(bid)
+        pool.decref(bid)
+        san.end_window()                    # idle, drained: passes
+        assert san.windows_closed == 1
+
+    def test_leak_at_idle_raises(self):
+        pool, san = self._pool()
+        pool.alloc()                        # never freed
+        with pytest.raises(SanitizerError, match="leaked"):
+            san.end_window()
+
+    def test_double_free_raises(self):
+        pool, san = self._pool()
+        bid = pool.alloc()
+        pool.decref(bid)
+        with pytest.raises(SanitizerError, match="double-free"):
+            pool.decref(bid)
+
+    def test_out_of_band_refcount_mutation_raises(self):
+        pool, san = self._pool()
+        bid = pool.alloc()
+        pool._ref[bid] += 1                 # bypasses the pool API
+        with pytest.raises(SanitizerError, match="shadow ledger"):
+            san.audit_pool(idle=False)
+
+    def test_cow_ref_move_is_mirrored(self):
+        pool, san = self._pool()
+        bid = pool.alloc()
+        pool.incref(bid)                    # shared: refcount 2
+        fresh, src = pool.cow(bid)
+        assert src == bid and fresh != bid
+        san.audit_pool(idle=False)          # shadow tracked the move
+        pool.decref(bid)
+        pool.decref(fresh)
+        san.end_window()
+
+
+class TestDonationGuard:
+    def test_reusing_donated_cache_raises(self):
+        import jax
+        import jax.numpy as jnp
+        san = EngineSanitizer()
+        f = jax.jit(lambda c: c + 1, donate_argnums=(0,))
+        cache = jnp.zeros(4)
+        san.check_not_donated("decode", [cache])    # fresh: fine
+        out = f(cache)
+        if not cache.is_deleted():      # backend ignored the donation
+            pytest.skip("backend does not honor buffer donation")
+        with pytest.raises(SanitizerError, match="donation guard"):
+            san.check_not_donated("decode", [cache])
+        san.check_not_donated("decode", [out])      # new buffer: fine
+
+
+class TestNaNTripwire:
+    def test_nan_and_inf_raise_finite_passes(self):
+        san = EngineSanitizer()
+        san.check_finite("decode", np.zeros((2, 4), np.float32))
+        with pytest.raises(SanitizerError, match="NaN/Inf"):
+            san.check_finite("decode", np.array([1.0, np.nan]))
+        with pytest.raises(SanitizerError, match="NaN/Inf"):
+            san.check_finite("verify", np.array([np.inf, 0.0]))
+        assert san.checks_passed == 1
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stats_carries_sanitizer_counter():
+    from repro.serve.stats import ServeStats
+    st = ServeStats(sanitizer_checks_passed=7)
+    assert st.as_dict()["sanitizer_checks_passed"] == 7
+    assert ServeStats().sanitizer_checks_passed == 0

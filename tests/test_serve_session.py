@@ -139,11 +139,14 @@ class TestHandleBasics:
         assert eng.kv_stats["blocks_in_use"] == 0
         assert eng.last_stats["cancelled"] == 2
 
-    def test_cancellation_storm_no_leaks(self, tiny_lm):
+    @pytest.mark.parametrize("sanitize", [False, True])
+    def test_cancellation_storm_no_leaks(self, tiny_lm, sanitize):
         """Cancel every stream at every lifecycle stage; pool and slots
-        drain to empty."""
+        drain to empty.  Sanitized: the refcount auditor re-proves the
+        drain at window close (a leak would be a hard SanitizerError)."""
         model, params = tiny_lm
-        eng = _engine(model, params, slots=3, num_blocks=18)
+        eng = _engine(model, params, slots=3, num_blocks=18,
+                      sanitize=sanitize)
         hs = [eng.submit(_prompt(5 + 5 * i),
                          SamplingParams(max_new_tokens=10))
               for i in range(8)]
@@ -156,6 +159,9 @@ class TestHandleBasics:
         assert eng.kv_stats["blocks_in_use"] == 0
         assert eng.kv.pool.n_free == eng.kv.pool.num_blocks
         assert eng.scheduler.kv.n_free == 3     # all slots free
+        if sanitize:
+            assert eng.sanitizer.checks_passed > 0
+            assert eng.last_stats["sanitizer_checks_passed"] > 0
 
     def test_on_token_callback_may_cancel_other_streams(self, tiny_lm):
         """Regression: an on_token callback cancelling ANOTHER live
@@ -259,12 +265,16 @@ class TestSamplingParams:
 
 
 class TestFork:
-    def test_fork_shares_all_prefork_blocks_stored_once(self, tiny_lm):
+    @pytest.mark.parametrize("sanitize", [False, True])
+    def test_fork_shares_all_prefork_blocks_stored_once(self, tiny_lm,
+                                                        sanitize):
         """Acceptance: at the fork point pool occupancy is UNCHANGED —
         every pre-fork block (incl. the partial tail) is shared, not
-        copied — and COW copies appear only on divergent writes."""
+        copied — and COW copies appear only on divergent writes.
+        Sanitized: the shadow ledger mirrors every fork incref and COW
+        ref-move, so divergence here is a hard error."""
         model, params = tiny_lm
-        eng = _engine(model, params, slots=3)
+        eng = _engine(model, params, slots=3, sanitize=sanitize)
         base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=10))
         _pump_until(eng, lambda: len(base.out_tokens) >= 3)
         before = eng.kv_stats["blocks_in_use"]
@@ -333,7 +343,8 @@ class TestFork:
         assert eng.kv_stats["blocks_in_use"] == 0
         assert eng.last_stats["forks"] == 0
 
-    def test_cow_pool_exhaustion_writer_yields(self, tiny_lm):
+    @pytest.mark.parametrize("sanitize", [False, True])
+    def test_cow_pool_exhaustion_writer_yields(self, tiny_lm, sanitize):
         """Regression: when a divergent write needs a COW copy but the
         pool is empty and every other stream has equal priority, the
         WRITER is preempted (snapshot + re-queue) instead of displacing
@@ -344,7 +355,8 @@ class TestFork:
             _prompt(12), SamplingParams(max_new_tokens=12)).result()
         # parent reserves ceil((12+12)/8)=3 blocks = the WHOLE pool;
         # fork shares them, so the first divergent write finds 0 free
-        eng = _engine(model, params, slots=2, num_blocks=3)
+        eng = _engine(model, params, slots=2, num_blocks=3,
+                      sanitize=sanitize)
         base = eng.submit(_prompt(12), SamplingParams(max_new_tokens=12))
         _pump_until(eng, lambda: len(base.out_tokens) >= 3)
         fork, = base.fork(1)
@@ -398,11 +410,15 @@ class TestPreemption:
         assert eng.last_stats["preemptions"] == 0
         assert eng.last_stats["block_waits"] > 0
 
-    def test_lowest_progress_victim_is_chosen(self, tiny_lm):
+    @pytest.mark.parametrize("sanitize", [False, True])
+    def test_lowest_progress_victim_is_chosen(self, tiny_lm, sanitize):
         """Among lower-priority live streams, the one with the fewest
-        emitted tokens is snapshotted first."""
+        emitted tokens is snapshotted first.  Sanitized: preemption's
+        snapshot/release/restore cycle must keep the shadow refcount
+        ledger exact."""
         model, params = tiny_lm
-        eng = _engine(model, params, slots=2, num_blocks=8)
+        eng = _engine(model, params, slots=2, num_blocks=8,
+                      sanitize=sanitize)
         ahead = eng.submit(_prompt(10), SamplingParams(max_new_tokens=12),
                            priority=5)
         _pump_until(eng, lambda: len(ahead.out_tokens) >= 4)
@@ -417,13 +433,14 @@ class TestPreemption:
         assert ahead.preemptions == 0
         assert eng.last_stats["preemptions"] >= 1
 
-    def test_preempt_mid_prefill_victim_restores(self, tiny_lm):
+    @pytest.mark.parametrize("sanitize", [False, True])
+    def test_preempt_mid_prefill_victim_restores(self, tiny_lm, sanitize):
         """A victim still prefilling its prompt (progress 0) can be
         preempted and restored; its stream stays exact."""
         model, params = tiny_lm
         ref = _engine(model, params, slots=1).submit(
             _prompt(40), SamplingParams(max_new_tokens=6)).result()
-        eng = _engine(model, params, slots=1)
+        eng = _engine(model, params, slots=1, sanitize=sanitize)
         vic = eng.submit(_prompt(40), SamplingParams(max_new_tokens=6),
                          priority=5)
         eng.step()
